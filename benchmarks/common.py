@@ -1,0 +1,75 @@
+"""Shared benchmark helpers: timers, trainers, CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows (harness
+contract) plus a human-readable table.  Model scale is CPU-reduced but the
+MEASURED quantities are the paper's: optimizer-state bytes, loss
+trajectories, accuracy on a held-out synthetic task.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, TokenPipeline
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_fn(fn: Callable, *args, iters=3, warmup=1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.monotonic()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.monotonic() - t0) / iters * 1e6
+
+
+def small_llama(name="llama-bench", layers=4, d=128, vocab=512) -> ModelConfig:
+    return ModelConfig(name=name, family="dense", num_layers=layers,
+                       d_model=d, num_heads=4, num_kv_heads=4, d_ff=4 * d,
+                       vocab_size=vocab, remat=False, dtype="float32")
+
+
+def pipeline_for(cfg: ModelConfig, batch=8, seq=64, seed=0):
+    return TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                                    global_batch=batch, seed=seed))
+
+
+def run_trainer(trainer, pipe, steps: int, eval_every=0) -> Dict:
+    losses, t0 = [], time.monotonic()
+    for step in range(steps):
+        m = trainer.train_step(pipe.batch(step))
+        losses.append(m["loss"])
+    wall = time.monotonic() - t0
+    return {"losses": losses, "wall_s": wall,
+            "memory": trainer.memory_report()}
+
+
+def eval_loss(trainer, pipe, steps=4, start=10_000) -> float:
+    """Held-out loss: batches the trainer never saw (different step ids)."""
+    import repro.models.model as m
+    params = (trainer.merged_params()
+              if hasattr(trainer, "merged_params") else trainer.params)
+    tot = 0.0
+    for i in range(steps):
+        l, _ = jax.jit(lambda p, b: m.loss_fn(p, trainer.cfg, b,
+                                              attn_impl="full"))(
+            params, pipe.batch(start + i))
+        tot += float(l)
+    return tot / steps
+
+
+def gb(x) -> float:
+    return x / 2 ** 30

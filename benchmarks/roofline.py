@@ -1,0 +1,164 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+For every (arch x shape x mesh) cell the dry-run recorded *loop-aware*
+per-device HLO totals (src/repro/launch/hlo_cost.py — xla's cost_analysis
+counts while bodies once; ours multiplies by known_trip_count).  This
+module converts them into the three roofline terms on TPU v5e constants:
+
+    compute    = hlo_flops_per_device / 197e12 (bf16 peak)
+    memory     = hlo_hbm_bytes_per_device / 819e9
+    collective = hlo_collective_bytes_per_device / 50e9 (ICI per chip)
+
+plus the useful-work yardsticks:
+
+    MODEL_FLOPS  = 6 * N_eff * D   (train; N_eff = active params for MoE)
+                 = 2 * N_eff * D   (prefill / decode)
+    ratio        = MODEL_FLOPS/chips / hlo_flops   ("useful" fraction —
+                   catches remat, BCD backward savings, dispatch waste)
+    roofline fraction = (MODEL_FLOPS/chips / peak) / dominant_term
+
+Usage:  PYTHONPATH=src python -m benchmarks.roofline [--mesh single]
+Writes results/roofline_<mesh>.md and prints the table.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import base as config_base
+from repro.configs.shapes import SHAPES
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+CHIPS = {"single": 256, "multi": 512}
+
+
+def n_eff(cfg) -> float:
+    """Active parameters per token (MoE-aware)."""
+    n = cfg.param_count()
+    if cfg.num_experts:
+        per_expert = 3 * cfg.d_model * cfg.moe_d_ff
+        inactive = (cfg.num_experts - cfg.num_experts_per_tok) * per_expert
+        n -= cfg.num_layers * inactive
+    return float(n)
+
+
+def model_flops(cfg, shape) -> float:
+    D = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_eff(cfg) * D
+
+
+def _suggest(dom, rec, cfg, shape) -> str:
+    coll = rec["loop_aware"]["collective_bytes"]
+    big = max(coll, key=lambda k: coll[k]) if coll else "none"
+    if dom == "collective":
+        return (f"dominant {big}: trim with coarser sharding constraints / "
+                "overlapped (async) collectives / BCD-active-only grad "
+                "reduction")
+    if dom == "memory":
+        return ("HBM-bound: fuse optimizer update (masked_adam kernel), "
+                "raise arithmetic intensity with bigger per-device batch")
+    return ("compute-bound: good; push MXU utilization via flash-attention "
+            "kernel + remove remat waste")
+
+
+def analyze(mesh_kind: str, results_dir="results"):
+    path = Path(results_dir) / f"dryrun_{mesh_kind}.json"
+    data = json.loads(path.read_text())
+    chips = CHIPS[mesh_kind]
+    rows = []
+    for key, rec in sorted(data.items()):
+        arch, shape_name = key.split("|")
+        if rec["status"] == "skipped":
+            rows.append({"arch": arch, "shape": shape_name,
+                         "status": "skipped",
+                         "note": rec["reason"][:60]})
+            continue
+        if rec["status"] != "ok" or "loop_aware" not in rec:
+            rows.append({"arch": arch, "shape": shape_name,
+                         "status": rec["status"], "note": ""})
+            continue
+        cfg = config_base.get_config(arch)
+        shape = SHAPES[shape_name]
+        la = rec["loop_aware"]
+        t_c = la["flops"] / PEAK_FLOPS_BF16
+        t_m = la["hbm_bytes"] / HBM_BW
+        t_x = la["total_collective_bytes"] / ICI_BW
+        dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+                  key=lambda kv: kv[1])[0]
+        mf = model_flops(cfg, shape)
+        mf_dev = mf / chips
+        ratio = mf_dev / la["flops"] if la["flops"] else 0.0
+        frac = (mf_dev / PEAK_FLOPS_BF16) / max(t_c, t_m, t_x) \
+            if max(t_c, t_m, t_x) else 0.0
+        rows.append({
+            "arch": arch, "shape": shape_name, "status": "ok",
+            "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_x,
+            "dominant": dom, "model_flops": mf, "hlo_flops_dev": la["flops"],
+            "useful_ratio": ratio, "roofline_frac": frac,
+            "peak_gib": rec["memory"]["temp_bytes"] / 2 ** 30
+            + rec["memory"]["argument_bytes"] / 2 ** 30,
+            "note": _suggest(dom, rec, cfg, shape),
+        })
+    return rows
+
+
+def to_markdown(rows, mesh_kind):
+    out = [f"### Roofline — {mesh_kind}-pod mesh "
+           f"({CHIPS[mesh_kind]} chips, v5e: 197 TF/s bf16, 819 GB/s HBM, "
+           "50 GB/s ICI)", "",
+           "| arch | shape | compute s | memory s | collective s | "
+           "dominant | useful ratio | roofline frac | mem GiB | next lever |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"{r['status']} | — | — | — | {r.get('note','')} |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_frac']:.3f} | {r['peak_gib']:.1f} | "
+            f"{r['note'][:70]} |")
+    return "\n".join(out)
+
+
+def run(quick=False):
+    import benchmarks.common as common
+    for mesh_kind in ("single", "multi"):
+        path = Path("results") / f"dryrun_{mesh_kind}.json"
+        if not path.exists():
+            print(f"(roofline: no {path}; run repro.launch.dryrun first)")
+            continue
+        rows = analyze(mesh_kind)
+        md = to_markdown(rows, mesh_kind)
+        out = Path("results") / f"roofline_{mesh_kind}.md"
+        out.write_text(md)
+        ok = [r for r in rows if r["status"] == "ok"]
+        print(f"\n== Roofline {mesh_kind}: {len(ok)} cells ==")
+        for r in ok:
+            common.emit(f"roofline/{mesh_kind}/{r['arch']}/{r['shape']}",
+                        max(r["t_compute_s"], r["t_memory_s"],
+                            r["t_collective_s"]) * 1e6,
+                        f"dom={r['dominant']};frac={r['roofline_frac']:.3f}")
+        worst = sorted(ok, key=lambda r: r["roofline_frac"])[:3]
+        print("worst roofline fractions:",
+              [(r["arch"], r["shape"], round(r["roofline_frac"], 3))
+               for r in worst])
+        coll = sorted(ok, key=lambda r: -r["t_collective_s"])[:3]
+        print("most collective-bound:",
+              [(r["arch"], r["shape"]) for r in coll])
+        print(f"wrote {out}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both")
+    args = ap.parse_args()
+    run()
+
+
+if __name__ == "__main__":
+    main()

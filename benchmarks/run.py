@@ -1,0 +1,53 @@
+"""Benchmark harness: one module per paper table/figure + the roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows (plus human tables).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from benchmarks import (common, fig5_finetune, fig6_sparsity,
+                            fig7_ablation, roofline, table1_pretrain,
+                            table2_sparsity, table7_glue)
+    suites = {
+        "table1": table1_pretrain.run,
+        "table2": table2_sparsity.run,
+        "fig5": fig5_finetune.run,
+        "fig6": fig6_sparsity.run,
+        "fig7": fig7_ablation.run,
+        "table7": table7_glue.run,
+        "roofline": roofline.run,
+    }
+    failures = []
+    for name, fn in suites.items():
+        if args.only and args.only != name:
+            continue
+        t0 = time.monotonic()
+        try:
+            fn(quick=args.quick)
+            print(f"[{name}] done in {time.monotonic() - t0:.1f}s\n")
+        except Exception:
+            failures.append(name)
+            print(f"[{name}] FAILED:\n{traceback.format_exc()[-2000:]}")
+    print("\n=== CSV (name,us_per_call,derived) ===")
+    for row in common.ROWS:
+        print(row)
+    if failures:
+        print(f"FAILED suites: {failures}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

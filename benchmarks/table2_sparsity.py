@@ -1,0 +1,130 @@
+"""Paper Table 2 + §2 analysis: magnitude pruning sparsity/accuracy.
+
+Reproduces the paper's motivating experiment at CPU scale: pretrain on
+domain A, freeze all but the top-(1-s) parameters *by weight magnitude*,
+finetune on shifted domain B, report next-token accuracy across sparsity
+levels.  The qualitative claim under test: moderate sparsity (~0.5)
+retains most accuracy; high sparsity degrades it (paper: 78.5% at s=0.5
+vs 67.7% at s=0.7).
+
+Also reproduces Fig. 3's observation: the weights that CHANGE most during
+finetuning are not the largest-magnitude ones (reported as rank overlap).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core.blockllm import FullAdamTrainer
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models import model as model_lib
+from repro.optim.adam import Adam
+
+
+def _accuracy(params, cfg, pipe, steps=3, start=5000):
+    hits = tot = 0
+    for i in range(steps):
+        b = pipe.batch(start + i)
+        logits, _, _ = jax.jit(
+            lambda p, b: model_lib.forward(p, cfg, b, mode="train",
+                                           attn_impl="full"))(params, b)
+        pred = np.asarray(jnp.argmax(logits[:, :-1], -1))
+        gold = np.asarray(b["tokens"][:, 1:])
+        hits += (pred == gold).sum()
+        tot += gold.size
+    return hits / tot
+
+
+def _masked_adam_trainer(cfg, params, mask):
+    """Full-Adam trainer whose update is gated by a fixed magnitude mask."""
+    from repro.models import model as m
+    adam = Adam(lr=2e-3)
+
+    class T:
+        def __init__(self):
+            self.cfg = cfg
+            self.params = params
+            self.opt_state = adam.init(params)
+
+            @jax.jit
+            def stepf(p, s, batch):
+                (l, mm), g = jax.value_and_grad(
+                    lambda p, b: m.loss_fn(p, cfg, b, attn_impl="full"),
+                    has_aux=True)(p, batch)
+                p2, s2 = adam.update(g, s, p, update_mask=mask)
+                return p2, s2, l
+
+            self._stepf = stepf
+
+        def train_step(self, batch):
+            self.params, self.opt_state, l = self._stepf(
+                self.params, self.opt_state, batch)
+            return {"loss": float(l)}
+
+    return T()
+
+
+def run(quick=False):
+    print("\n== Table 2: magnitude-pruning sparsity vs finetune accuracy ==")
+    cfg = common.small_llama(layers=3, d=96, vocab=256)
+    pipeA = TokenPipeline(DataConfig(vocab_size=256, seq_len=64,
+                                     global_batch=8, seed=11))
+    pipeB = TokenPipeline(DataConfig(vocab_size=256, seq_len=64,
+                                     global_batch=8, seed=77))
+    pre_steps = 20 if quick else 50
+    ft_steps = 12 if quick else 30
+
+    base = FullAdamTrainer(cfg, model_lib.init_params(
+        jax.random.PRNGKey(0), cfg), adam=Adam(lr=2e-3))
+    for s in range(pre_steps):
+        base.train_step(pipeA.batch(s))
+    w0 = base.params
+    acc_A = _accuracy(w0, cfg, pipeA)
+    acc_B0 = _accuracy(w0, cfg, pipeB)
+    print(f"pretrained: acc(A)={acc_A:.3f} acc(B, zero-shot)={acc_B0:.3f} "
+          f"(domain shift drop, paper §2)")
+
+    rows = []
+    for s in (0.0, 0.5, 0.7, 0.9):
+        # magnitude mask: keep top-(1-s) |w| per tensor
+        def mk_mask(w):
+            if s == 0.0:
+                return jnp.ones(w.shape, jnp.float32)
+            q = jnp.quantile(jnp.abs(w.astype(jnp.float32)), s)
+            return (jnp.abs(w) >= q).astype(jnp.float32)
+
+        mask = jax.tree.map(mk_mask, w0)
+        tr = _masked_adam_trainer(cfg, w0, mask)
+        for i in range(ft_steps):
+            tr.train_step(pipeB.batch(i))
+        acc = _accuracy(tr.params, cfg, pipeB)
+        rows.append((s, acc))
+        print(f"s={s:.1f}: finetune acc(B)={acc:.3f}")
+        common.emit(f"table2/sparsity_{s}", 0.0, f"{acc:.4f}")
+
+    accs = dict(rows)
+    assert accs[0.5] > accs[0.9] - 0.02, \
+        "moderate sparsity should beat extreme sparsity"
+
+    # Fig 3 companion: are the most-changed weights the largest ones?
+    full = FullAdamTrainer(cfg, w0, adam=Adam(lr=2e-3))
+    for i in range(ft_steps):
+        full.train_step(pipeB.batch(i))
+    flat0 = jnp.concatenate([l.reshape(-1) for l in jax.tree.leaves(w0)])
+    flat1 = jnp.concatenate([l.reshape(-1)
+                             for l in jax.tree.leaves(full.params)])
+    delta = np.abs(np.asarray(flat1 - flat0))
+    mag = np.abs(np.asarray(flat0))
+    k = len(delta) // 20
+    top_changed = set(np.argpartition(-delta, k)[:k].tolist())
+    top_mag = set(np.argpartition(-mag, k)[:k].tolist())
+    overlap = len(top_changed & top_mag) / k
+    print(f"fig3: overlap(top-5% changed, top-5% magnitude) = "
+          f"{overlap:.3f} (low => magnitude is a poor importance proxy)")
+    common.emit("fig3/overlap_top5pct", 0.0, f"{overlap:.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,94 @@
+"""Paper Tables 7/8: GLUE-style multi-task memory + score comparison.
+
+CPU stand-in for the RoBERTa/GLUE suite: several synthetic "tasks"
+(disjoint data themes = different pipeline seeds) fine-tuned from one
+pretrained checkpoint with BlockLLM (s=0.95, m=T/4 — the paper's GLUE
+hyperparameters), GaLore(r=8) and full finetuning.  Reported per task:
+next-token accuracy (the score proxy) and train-state memory; the paper's
+claims under test: BlockLLM matches FFT score at ~13% less memory than
+GaLore.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.baselines.galore import GaLore, GaLoreTrainer
+from repro.core.blockllm import (BlockLLMConfig, BlockLLMTrainer,
+                                 FullAdamTrainer)
+from repro.core.selection import SelectorConfig
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models import model as model_lib
+from repro.optim.adam import Adam
+
+
+def _acc(trainer, cfg, pipe):
+    import jax.numpy as jnp
+    params = (trainer.merged_params()
+              if hasattr(trainer, "merged_params") else trainer.params)
+    hits = tot = 0
+    for i in range(3):
+        b = pipe.batch(9000 + i)
+        logits, _, _ = jax.jit(lambda p, b: model_lib.forward(
+            p, cfg, b, mode="train", attn_impl="full"))(params, b)
+        pred = np.asarray(jnp.argmax(logits[:, :-1], -1))
+        gold = np.asarray(b["tokens"][:, 1:])
+        hits += (pred == gold).sum()
+        tot += gold.size
+    return hits / tot
+
+
+def run(quick=False):
+    print("\n== Tables 7/8: multi-task finetune (GLUE stand-in) ==")
+    cfg = common.small_llama(layers=4, d=96, vocab=256)
+    pre = TokenPipeline(DataConfig(vocab_size=256, seq_len=64,
+                                   global_batch=8, seed=1))
+    w0_tr = FullAdamTrainer(cfg, model_lib.init_params(
+        jax.random.PRNGKey(0), cfg), adam=Adam(lr=2e-3))
+    for s in range(10 if quick else 30):
+        w0_tr.train_step(pre.batch(s))
+    w0 = w0_tr.params
+    tasks = [101, 202] if quick else [101, 202, 303]
+    steps = 10 if quick else 25
+
+    def clone():
+        return jax.tree.map(lambda a: a.copy(), w0)
+
+    scores = {m: [] for m in ("blockllm", "galore", "fft")}
+    mems = {}
+    for seed in tasks:
+        pipe = TokenPipeline(DataConfig(vocab_size=256, seq_len=64,
+                                        global_batch=8, seed=seed))
+        for meth, mk in {
+            "blockllm": lambda: BlockLLMTrainer(
+                cfg, clone(), adam=Adam(lr=1e-3),
+                bcfg=BlockLLMConfig(selector=SelectorConfig(
+                    sparsity=0.95, patience=max(1, steps // 4),
+                    policy="static", static_k_frac=0.25,
+                    selectable_leaves=(),
+                    always_active_leaves=("final_norm",)))),
+            "galore": lambda: GaLoreTrainer(
+                cfg, clone(), galore=GaLore(rank=8, lr=1e-3,
+                                            update_proj_gap=10)),
+            "fft": lambda: FullAdamTrainer(cfg, clone(),
+                                           adam=Adam(lr=1e-3)),
+        }.items():
+            tr = mk()
+            for i in range(steps):
+                tr.train_step(pipe.batch(i))
+            a = _acc(tr, cfg, pipe)
+            scores[meth].append(a)
+            mems[meth] = tr.memory_report()["total_train_state"]
+    print(f"{'method':<10}{'avg score':>10}{'state MiB':>11}")
+    for meth in scores:
+        avg = float(np.mean(scores[meth]))
+        print(f"{meth:<10}{avg:>10.4f}{mems[meth] / 2**20:>11.2f}")
+        common.emit(f"table7/{meth}", 0.0,
+                    f"score={avg:.4f};bytes={mems[meth]}")
+    assert mems["blockllm"] < mems["galore"] < mems["fft"] * 1.5
+    assert np.mean(scores["blockllm"]) > np.mean(scores["fft"]) - 0.1
+
+
+if __name__ == "__main__":
+    run()

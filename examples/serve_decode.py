@@ -1,0 +1,48 @@
+"""Serving example: batched greedy decode with slot swapping.
+
+Loads (or trains briefly) a small model, then serves a queue of requests
+through the continuous-batching decode server — finished sequences swap
+out mid-flight while others keep generating.
+
+    PYTHONPATH=src python examples/serve_decode.py [--arch gemma3-1b]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import base as config_base
+from repro.launch.train import reduce_config
+from repro.models import model
+from repro.runtime.serve_loop import DecodeServer, Request
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="gemma3-1b",
+                help="any assigned LM arch (reduced for CPU)")
+ap.add_argument("--requests", type=int, default=6)
+ap.add_argument("--new-tokens", type=int, default=12)
+args = ap.parse_args()
+
+cfg = reduce_config(config_base.get_config(args.arch), 8)
+print(f"serving {args.arch} (reduced: {cfg.param_count() / 1e6:.1f}M params,"
+      f" blocks={cfg.pattern})")
+params = model.init_params(jax.random.PRNGKey(0), cfg)
+
+srv = DecodeServer(cfg, params, batch_slots=3, max_seq=96)
+rng = np.random.default_rng(0)
+reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 3 + i % 5),
+                max_new_tokens=args.new_tokens)
+        for i in range(args.requests)]
+for r in reqs:
+    srv.submit(r)
+
+t0 = time.monotonic()
+srv.run_until_drained()
+dt = time.monotonic() - t0
+total = sum(len(r.out) for r in reqs)
+print(f"\nserved {len(reqs)} requests / {total} tokens in {dt:.2f}s "
+      f"({total / dt:.1f} tok/s, {srv.steps} batched decode steps)")
+for r in reqs:
+    print(f"  req {r.rid} (prompt {len(r.prompt)} toks) -> {r.out}")
+assert all(r.done for r in reqs)

@@ -1,0 +1,180 @@
+"""GaLore baseline (Zhao et al., 2024, arXiv:2403.03507).
+
+Gradient Low-Rank Projection: for every qualifying 2-D weight, the gradient
+is projected onto a rank-r subspace (from an SVD of the gradient, refreshed
+every ``update_proj_gap`` steps); Adam moments live in the r-dim projected
+space, and the update is lifted back with scale alpha.
+
+Qualifying leaves: trailing-2D with both dims >= ``min_dim`` (the paper's
+"reversible" layers — attention and MLP matrices).  Stacked layer weights
+``[G, m, n]`` are handled by vmapping the projection over G.  Embeddings,
+norms and biases stay on full Adam (as in the reference implementation).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+from repro.optim.adam import Adam, AdamState
+
+Pytree = Any
+
+
+class GaLoreState(NamedTuple):
+    count: jnp.ndarray
+    proj: Pytree      # P per projected leaf (None leaf => full adam)
+    mu: Pytree        # moments: projected shape for projected leaves
+    nu: Pytree
+
+
+@dataclass(frozen=True)
+class GaLore:
+    rank: int = 8
+    update_proj_gap: int = 200
+    scale: float = 0.25     # alpha
+    lr: Any = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    min_dim: int = 32
+
+    def _qualifies(self, leaf) -> bool:
+        return (leaf.ndim >= 2 and leaf.shape[-1] >= self.min_dim
+                and leaf.shape[-2] >= self.min_dim)
+
+    def _proj_shapes(self, leaf):
+        """Project the smaller of the two trailing dims."""
+        m, n = leaf.shape[-2], leaf.shape[-1]
+        side = "left" if m <= n else "right"
+        r = min(self.rank, m, n)
+        batch = leaf.shape[:-2]
+        p_shape = batch + ((m, r) if side == "left" else (n, r))
+        mom_shape = batch + ((r, n) if side == "left" else (m, r))
+        return side, r, p_shape, mom_shape
+
+    def init(self, params: Pytree) -> GaLoreState:
+        def pinit(leaf):
+            if not self._qualifies(leaf):
+                return None
+            _, _, p_shape, _ = self._proj_shapes(leaf)
+            return jnp.zeros(p_shape, jnp.float32)
+
+        def minit(leaf):
+            if not self._qualifies(leaf):
+                return jnp.zeros(leaf.shape, jnp.float32)
+            _, _, _, mom_shape = self._proj_shapes(leaf)
+            return jnp.zeros(mom_shape, jnp.float32)
+
+        is_none = lambda x: x is None
+        proj = jax.tree.map(pinit, params)
+        mu = jax.tree.map(minit, params)
+        nu = jax.tree.map(minit, params)
+        return GaLoreState(jnp.zeros((), jnp.int32), proj, mu, nu)
+
+    def _svd_proj(self, g, side, r):
+        """Top-r singular subspace of g (possibly batched over leading dims)."""
+        gf = g.astype(jnp.float32)
+
+        def one(gm):
+            u, s, vt = jnp.linalg.svd(gm, full_matrices=False)
+            return u[:, :r] if side == "left" else vt[:r, :].T
+
+        for _ in range(g.ndim - 2):
+            one = jax.vmap(one)
+        return one(gf)
+
+    def update(self, grads: Pytree, state: GaLoreState, params: Pytree):
+        count = state.count + 1
+        cf = count.astype(jnp.float32)
+        bc1 = 1.0 - self.b1 ** cf
+        bc2 = 1.0 - self.b2 ** cf
+        lr = self.lr(state.count) if callable(self.lr) else self.lr
+        refresh = (state.count % self.update_proj_gap) == 0
+
+        def one(p, g, P, m, v):
+            gf = g.astype(jnp.float32)
+            if P is None:  # full adam for non-projected leaves
+                m2 = self.b1 * m + (1 - self.b1) * gf
+                v2 = self.b2 * v + (1 - self.b2) * gf * gf
+                upd = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + self.eps)
+                return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), \
+                    None, m2, v2
+            side, r, _, _ = self._proj_shapes(p)
+            P_new = jax.lax.cond(
+                refresh, lambda: self._svd_proj(gf, side, r), lambda: P)
+            if side == "left":
+                rg = jnp.einsum("...mr,...mn->...rn", P_new, gf)
+            else:
+                rg = jnp.einsum("...mn,...nr->...mr", gf, P_new)
+            m2 = self.b1 * m + (1 - self.b1) * rg
+            v2 = self.b2 * v + (1 - self.b2) * rg * rg
+            upd_r = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + self.eps)
+            if side == "left":
+                upd = jnp.einsum("...mr,...rn->...mn", P_new, upd_r)
+            else:
+                upd = jnp.einsum("...mr,...nr->...mn", upd_r, P_new)
+            upd = self.scale * upd
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), \
+                P_new, m2, v2
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_P = treedef.flatten_up_to(state.proj)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        out = [one(*args) for args in
+               zip(flat_p, flat_g, flat_P, flat_m, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        proj = treedef.unflatten([o[1] for o in out])
+        mu = treedef.unflatten([o[2] for o in out])
+        nu = treedef.unflatten([o[3] for o in out])
+        return new_p, GaLoreState(count, proj, mu, nu)
+
+    def state_bytes(self, state: GaLoreState) -> int:
+        return sum(a.size * a.dtype.itemsize for a in
+                   jax.tree.leaves((state.proj, state.mu, state.nu)))
+
+
+class GaLoreTrainer:
+    def __init__(self, cfg, params, *, galore=None, loss_fn=None,
+                 attn_impl="full"):
+        self.cfg = cfg
+        self.galore = galore or GaLore()
+        self.params = params
+        self.state = self.galore.init(params)
+        self.step = 0
+        self.loss_history: list = []
+        loss = loss_fn or (lambda p, b: model_lib.loss_fn(
+            p, cfg, b, attn_impl=attn_impl))
+        gl = self.galore
+
+        @jax.jit
+        def stepf(params, state, batch):
+            (l, metrics), g = jax.value_and_grad(
+                loss, has_aux=True)(params, batch)
+            new_p, new_s = gl.update(g, state, params)
+            return new_p, new_s, l, metrics
+
+        self._stepf = stepf
+
+    def train_step(self, batch):
+        self.params, self.state, l, _ = self._stepf(
+            self.params, self.state, batch)
+        self.step += 1
+        self.loss_history.append(float(l))
+        return {"loss": float(l), "step": self.step}
+
+    def memory_report(self):
+        nb = lambda t: sum(l.size * l.dtype.itemsize
+                           for l in jax.tree.leaves(t))
+        return {"params_bytes": nb(self.params),
+                "grads_bytes": nb(self.params),
+                "opt_state_bytes": self.galore.state_bytes(self.state),
+                "mask_bytes": 0, "probe_bytes": 0,
+                "total_train_state": nb(self.params)
+                + self.galore.state_bytes(self.state)}

@@ -1,0 +1,115 @@
+"""LoRA baseline (Hu et al., 2021).
+
+W_eff = W + (alpha / r) * A @ B for every targeted 2-D weight; the base
+model is frozen, only (A, B) train (full Adam on the factors).  Stacked
+layer weights ``[G, m, n]`` get stacked factors ``A [G, m, r], B [G, r, n]``
+(a vmapped LoRA).  Targets: attention + MLP projection matrices inside the
+block stacks (the standard recipe); embeddings/norms stay frozen.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+from repro.optim.adam import Adam
+
+Pytree = Any
+
+TARGET_KEYS = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+               "in_x", "in_y", "out", "gate_a", "gate_x")
+
+
+def _is_target(path, leaf) -> bool:
+    keys = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+    if "stages" not in [k for k in keys if isinstance(k, str)]:
+        return False
+    last = keys[-1]
+    return (isinstance(last, str) and last in TARGET_KEYS
+            and leaf.ndim >= 2 and leaf.shape[-1] >= 8 and leaf.shape[-2] >= 8)
+
+
+def lora_init(key, params: Pytree, rank: int = 8) -> Pytree:
+    """Factor tree with the same structure; None for untargeted leaves."""
+    def init(path, leaf):
+        if not _is_target(path, leaf):
+            return None
+        k = jax.random.fold_in(key, hash(str(path)) % (2 ** 31))
+        m, n = leaf.shape[-2], leaf.shape[-1]
+        batch = leaf.shape[:-2]
+        a = jax.random.normal(k, batch + (m, rank), jnp.float32) \
+            * (1.0 / math.sqrt(m))
+        b = jnp.zeros(batch + (rank, n), jnp.float32)
+        return {"A": a, "B": b}
+
+    return jax.tree_util.tree_map_with_path(init, params)
+
+
+def lora_merge(params: Pytree, factors: Pytree, *, alpha: float,
+               rank: int) -> Pytree:
+    """Effective weights: W + (alpha/r) A@B; gradients flow to factors only."""
+    scale = alpha / rank
+
+    def merge(p, f):
+        if f is None:
+            return jax.lax.stop_gradient(p)
+        delta = jnp.einsum("...mr,...rn->...mn", f["A"], f["B"]) * scale
+        return jax.lax.stop_gradient(p) + delta.astype(p.dtype)
+
+    return jax.tree.map(merge, params, factors,
+                        is_leaf=lambda x: x is None or (
+                            isinstance(x, dict) and "A" in x))
+
+
+class LoRATrainer:
+    def __init__(self, cfg, params, *, rank=8, alpha=None, adam=None,
+                 loss_fn=None, attn_impl="full", key=None):
+        self.cfg = cfg
+        self.rank = rank
+        self.alpha = alpha if alpha is not None else 4 * rank  # paper Table 9
+        self.params = params
+        self.factors = lora_init(key or jax.random.PRNGKey(0), params, rank)
+        self.adam = adam or Adam(lr=1e-3)
+        self.opt_state = self.adam.init(self.factors)
+        self.step = 0
+        self.loss_history: list = []
+        loss = loss_fn or (lambda p, b: model_lib.loss_fn(
+            p, cfg, b, attn_impl=attn_impl))
+        rank_, alpha_, adam_ = self.rank, self.alpha, self.adam
+
+        @jax.jit
+        def stepf(params, factors, opt_state, batch):
+            def lossf(f):
+                merged = lora_merge(params, f, alpha=alpha_, rank=rank_)
+                return loss(merged, batch)
+
+            (l, metrics), g = jax.value_and_grad(
+                lossf, has_aux=True)(factors)
+            new_f, new_s = adam_.update(g, opt_state, factors)
+            return new_f, new_s, l, metrics
+
+        self._stepf = stepf
+
+    def train_step(self, batch):
+        self.factors, self.opt_state, l, _ = self._stepf(
+            self.params, self.factors, self.opt_state, batch)
+        self.step += 1
+        self.loss_history.append(float(l))
+        return {"loss": float(l), "step": self.step}
+
+    def merged_params(self):
+        return lora_merge(self.params, self.factors, alpha=self.alpha,
+                          rank=self.rank)
+
+    def memory_report(self):
+        nb = lambda t: sum(l.size * l.dtype.itemsize
+                           for l in jax.tree.leaves(t))
+        return {"params_bytes": nb(self.params) + nb(self.factors),
+                "grads_bytes": nb(self.factors),
+                "opt_state_bytes": self.adam.state_bytes(self.opt_state),
+                "mask_bytes": 0, "probe_bytes": 0,
+                "total_train_state": nb(self.factors)
+                + self.adam.state_bytes(self.opt_state)}

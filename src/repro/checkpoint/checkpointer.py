@@ -1,0 +1,126 @@
+"""Atomic, mesh-agnostic checkpointing with auto-resume.
+
+Format: one directory per step —
+    step_000123/
+      manifest.json      (pytree structure + leaf shapes/dtypes + meta)
+      arrays.npz         (flat leaf arrays, host numpy)
+      DONE               (commit marker: written last => atomicity)
+
+Fault-tolerance contract:
+- writes go to ``step_N.tmp`` then ``os.rename`` (atomic on POSIX); the
+  DONE marker is written after the data => a crash mid-write can never
+  produce a checkpoint that ``latest_step`` would pick up.
+- ``restore`` device_puts each leaf with the *target* sharding, so a
+  checkpoint written on one mesh restores onto any other (elastic
+  rescale) — leaves are saved as full (unsharded) host arrays.
+- BlockLLM host state (norm dict, visit counts, plan indices, loss
+  history) rides in the manifest's ``meta`` — a restart resumes selection
+  exactly.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                      for p in path) for path, _ in flat]
+    return names, [l for _, l in flat], treedef
+
+
+def save(ckpt_dir, step: int, tree: Pytree, *, meta: Optional[dict] = None,
+         keep: int = 3):
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    names, leaves, treedef = _flatten_with_names(tree)
+    arrays = {}
+    manifest = {"step": step, "meta": meta or {}, "leaves": []}
+    for i, (name, leaf) in enumerate(zip(names, leaves)):
+        arr = np.asarray(jax.device_get(leaf))
+        key = f"a{i}"
+        stored_as = str(arr.dtype)
+        if arr.dtype not in (np.float64, np.float32, np.float16, np.int64,
+                             np.int32, np.int16, np.int8, np.uint8,
+                             np.uint16, np.uint32, np.uint64, np.bool_):
+            # ml_dtypes (bfloat16, fp8): store the raw bits as uintN
+            stored_as = f"uint{arr.dtype.itemsize * 8}"
+            arr = arr.view(stored_as)
+        arrays[key] = arr
+        manifest["leaves"].append(
+            {"name": name, "key": key, "dtype": str(leaf.dtype),
+             "stored_as": stored_as, "shape": list(arr.shape)})
+    np.savez(tmp / "arrays.npz", **arrays)
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    (tmp / "DONE").write_text("ok")
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: Path, keep: int):
+    steps = sorted(p for p in ckpt_dir.glob("step_*") if
+                   (p / "DONE").exists())
+    for p in steps[:-keep]:
+        shutil.rmtree(p)
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in ckpt_dir.glob("step_*")
+             if (p / "DONE").exists() and not p.name.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir, step: int, like: Pytree, *,
+            shardings: Optional[Pytree] = None):
+    """Restore into the structure of ``like``; placement per ``shardings``
+    (a pytree of jax.sharding.Sharding) or default device placement."""
+    path = Path(ckpt_dir) / f"step_{step:08d}"
+    manifest = json.loads((path / "manifest.json").read_text())
+    arrays = np.load(path / "arrays.npz")
+    flat_like, treedef = jax.tree.flatten(like)
+    entries = manifest["leaves"]
+    assert len(entries) == len(flat_like), \
+        f"checkpoint has {len(entries)} leaves, expected {len(flat_like)}"
+    shard_flat = (treedef.flatten_up_to(shardings)
+                  if shardings is not None else [None] * len(flat_like))
+    out = []
+    for e, proto, sh in zip(entries, flat_like, shard_flat):
+        arr = arrays[e["key"]]
+        if e.get("stored_as") and e["stored_as"] != e["dtype"]:
+            import ml_dtypes  # bit-exact round trip for bf16/fp8
+            arr = arr.view(np.dtype(e["dtype"]))
+        assert list(arr.shape) == list(proto.shape), \
+            f"{e['name']}: {arr.shape} vs {proto.shape}"
+        arr = arr.astype(proto.dtype)
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jnp.asarray(arr))
+    return treedef.unflatten(out), manifest["meta"]
+
+
+def restore_latest(ckpt_dir, like: Pytree, *, shardings=None):
+    step = latest_step(ckpt_dir)
+    if step is None:
+        return None, None, None
+    tree, meta = restore(ckpt_dir, step, like, shardings=shardings)
+    return step, tree, meta

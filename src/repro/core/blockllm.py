@@ -1,0 +1,405 @@
+"""BlockLLM trainer (paper Algorithm 1).
+
+Orchestrates: block selection (Algorithm 2, ``core.selection``), the
+masked-Adam update over the *active* parameter subset, rotating gradient
+probes that maintain the layer-norm dictionary, and the loss-patience
+re-selection trigger.
+
+Memory model (the paper's contribution): gradients, Adam moments and masks
+exist ONLY for the active subset.  The jitted step differentiates w.r.t.
+the gathered active rows; frozen parameters sit behind stop_gradient so XLA
+prunes their whole backward slice.
+
+Compilation model: the *structure* of a plan (per-stack K, active leaf
+set, probe counts) is static; index *values* are traced.  With the
+``static`` selection policy the structure never changes => zero recompiles
+across re-selections (TPU-native mode).  The ``greedy`` paper-faithful
+policy may change K per stack => recompile, amortized over ``patience``
+steps (the paper's PyTorch reference rebuilds the optimizer at the same
+points).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import selection as sel_lib
+from repro.core import units as units_lib
+from repro.core.selection import NormTracker, SelectorConfig, VisitTracker
+from repro.core.units import Plan, PlanStructure, UnitIndex
+from repro.models import model as model_lib
+from repro.optim.adam import Adam, AdamState
+
+Pytree = Any
+
+
+@dataclass
+class BlockLLMConfig:
+    selector: SelectorConfig = field(default_factory=SelectorConfig)
+    mask_refresh: str = "select"   # select | never  (paper: at selection)
+    quantile_sample: int = 65536   # subsample size for large-tensor quantiles
+    carry_surviving: bool = False  # keep Adam state of re-selected survivors
+    fused_update: str = "off"      # off | pallas | interpret — use the
+    #                                kernels/masked_adam fused optimizer
+    #                                (pallas on TPU; interpret for CPU tests)
+
+
+def _masked_quantile_threshold(u, q_keep, sample):
+    """Per-row threshold tau s.t. |u| >= tau keeps ~q_keep fraction.
+
+    u: [K, ...] (stacked) or [...] (leaf).  Exact quantile for small
+    tensors; random-offset strided subsample for large ones (documented
+    estimator; the Pallas kernel uses the same).
+    """
+    flat = u.reshape((u.shape[0], -1)) if u.ndim > 1 else u.reshape(1, -1)
+    n = flat.shape[1]
+    if n > sample:
+        stride = n // sample
+        flat = flat[:, ::stride][:, :sample]
+    a = jnp.abs(flat.astype(jnp.float32))
+    return jnp.quantile(a, jnp.clip(1.0 - q_keep, 0.0, 1.0), axis=1)
+
+
+def build_step_fn(cfg, index: UnitIndex, adam: Adam, bcfg: BlockLLMConfig,
+                  structure: PlanStructure, *, refresh: bool,
+                  with_masks: bool, loss_fn: Callable):
+    """The raw (un-jitted) BlockLLM train step.
+
+    Shared between the single-host ``BlockLLMTrainer`` (plain jit) and the
+    distributed launcher (pjit with explicit shardings — launch/steps.py).
+
+    Signature of the returned fn:
+        step(params, sel, probe, stack_idx, probe_idx, opt_state, masks,
+             batch, q) -> (new_sel, new_opt, new_masks, loss, metrics,
+                           norm_out)
+    """
+
+    import inspect
+    supports_overlay = "overlay" in inspect.signature(loss_fn).parameters
+
+    def step(params, sel, probe, stack_idx, probe_idx, opt_state, masks,
+             batch, q):
+        plan = Plan(structure, stack_idx, probe_idx)
+
+        def lossf(sel_, probe_):
+            if not supports_overlay:  # custom loss: explicit scatter merge
+                merged = units_lib.merge_active(
+                    params, index, plan, {"sel": sel_, "probe": probe_})
+                return loss_fn(merged, batch)
+            # stacked rows merge LAZILY per scan step (overlay): the active
+            # cotangent accumulates at [K, ...] and the DP grad reduction
+            # scales with the active fraction (§Perf I10).  Whole-leaf
+            # units (embed/head/...) still swap in directly.
+            overlay = {}
+            for sid, k in structure.k_per_stack:
+                if k:
+                    overlay[sid] = {"idx": stack_idx[sid],
+                                    "rows": sel_["stacks"][sid],
+                                    "pidx": None, "probe": None}
+            for sid, p_ in structure.probe_per_stack:
+                if p_:
+                    ov = overlay.setdefault(
+                        sid, {"idx": None, "rows": None})
+                    ov["pidx"] = probe_idx[sid]
+                    ov["probe"] = probe_[sid]
+            merged = dict(jax.tree.map(jax.lax.stop_gradient, params))
+            for name, sub in sel_["leaves"].items():
+                merged[name] = sub
+            return loss_fn(merged, batch, overlay=overlay)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            lossf, argnums=(0, 1), has_aux=True)(sel, probe)
+        g_sel, g_probe = grads
+
+        # per-unit gradient norms -> host norm dictionary
+        norm_out = {"stacks": {}, "leaves": {}, "probe": {}}
+        for sid, rows in g_sel["stacks"].items():
+            norm_out["stacks"][sid] = units_lib.per_row_sq_norms(rows)
+        for name, sub in g_sel["leaves"].items():
+            norm_out["leaves"][name] = units_lib.subtree_sq_norm(sub)
+        for sid, rows in g_probe.items():
+            norm_out["probe"][sid] = units_lib.per_row_sq_norms(rows)
+
+        if refresh:
+            upds, _ = adam.processed_grad(g_sel, opt_state)
+
+            def stack_mask(u):  # per-row (=per-layer) tau — paper's mask
+                tau = _masked_quantile_threshold(u, q, bcfg.quantile_sample)
+                return jnp.abs(u) >= tau.reshape(
+                    (-1,) + (1,) * (u.ndim - 1))
+
+            def leaf_mask(u):  # whole-leaf unit: one tau per tensor
+                tau = _masked_quantile_threshold(
+                    u.reshape(1, -1), q, bcfg.quantile_sample)[0]
+                return jnp.abs(u) >= tau
+
+            new_masks = {
+                "stacks": jax.tree.map(stack_mask, upds["stacks"]),
+                "leaves": jax.tree.map(leaf_mask, upds["leaves"]),
+            }
+        else:
+            new_masks = masks
+
+        if bcfg.fused_update != "off" and not refresh:
+            # fused masked-Adam Pallas kernel: one VMEM pass per tile
+            # (5 reads + 3 writes vs ~12 HBM round-trips unfused)
+            from repro.kernels import ops as kernel_ops
+            lr = adam.lr(opt_state.count) if callable(adam.lr) else adam.lr
+            new_sel, mu2, nu2 = kernel_ops.masked_adam_tree(
+                sel, g_sel, opt_state.mu, opt_state.nu,
+                new_masks if (with_masks or refresh) else None,
+                lr=lr, b1=adam.b1, b2=adam.b2, eps=adam.eps,
+                weight_decay=adam.weight_decay, count=opt_state.count,
+                interpret=(bcfg.fused_update == "interpret"))
+            new_opt = AdamState(opt_state.count + 1, mu2, nu2)
+        else:
+            new_sel, new_opt = adam.update(
+                g_sel, opt_state, sel,
+                update_mask=new_masks if with_masks or refresh else None)
+        return new_sel, new_opt, new_masks, loss, metrics, norm_out
+
+    return step
+
+
+class BlockLLMTrainer:
+    """Drives BlockLLM training for a model from ``repro.models.model``."""
+
+    def __init__(self, cfg, params, *, bcfg: Optional[BlockLLMConfig] = None,
+                 adam: Optional[Adam] = None,
+                 loss_fn: Optional[Callable] = None,
+                 attn_impl: str = "full"):
+        self.cfg = cfg
+        self.bcfg = bcfg or BlockLLMConfig()
+        self.adam = adam or Adam(lr=1e-3)
+        self.params = params
+        self.index = units_lib.build_unit_index(cfg, params)
+        self.norms = NormTracker()
+        self.visits = VisitTracker()
+        self.loss_history: list = []
+        self.step = 0
+        self.reselections = 0
+        self.recompiles = 0
+        self._loss_fn = loss_fn or (
+            lambda p, batch, overlay=None: model_lib.loss_fn(
+                p, cfg, batch, attn_impl=attn_impl, overlay=overlay))
+        self._step_fns: Dict = {}
+        self._needs_mask_refresh = False
+        self._select(initial=True)
+
+    # ------------------------------------------------------------------ #
+    # selection plumbing
+    # ------------------------------------------------------------------ #
+
+    def _select(self, initial=False):
+        if not initial:
+            # fold trained rows back into the frozen tree
+            self.params = units_lib.write_back(
+                self.params, self.index, self.plan, self.active)
+        plan, q = sel_lib.select(self.index, self.norms, self.visits,
+                                 self.bcfg.selector,
+                                 cursor=getattr(self, "reselections", 0))
+        old_state = getattr(self, "opt_state", None)
+        old_plan = getattr(self, "plan", None)
+        self.plan, self.q = plan, q
+        self.visits.record(plan.selected_labels())
+        self.active = units_lib.extract_active(self.params, self.index, plan)
+        self.opt_state = self.adam.init(self.active["sel"])
+        if (self.bcfg.carry_surviving and old_state is not None
+                and old_plan is not None
+                and old_plan.structure == plan.structure):
+            self.opt_state = self._carry_state(old_plan, old_state)
+        use_masks = (self.bcfg.selector.mask_updates
+                     and self.bcfg.mask_refresh != "never")
+        # masks are always materialized (all-ones until the refresh step)
+        # so the train-state pytree structure is checkpoint-stable
+        self.masks = _zero_masks_like(self.active["sel"]) if use_masks \
+            else None
+        self._needs_mask_refresh = use_masks
+        self.reselections += 1
+        self.loss_history = []
+
+    def _carry_state(self, old_plan: Plan, old_state: AdamState) -> AdamState:
+        """Carry Adam moments for rows selected in both rounds."""
+        new_mu = jax.tree.map(jnp.copy, self.opt_state.mu)
+        # host-side row matching per stack
+        for sid, new_idx in self.plan.stack_idx.items():
+            old_idx = np.asarray(old_plan.stack_idx.get(
+                sid, jnp.zeros((0,), jnp.int32)))
+            new_np = np.asarray(new_idx)
+            common = [(int(np.where(old_idx == g)[0][0]), j)
+                      for j, g in enumerate(new_np) if g in old_idx]
+            if not common:
+                continue
+            src = np.asarray([c[0] for c in common])
+            dst = np.asarray([c[1] for c in common])
+
+            def carry(new, old):
+                return new.at[dst].set(old[src])
+
+            new_mu["stacks"][sid] = jax.tree.map(
+                carry, new_mu["stacks"][sid], old_state.mu["stacks"][sid])
+        return AdamState(old_state.count, new_mu, self.opt_state.nu)
+
+    # ------------------------------------------------------------------ #
+    # jitted step factory
+    # ------------------------------------------------------------------ #
+
+    def _get_step_fn(self, structure: PlanStructure, refresh: bool,
+                     with_masks: bool):
+        key = (structure, refresh, with_masks)
+        if key in self._step_fns:
+            return self._step_fns[key]
+        self.recompiles += 1
+        step = build_step_fn(self.cfg, self.index, self.adam, self.bcfg,
+                             structure, refresh=refresh,
+                             with_masks=with_masks, loss_fn=self._loss_fn)
+        fn = jax.jit(step, donate_argnums=(1, 5, 6))
+        self._step_fns[key] = fn
+        return fn
+
+    # ------------------------------------------------------------------ #
+    # public API
+    # ------------------------------------------------------------------ #
+
+    def train_step(self, batch) -> Dict[str, float]:
+        refresh = self._needs_mask_refresh
+        with_masks = self.masks is not None
+        fn = self._get_step_fn(self.plan.structure, refresh, with_masks)
+        sel, opt_state, masks, loss, metrics, norm_out = fn(
+            self.params, self.active["sel"], self.active["probe"],
+            self.plan.stack_idx, self.plan.probe_idx, self.opt_state,
+            self.masks if self.masks is not None
+            else _zero_masks_like(self.active["sel"]),
+            batch, jnp.asarray(self.q, jnp.float32))
+        self.active = {"sel": sel, "probe": self.active["probe"]}
+        self.opt_state = opt_state
+        if with_masks:
+            # rebind every step: the jitted fn donates the mask buffers
+            self.masks = masks
+        self._needs_mask_refresh = False
+        self._ingest_norms(norm_out)
+        loss_f = float(loss)
+        self.loss_history.append(loss_f)
+        self.step += 1
+        every = self.bcfg.selector.reselect_every
+        if every and self.step % every == 0:
+            self._select()  # BAdam-style fixed-interval block switch
+        elif not every and sel_lib.should_reselect(
+                self.loss_history, self.bcfg.selector.patience):
+            self._select()
+        out = {"loss": loss_f, "step": self.step,
+               "reselections": self.reselections}
+        out.update({k: float(v) for k, v in metrics.items()})
+        return out
+
+    def _ingest_norms(self, norm_out):
+        updates = {}
+        for sid, sq in norm_out["stacks"].items():
+            idx = np.asarray(self.plan.stack_idx[sid])
+            vals = np.sqrt(np.asarray(sq, np.float64))
+            for g, v in zip(idx, vals):
+                updates[f"{sid}/g{int(g)}"] = v
+        for name, sq in norm_out["leaves"].items():
+            updates[name] = float(np.sqrt(float(sq)))
+        for sid, sq in norm_out["probe"].items():
+            pidx = np.asarray(self.plan.probe_idx[sid])
+            vals = np.sqrt(np.asarray(sq, np.float64))
+            for g, v in zip(pidx, vals):
+                updates[f"{sid}/g{int(g)}"] = v
+        self.norms.update(updates, self.step)
+        # advance rotating probes host-side (stale-first order next round)
+        for sid in list(self.plan.probe_idx):
+            info = self.index.stack(sid)
+            excl = set(np.asarray(self.plan.stack_idx.get(
+                sid, np.zeros(0, np.int32))).tolist())
+            cands = [g for g in range(info.n_rows) if g not in excl]
+            if not cands:
+                continue
+            cands.sort(key=lambda g: self.norms.age.get(f"{sid}/g{g}", -1))
+            take = cands[:len(np.asarray(self.plan.probe_idx[sid]))]
+            self.plan.probe_idx[sid] = jnp.asarray(take, np.int32)
+            # refresh probe param rows to match the new indices
+            self.active["probe"][sid] = jax.tree.map(
+                lambda a: a[self.plan.probe_idx[sid]],
+                self.params["stages"][info.si][info.pos])
+
+    def merged_params(self) -> Pytree:
+        return units_lib.write_back(self.params, self.index, self.plan,
+                                    self.active)
+
+    def eval_loss(self, batch) -> float:
+        loss, _ = jax.jit(self._loss_fn)(self.merged_params(), batch)
+        return float(loss)
+
+    # ------------------------------------------------------------------ #
+    # memory accounting (paper Tables 1/7: optimizer+grad VRAM)
+    # ------------------------------------------------------------------ #
+
+    def memory_report(self) -> Dict[str, int]:
+        def nbytes(tree):
+            return sum(l.size * l.dtype.itemsize
+                       for l in jax.tree.leaves(tree))
+
+        report = {
+            "params_bytes": nbytes(self.params),
+            "grads_bytes": nbytes(self.active["sel"]),
+            "opt_state_bytes": self.adam.state_bytes(self.opt_state),
+            "mask_bytes": (nbytes(self.masks) if self.masks is not None
+                           else 0),
+            "probe_bytes": nbytes(self.active["probe"]),
+        }
+        report["total_train_state"] = sum(
+            v for k, v in report.items() if k != "params_bytes")
+        return report
+
+
+def _zero_masks_like(sel_tree):
+    return jax.tree.map(lambda a: jnp.ones(a.shape, jnp.bool_), sel_tree)
+
+
+# ---------------------------------------------------------------------- #
+# full-Adam reference trainer (the paper's "Adam exceeds 80GB" baseline)
+# ---------------------------------------------------------------------- #
+
+
+class FullAdamTrainer:
+    def __init__(self, cfg, params, *, adam=None, loss_fn=None,
+                 attn_impl="full"):
+        self.cfg = cfg
+        self.adam = adam or Adam(lr=1e-3)
+        self.params = params
+        self.opt_state = self.adam.init(params)
+        self.step = 0
+        self.loss_history: list = []
+        loss = loss_fn or (lambda p, b: model_lib.loss_fn(
+            p, cfg, b, attn_impl=attn_impl))
+
+        @jax.jit
+        def stepf(params, opt_state, batch):
+            (l, m), g = jax.value_and_grad(loss, has_aux=True)(params, batch)
+            new_p, new_s = self.adam.update(g, opt_state, params)
+            return new_p, new_s, l, m
+
+        self._stepf = stepf
+
+    def train_step(self, batch):
+        self.params, self.opt_state, l, m = self._stepf(
+            self.params, self.opt_state, batch)
+        self.step += 1
+        self.loss_history.append(float(l))
+        return {"loss": float(l), "step": self.step}
+
+    def memory_report(self):
+        nb = lambda t: sum(l.size * l.dtype.itemsize
+                           for l in jax.tree.leaves(t))
+        return {"params_bytes": nb(self.params),
+                "grads_bytes": nb(self.params),
+                "opt_state_bytes": self.adam.state_bytes(self.opt_state),
+                "mask_bytes": 0, "probe_bytes": 0,
+                "total_train_state": 2 * nb(self.params)
+                + self.adam.state_bytes(self.opt_state) - nb(self.params)}

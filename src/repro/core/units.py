@@ -1,0 +1,186 @@
+"""Selectable-unit abstraction for BlockLLM.
+
+A *unit* is the paper's "layer": the atomic block the selector turns on or
+off.  Two kinds exist in our scan-stacked parameter layout:
+
+- **stack rows** — ``params["stages"][si]["pos{j}"]`` holds a pytree whose
+  leaves are stacked ``[G, ...]``; each row ``g`` is one real transformer
+  layer = one unit.  Rows are gathered/scattered with *traced* int32 index
+  vectors, so changing the selection does NOT recompile (TPU-native
+  static-shape BCD — DESIGN.md §2b).
+- **whole leaves** — ``embed``, ``head``, ``vision_proj``, ``encoder``,
+  ``final_norm``: selected via *static* flags (a flip recompiles; flips are
+  rare and the variant space is tiny).
+
+``merge_active`` is the differentiable scatter: gradients flow only to the
+active rows/leaves — XLA never materializes gradients or optimizer state
+for frozen parameters, which is exactly the paper's memory model.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class StackInfo:
+    sid: str          # "s{si}/pos{j}"
+    si: int
+    pos: str          # "pos{j}"
+    n_rows: int       # G
+    params_per_row: int
+
+
+@dataclass(frozen=True)
+class LeafInfo:
+    name: str         # top-level key in params
+    numel: int
+
+
+@dataclass(frozen=True)
+class UnitIndex:
+    stacks: Tuple[StackInfo, ...]
+    leaves: Tuple[LeafInfo, ...]
+    total_params: int
+
+    def stack(self, sid: str) -> StackInfo:
+        return next(s for s in self.stacks if s.sid == sid)
+
+    def unit_sizes(self) -> Dict[str, int]:
+        """unit label -> param count.  Stack rows are 's.../g{g}'."""
+        out = {l.name: l.numel for l in self.leaves}
+        for s in self.stacks:
+            for g in range(s.n_rows):
+                out[f"{s.sid}/g{g}"] = s.params_per_row
+        return out
+
+
+LEAF_UNIT_KEYS = ("embed", "head", "final_norm", "vision_proj", "encoder")
+
+
+def build_unit_index(cfg, params) -> UnitIndex:
+    stacks = []
+    for si, stage in enumerate(params["stages"]):
+        for pos, sub in sorted(stage.items()):
+            leaves = jax.tree.leaves(sub)
+            g = leaves[0].shape[0]
+            per_row = sum(l.size for l in leaves) // g
+            stacks.append(StackInfo(f"s{si}/{pos}", si, pos, g, per_row))
+    leaf_infos = []
+    for name in LEAF_UNIT_KEYS:
+        if name in params:
+            leaf_infos.append(LeafInfo(
+                name, sum(l.size for l in jax.tree.leaves(params[name]))))
+    total = sum(l.size for l in jax.tree.leaves(params))
+    return UnitIndex(tuple(stacks), tuple(leaf_infos), total)
+
+
+@dataclass(frozen=True)
+class PlanStructure:
+    """The *static* part of a selection plan (changes => recompile)."""
+    k_per_stack: Tuple[Tuple[str, int], ...]   # (sid, K) — gathered rows
+    probe_per_stack: Tuple[Tuple[str, int], ...]  # (sid, P) — probe rows
+    active_leaves: Tuple[str, ...]             # whole-leaf units selected
+
+
+@dataclass
+class Plan:
+    """Structure + the traced index values."""
+    structure: PlanStructure
+    stack_idx: Dict[str, jnp.ndarray]   # sid -> int32 [K]
+    probe_idx: Dict[str, jnp.ndarray]   # sid -> int32 [P]
+
+    def selected_labels(self) -> List[str]:
+        out = list(self.structure.active_leaves)
+        for sid, idx in self.stack_idx.items():
+            out += [f"{sid}/g{int(g)}" for g in np.asarray(idx)]
+        return out
+
+
+def _stage_sub(params, info: StackInfo):
+    return params["stages"][info.si][info.pos]
+
+
+def extract_active(params, index: UnitIndex, plan: Plan):
+    """Gather the selected (and probe) parameters.
+
+    Returns {"sel": {"stacks": {sid: rows}, "leaves": {name: subtree}},
+             "probe": {sid: rows}}.
+    """
+    sel_stacks, probes = {}, {}
+    for sid, k in plan.structure.k_per_stack:
+        if k == 0:
+            continue
+        info = index.stack(sid)
+        idx = plan.stack_idx[sid]
+        sel_stacks[sid] = jax.tree.map(lambda a: a[idx], _stage_sub(params, info))
+    for sid, p in plan.structure.probe_per_stack:
+        if p == 0:
+            continue
+        info = index.stack(sid)
+        pidx = plan.probe_idx[sid]
+        probes[sid] = jax.tree.map(lambda a: a[pidx], _stage_sub(params, info))
+    # leaf units are COPIED: the active tree is donated by the train step,
+    # so it must never alias buffers still referenced from ``params``
+    leaves = {name: jax.tree.map(lambda a: jnp.array(a, copy=True),
+                                 params[name])
+              for name in plan.structure.active_leaves}
+    return {"sel": {"stacks": sel_stacks, "leaves": leaves}, "probe": probes}
+
+
+def merge_active(params, index: UnitIndex, plan: Plan, active):
+    """Differentiable merge: scatter active rows into the frozen tree.
+
+    Gradients flow to ``active`` only; every frozen leaf is wrapped in
+    stop_gradient so XLA prunes its gradient computation entirely.
+    """
+    frozen = jax.tree.map(jax.lax.stop_gradient, params)
+    out = dict(frozen)
+    stages = [dict(s) for s in frozen["stages"]]
+
+    def scatter(sub_frozen, rows, idx):
+        return jax.tree.map(
+            lambda f, a: f.at[idx].set(a.astype(f.dtype)), sub_frozen, rows)
+
+    for sid, rows in active["sel"]["stacks"].items():
+        info = index.stack(sid)
+        stages[info.si][info.pos] = scatter(
+            stages[info.si][info.pos], rows, plan.stack_idx[sid])
+    for sid, rows in active.get("probe", {}).items():
+        info = index.stack(sid)
+        stages[info.si][info.pos] = scatter(
+            stages[info.si][info.pos], rows, plan.probe_idx[sid])
+    out["stages"] = stages
+    for name, sub in active["sel"]["leaves"].items():
+        out[name] = sub
+    return out
+
+
+def write_back(params, index: UnitIndex, plan: Plan, active):
+    """Non-differentiable scatter of trained rows into the full tree
+    (host-side, at re-selection boundaries / checkpoint time)."""
+    merged = merge_active(params, index, plan, active)
+    # drop probe rows: they were never updated, but scatter is idempotent
+    return jax.tree.map(lambda a: a, merged)
+
+
+def per_row_sq_norms(rows_tree) -> jnp.ndarray:
+    """Stacked rows pytree [K, ...] -> [K] squared grad norms (fp32)."""
+    leaves = jax.tree.leaves(rows_tree)
+    tot = None
+    for l in leaves:
+        s = jnp.sum(jnp.square(l.astype(jnp.float32)),
+                    axis=tuple(range(1, l.ndim)))
+        tot = s if tot is None else tot + s
+    return tot
+
+
+def subtree_sq_norm(tree) -> jnp.ndarray:
+    return sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+               for l in jax.tree.leaves(tree))

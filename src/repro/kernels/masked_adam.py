@@ -1,0 +1,87 @@
+"""Fused masked-Adam update — the BlockLLM optimizer hot-spot (Pallas/TPU).
+
+Unfused, the masked update is ~6 elementwise HLO ops over 5 tensors
+(p, g, m, v, mask), each streamed HBM->VMEM->HBM: ~12 full-tensor HBM
+round-trips.  The fused kernel streams every tile through VMEM exactly
+once: 5 reads + 3 writes, a 2.4x cut on the memory-bound optimizer step
+(the update is strictly memory-bound: ~10 FLOPs/element vs 16 bytes moved).
+
+Two masking modes:
+- ``mask``  : stored binary mask (the paper's Algorithm 1 semantics —
+              mask fixed between re-selections);
+- ``tau``   : threshold recomputed on the fly from |u| >= tau (the
+              dynamic-mask variant; saves the mask's HBM entirely).
+
+Grid: 2-D tiles over a [R, C] view of each tensor (ops.py flattens /
+pads arbitrary leaves).  Tiles are (block_r, block_c) with block_c a
+multiple of 128 (lane width) and block_r a multiple of 8 (f32 sublane).
+Scalars (lr, betas, bias corrections, eps, wd, tau) ride in SMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU memory spaces; interpret mode ignores them on CPU
+    from jax.experimental.pallas import tpu as pltpu
+    SMEM = pltpu.SMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    SMEM = None
+
+# scalar layout: [lr, b1, b2, eps, wd, bc1, bc2, tau]
+N_SCALARS = 8
+
+
+def _kernel(scal_ref, p_ref, g_ref, m_ref, v_ref, mask_ref,
+            p_out, m_out, v_out, *, use_tau: bool):
+    lr, b1, b2, eps = (scal_ref[0], scal_ref[1], scal_ref[2], scal_ref[3])
+    wd, bc1, bc2, tau = (scal_ref[4], scal_ref[5], scal_ref[6], scal_ref[7])
+    g = g_ref[...].astype(jnp.float32)
+    m2 = b1 * m_ref[...] + (1.0 - b1) * g
+    v2 = b2 * v_ref[...] + (1.0 - b2) * g * g
+    u = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+    if use_tau:
+        gate = (jnp.abs(u) >= tau).astype(jnp.float32)
+    else:
+        gate = mask_ref[...].astype(jnp.float32)
+    p32 = p_ref[...].astype(jnp.float32)
+    u = u * gate + wd * p32
+    p_out[...] = (p32 - lr * u).astype(p_out.dtype)
+    m_out[...] = m2
+    v_out[...] = v2
+
+
+@functools.partial(jax.jit, static_argnames=("use_tau", "block_r", "block_c",
+                                             "interpret"))
+def masked_adam_2d(p, g, m, v, mask, scalars, *, use_tau=False,
+                   block_r=256, block_c=512, interpret=False):
+    """One fused update on 2-D views.  All of p/g/m/v/mask are [R, C]
+    (m, v f32; mask any dtype; scalars f32[8]).  Returns (p2, m2, v2)."""
+    R, C = p.shape
+    block_r = min(block_r, R)
+    block_c = min(block_c, C)
+    grid = (pl.cdiv(R, block_r), pl.cdiv(C, block_c))
+
+    def idx(i, j):
+        return (i, j)
+
+    tile = lambda: pl.BlockSpec((block_r, block_c), idx)
+    scal_spec = (pl.BlockSpec(memory_space=SMEM) if SMEM is not None
+                 else pl.BlockSpec((N_SCALARS,), lambda i, j: (0,)))
+    kernel = functools.partial(_kernel, use_tau=use_tau)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[scal_spec, tile(), tile(), tile(), tile(), tile()],
+        out_specs=[tile(), tile(), tile()],
+        out_shape=[
+            jax.ShapeDtypeStruct(p.shape, p.dtype),
+            jax.ShapeDtypeStruct(m.shape, jnp.float32),
+            jax.ShapeDtypeStruct(v.shape, jnp.float32),
+        ],
+        interpret=interpret,
+    )(scalars, p, g, m, v, mask)

@@ -1,0 +1,145 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+- ``flash_attention``: custom_vjp — Pallas forward, XLA flash-structured
+  backward (recomputes block probabilities; O(S) memory).
+- ``masked_adam_tree``: applies the fused update leaf-wise over a pytree
+  (2-D flattening; the kernel grid handles padding).
+- ``rglru_scan``: linear-recurrence kernel with associative-scan VJP.
+
+All wrappers take ``use_pallas``: on this CPU container the kernels run
+in interpret mode for tests only; production code paths select Pallas on
+TPU backends and the pure-XLA fallbacks elsewhere (``default_backend()``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import masked_adam as ma
+from repro.kernels import flash_attention as fa
+from repro.kernels import rglru_scan as rg
+from repro.models import layers
+
+Pytree = Any
+
+
+def pallas_available() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# --------------------------------------------------------------------- #
+# flash attention with XLA backward
+# --------------------------------------------------------------------- #
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal=True, window=0, interpret=False):
+    return fa.flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                  interpret=interpret)
+
+
+def _fa_fwd(q, k, v, causal, window, interpret):
+    o = fa.flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               interpret=interpret)
+    return o, (q, k, v)
+
+
+def _fa_bwd(causal, window, interpret, res, do):
+    q, k, v = res
+    B, Sq = q.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32)[None], (B, Sq))
+
+    def ref(q, k, v):
+        return layers.attention_chunked(q, k, v, pos, pos, causal=causal,
+                                        window=window)
+
+    _, vjp = jax.vjp(ref, q, k, v)
+    return vjp(do)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# --------------------------------------------------------------------- #
+# fused masked adam over pytrees
+# --------------------------------------------------------------------- #
+
+
+def _to_2d(a):
+    if a.ndim == 0:
+        return a.reshape(1, 1)
+    if a.ndim == 1:
+        return a.reshape(1, -1)
+    return a.reshape(-1, a.shape[-1])
+
+
+def masked_adam_tree(params: Pytree, grads: Pytree, mu: Pytree, nu: Pytree,
+                     masks: Pytree, *, lr, b1=0.9, b2=0.999, eps=1e-8,
+                     weight_decay=0.0, count=0, tau=0.0, use_tau=False,
+                     interpret=False):
+    """Fused masked-Adam across every leaf.  Returns (params, mu, nu)."""
+    cf = jnp.asarray(count, jnp.float32) + 1.0
+    scal = jnp.stack([
+        jnp.asarray(lr, jnp.float32), jnp.asarray(b1, jnp.float32),
+        jnp.asarray(b2, jnp.float32), jnp.asarray(eps, jnp.float32),
+        jnp.asarray(weight_decay, jnp.float32),
+        1.0 - b1 ** cf, 1.0 - b2 ** cf, jnp.asarray(tau, jnp.float32)])
+
+    def one(p, g, m, v, msk):
+        shape = p.shape
+        p2, m2, v2 = ma.masked_adam_2d(
+            _to_2d(p), _to_2d(g), _to_2d(m), _to_2d(v),
+            _to_2d(msk if msk is not None else jnp.ones(p.shape, jnp.bool_)),
+            scal, use_tau=use_tau, interpret=interpret)
+        return p2.reshape(shape), m2.reshape(shape), v2.reshape(shape)
+
+    flat_p, td = jax.tree.flatten(params)
+    out = [one(p, g, m, v, msk) for p, g, m, v, msk in zip(
+        flat_p, td.flatten_up_to(grads), td.flatten_up_to(mu),
+        td.flatten_up_to(nu),
+        td.flatten_up_to(masks) if masks is not None
+        else [None] * len(flat_p))]
+    return (td.unflatten([o[0] for o in out]),
+            td.unflatten([o[1] for o in out]),
+            td.unflatten([o[2] for o in out]))
+
+
+# --------------------------------------------------------------------- #
+# RG-LRU
+# --------------------------------------------------------------------- #
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def rglru_scan(a, b, h0, interpret=False):
+    y, hN = rg.rglru_scan_kernel(a, b, h0, interpret=interpret)
+    return y, hN
+
+
+def _rg_fwd(a, b, h0, interpret):
+    y, hN = rg.rglru_scan_kernel(a, b, h0, interpret=interpret)
+    return (y, hN), (a, y, h0)
+
+
+def _rg_bwd(interpret, res, cts):
+    a, y, h0 = res
+    dy, dhN = cts
+    # reverse-time linear recurrence: lam_t = a_{t+1} lam_{t+1} + dy_t
+    B, S, W = a.shape
+    a_next = jnp.concatenate(
+        [a[:, 1:], jnp.zeros((B, 1, W), a.dtype)], axis=1)
+    dy = dy.at[:, -1].add(dhN)
+    lam, _ = rg.rglru_scan_kernel(
+        jnp.flip(a_next, 1), jnp.flip(dy, 1),
+        jnp.zeros((B, W), jnp.float32), interpret=interpret)
+    lam = jnp.flip(lam, 1)                     # [B,S,W] adjoint of h_t
+    y_prev = jnp.concatenate([h0[:, None], y[:, :-1]], axis=1)
+    da = lam * y_prev
+    db = lam
+    dh0 = lam[:, 0] * a[:, 0]
+    return da, db, dh0
+
+
+rglru_scan.defvjp(_rg_fwd, _rg_bwd)

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (the test ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_adam_ref(p, g, m, v, mask, scalars, *, use_tau=False):
+    """Oracle for kernels.masked_adam.masked_adam_2d."""
+    lr, b1, b2, eps, wd, bc1, bc2, tau = [scalars[i] for i in range(8)]
+    g = g.astype(jnp.float32)
+    m2 = b1 * m + (1 - b1) * g
+    v2 = b2 * v + (1 - b2) * g * g
+    u = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+    gate = (jnp.abs(u) >= tau).astype(jnp.float32) if use_tau \
+        else mask.astype(jnp.float32)
+    p32 = p.astype(jnp.float32)
+    u = u * gate + wd * p32
+    return (p32 - lr * u).astype(p.dtype), m2, v2
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """Oracle for kernels.flash_attention (GQA-aware full attention).
+
+    q [B, Sq, H, hd]; k/v [B, Sk, KV, hd].
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    k = jnp.repeat(k, H // KV, axis=2)
+    v = jnp.repeat(v, H // KV, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(k.shape[1])[None, :]
+    ok = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        ok &= qp >= kp
+    if window:
+        ok &= qp - kp < window
+    s = jnp.where(ok[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isfinite(s).any(-1, keepdims=True), p, 0.0)
+    return jnp.einsum("bhqk,bkhd->bqhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def rglru_ref(a, b, h0=None):
+    """Oracle for kernels.rglru_scan: h_t = a_t * h_{t-1} + b_t.
+
+    a, b [B, S, W] (f32); h0 [B, W] or None.  Returns (y [B,S,W], h_last).
+    """
+    B, S, W = a.shape
+    h = jnp.zeros((B, W), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    ys = []
+    hs = h
+    out = jnp.zeros((B, S, W), jnp.float32)
+
+    def step(h, t):
+        h2 = a[:, t] * h + b[:, t]
+        return h2, h2
+
+    hs, ys = jax.lax.scan(step, h, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1), hs

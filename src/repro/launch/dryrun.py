@@ -1,0 +1,198 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede every other import: JAX locks the device
+count on first initialization, and the dry-run needs 512 host placeholder
+devices to build the production meshes (16x16 single-pod, 2x16x16
+multi-pod).  Smoke tests and benchmarks intentionally see 1 device — this
+flag is set ONLY here.
+
+For every cell this script records into results/dryrun_<mesh>.json:
+  - per-device memory analysis (argument/output/temp/peak bytes),
+  - cost analysis (HLO FLOPs, bytes accessed),
+  - collective bytes by op kind, parsed from the post-SPMD HLO,
+  - the active-parameter fraction of the BlockLLM plan (train cells).
+
+EXPERIMENTS.md §Dry-run and §Roofline are generated from these files
+(benchmarks/roofline.py).
+"""
+import argparse
+import gzip
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import base as config_base
+from repro.configs.shapes import SHAPES, shape_applicable
+from repro.launch import hlo_cost, steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+
+ARCHS = [
+    "qwen2-moe-a2.7b", "granite-moe-3b-a800m", "deepseek-7b",
+    "internlm2-1.8b", "gemma3-1b", "gemma-2b", "pixtral-12b",
+    "recurrentgemma-2b", "xlstm-1.3b", "whisper-large-v3",
+]
+SHAPE_NAMES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64"
+                       r"|f64|c64|c128)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?\S+\s+=\s+(.*?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes per collective kind from post-SPMD HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    seen_done = set()
+    for m in _OP_RE.finditer(hlo_text):
+        shape_txt, kind = m.group(1), m.group(2)
+        line = m.group(0)
+        if "-done(" in line:
+            continue  # paired with -start; count once
+        out[kind] += _shape_bytes(shape_txt)
+        counts[kind] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             verbose=True, hlo_dir=None) -> dict:
+    cfg = config_base.get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "kind": shape.kind, "ts": time.time()}
+    if not shape_applicable(arch, shape, cfg):
+        rec["status"] = "skipped"
+        rec["reason"] = ("long_500k needs sub-quadratic attention; "
+                        "pure full-attention arch (DESIGN.md §4)")
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    try:
+        setup = steps_lib.build_setup(cfg, shape, mesh)
+        lowered = setup.lower()
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo_text = compiled.as_text()
+        if hlo_dir is not None:
+            hlo_dir.mkdir(parents=True, exist_ok=True)
+            with gzip.open(hlo_dir / f"{arch}_{shape_name}.txt.gz", "wt") \
+                    as fh:
+                fh.write(hlo_text)
+        coll = collective_bytes(hlo_text)
+        # loop-aware totals: xla cost_analysis counts while bodies ONCE;
+        # this re-derivation multiplies by known_trip_count (hlo_cost.py)
+        la = hlo_cost.analyze(hlo_text)
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "peak_bytes": getattr(ma, "peak_memory_in_bytes", 0),
+                "alias_bytes": ma.alias_size_in_bytes,
+            },
+            "cost": {
+                "flops": float(ca.get("flops", 0.0)),
+                "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            },
+            "loop_aware": {
+                "flops": la.flops,
+                "hbm_bytes": la.hbm_bytes,
+                "collective_bytes": dict(la.collective_bytes),
+                "collective_counts": dict(la.collective_counts),
+                "total_collective_bytes": la.total_collective_bytes,
+            },
+            "collectives": coll,
+            "meta": {k: (float(v) if isinstance(v, (int, float)) else None)
+                     for k, v in setup.meta.items()
+                     if k in ("q", "active_fraction")},
+        })
+    except Exception as e:  # a failing cell is a bug; record it loudly
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    if verbose:
+        mem = rec.get("memory", {})
+        print(f"[{mesh_kind}] {arch} x {shape_name}: {rec['status']}"
+              + (f" lower={rec.get('lower_s')}s compile={rec.get('compile_s')}s"
+                 f" temp={mem.get('temp_bytes', 0)/2**30:.2f}GiB"
+                 f" args={mem.get('argument_bytes', 0)/2**30:.2f}GiB"
+                 f" flops={rec.get('cost', {}).get('flops', 0):.3g}"
+                 f" coll={rec.get('collectives', {}).get('total_bytes', 0)/2**20:.1f}MiB"
+                 if rec["status"] == "ok" else
+                 f" {rec.get('reason', rec.get('error', ''))[:200]}"),
+              flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--out", default="results")
+    args = ap.parse_args()
+
+    archs = ARCHS if args.arch == "all" else args.arch.split(",")
+    shapes = SHAPE_NAMES if args.shape == "all" else args.shape.split(",")
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    outdir = Path(args.out)
+    outdir.mkdir(exist_ok=True)
+    n_fail = 0
+    for mesh_kind in meshes:
+        path = outdir / f"dryrun_{mesh_kind}.json"
+        results = {}
+        if path.exists():
+            results = json.loads(path.read_text())
+        for arch in archs:
+            for shape in shapes:
+                key = f"{arch}|{shape}"
+                if results.get(key, {}).get("status") == "ok":
+                    print(f"[{mesh_kind}] {key}: cached", flush=True)
+                    continue
+                rec = run_cell(arch, shape, mesh_kind,
+                               hlo_dir=outdir / "hlo" / mesh_kind)
+                results[key] = rec
+                n_fail += rec["status"] == "error"
+                path.write_text(json.dumps(results, indent=1))
+    print(f"done; failures={n_fail}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,294 @@
+"""Loop-aware cost analysis over post-SPMD HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, but our models
+scan over layers (and attention scans over kv blocks), so raw numbers
+undercount by the trip count.  XLA writes the statically-known trip count
+into the while op's backend_config (``"known_trip_count":{"n":N}``); this
+module re-derives:
+
+  - matmul FLOPs      (dot ops: 2 * prod(out dims) * contracted dim)
+  - HBM bytes         (operands+outputs of top-level ops; fusions are
+                       opaque — internal values never touch HBM)
+  - collective bytes  (result shapes of all-reduce / all-gather /
+                       reduce-scatter / all-to-all / collective-permute)
+
+with every computation weighted by the product of trip counts along its
+call chain.  All quantities are per-device (the module is the SPMD
+program).  Elementwise FLOPs are ignored (standard MFU practice).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(pred|s4|u4|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64"
+    r"|c128)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-_]+)\s*\(.*->.*\{\s*$")
+_INSTR = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w.\-_]+)\s*=\s*(\(?[^=]*?)\s*"
+    r"([\w\-]+)\((.*)$")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_elems_bytes(text: str) -> Tuple[int, int]:
+    elems = tot = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        tot += n * _DTYPE_BYTES[dt]
+    return elems, tot
+
+
+def _first_shape_dims(text: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Instr:
+    name: str
+    out_text: str
+    opcode: str
+    rest: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)  # name -> out_text
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        line = _COMMENT_RE.sub("", line)  # tuple types embed /*index=N*/
+        hdr = _COMP_HDR.match(line)
+        if hdr and line.rstrip().endswith("{"):
+            cur = Computation(hdr.group(1))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if m:
+            name, out_text, opcode, rest = m.groups()
+            cur.instrs.append(Instr(name, out_text, opcode, rest))
+            cur.shapes[name] = out_text
+    return comps
+
+
+def _call_targets(instr: Instr) -> List[Tuple[str, int]]:
+    """[(computation_name, multiplier)] invoked by this instruction."""
+    out = []
+    line = instr.rest
+    if instr.opcode == "while":
+        trips = 1
+        mt = re.search(r'known_trip_count[^0-9]*(\d+)', line)
+        if mt:
+            trips = int(mt.group(1))
+        mb = re.search(r"body=%?([\w.\-_]+)", line)
+        mc = re.search(r"condition=%?([\w.\-_]+)", line)
+        if mb:
+            out.append((mb.group(1), trips))
+        if mc:
+            out.append((mc.group(1), trips))
+        return out
+    for key in ("calls=", "to_apply="):
+        for m in re.finditer(key + r"%?([\w.\-_]+)", line):
+            out.append((m.group(1), 1))
+    for m in re.finditer(r"(?:true_computation|false_computation|branch_"
+                         r"computations)=\{?%?([\w.\-_,% ]+)", line):
+        for nm in re.split(r"[,\s%]+", m.group(1)):
+            if nm:
+                out.append((nm, 1))
+    return out
+
+
+def _dot_flops(instr: Instr, comp: Computation) -> float:
+    # output elems
+    out_elems, _ = _shape_elems_bytes(instr.out_text)
+    # contracted size from lhs operand shape + contracting dims
+    mdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rest)
+    ops = re.findall(r"%([\w.\-_]+)", instr.rest.split("),")[0])
+    k = 1
+    if mdims and ops:
+        lhs_shape = comp.shapes.get(ops[0])
+        if lhs_shape:
+            dims = _first_shape_dims(lhs_shape)
+            if dims:
+                for idx in mdims.group(1).split(","):
+                    if idx and int(idx) < len(dims):
+                        k *= dims[int(idx)]
+    return 2.0 * out_elems * k
+
+
+def _fusion_param_costs(comp: Computation) -> Dict[int, float]:
+    """Effective HBM read-bytes per fusion parameter.
+
+    A parameter whose only uses inside the fused computation are
+    ``dynamic-slice``/``gather`` reads contributes slice-sized traffic per
+    invocation, not its full size (the xs buffers of a lax.scan).  A
+    parameter consumed by a root ``dynamic-update-slice`` aliases in
+    place: traffic = 2x the update.  Everything else: full size.
+    """
+    param_names: Dict[str, int] = {}
+    for ins in comp.instrs:
+        if ins.opcode == "parameter":
+            mi = re.match(r"\s*(\d+)", ins.rest)
+            if mi:
+                param_names[ins.name] = int(mi.group(1))
+    costs: Dict[int, float] = {}
+    for pname, pidx in param_names.items():
+        uses = [ins for ins in comp.instrs
+                if re.search(r"%" + re.escape(pname) + r"\b", ins.rest)]
+        if not uses:
+            costs[pidx] = 0.0
+            continue
+        eff = 0.0
+        ok = True
+        for u in uses:
+            if u.opcode in ("dynamic-slice", "gather", "slice"):
+                _, b = _shape_elems_bytes(u.out_text)
+                eff = max(eff, b)
+            elif u.opcode == "dynamic-update-slice":
+                ops = re.findall(r"%([\w.\-_]+)", u.rest.split(")")[0])
+                if ops and ops[0] == pname:  # aliased buffer operand
+                    upd_sh = comp.shapes.get(ops[1]) if len(ops) > 1 else None
+                    _, b = _shape_elems_bytes(upd_sh or u.out_text)
+                    eff = max(eff, 2.0 * b)
+                else:
+                    ok = False
+            else:
+                ok = False
+        if ok:
+            costs[pidx] = eff
+    return costs
+
+
+@dataclass
+class CostTotals:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = field(
+        default_factory=lambda: defaultdict(float))
+    collective_counts: Dict[str, float] = field(
+        default_factory=lambda: defaultdict(float))
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "after-all", "iota"}
+
+
+def analyze(hlo: str, entry: Optional[str] = None) -> CostTotals:
+    comps = parse_computations(hlo)
+    if entry is None:
+        m = re.search(r"^ENTRY\s+%?([\w.\-_]+)", hlo, re.M)
+        entry = m.group(1) if m else next(iter(comps))
+
+    # multiplicity per computation (call-graph walk)
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    # propagate breadth-first; HLO call graphs are acyclic
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for instr in comp.instrs:
+            for target, k in _call_targets(instr):
+                if target in comps:
+                    mult[target] += mult[cname] * k
+                    if target not in seen:
+                        seen.add(target)
+                        order.append(target)
+
+    totals = CostTotals()
+    # fusion-called computations are opaque for BYTES but open for FLOPS
+    fusion_targets = set()
+    for comp in comps.values():
+        for instr in comp.instrs:
+            if instr.opcode == "fusion":
+                for t, _ in _call_targets(instr):
+                    fusion_targets.add(t)
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = cname in fusion_targets
+        for instr in comp.instrs:
+            if instr.opcode in ("dot", "convolution"):
+                totals.flops += m * _dot_flops(instr, comp)
+            base = instr.opcode.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES and not instr.opcode.endswith("-done"):
+                _, b = _shape_elems_bytes(instr.out_text)
+                totals.collective_bytes[base] += m * b
+                totals.collective_counts[base] += m
+            if in_fusion or instr.opcode in _SKIP_BYTES_OPS:
+                continue
+            # HBM bytes: output + operands (operand shapes via symbol
+            # table), with slicing ops costed at SLICE traffic — a
+            # dynamic-slice inside a scan body reads one slice per trip,
+            # not its whole operand; a dynamic-update-slice writes (and
+            # reads) only the updated region (the big buffer aliases).
+            _, ob = _shape_elems_bytes(instr.out_text)
+            if instr.opcode in ("dynamic-slice", "slice", "gather",
+                                "broadcast", "reshape", "transpose",
+                                "reduce"):
+                totals.hbm_bytes += m * 2 * ob
+                continue
+            arglist = instr.rest.split(")")[0]
+            op_bytes = []
+            for nm in re.findall(r"%([\w.\-_]+)", arglist):
+                sh = comp.shapes.get(nm)
+                if sh:
+                    _, b = _shape_elems_bytes(sh)
+                    op_bytes.append(b)
+            if instr.opcode in ("dynamic-update-slice", "scatter"):
+                # operands = (buffer, update, idx...); traffic = rw of
+                # the updated region; the buffer itself aliases in place
+                upd = op_bytes[1] if len(op_bytes) >= 2 else ob
+                totals.hbm_bytes += m * 2 * upd
+                continue
+            if instr.opcode == "fusion":
+                tgt = next((t for t, _ in _call_targets(instr)
+                            if t in comps), None)
+                pc = _fusion_param_costs(comps[tgt]) if tgt else {}
+                eff = 0.0
+                for j, b in enumerate(op_bytes):
+                    eff += pc.get(j, b) if j in pc else b
+                totals.hbm_bytes += m * (ob + eff)
+                continue
+            totals.hbm_bytes += m * (ob + sum(op_bytes))
+    return totals

@@ -1,0 +1,65 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+``input_specs(cfg, shape)`` gives the batch for train/prefill; decode
+additionally needs the cache tree, obtained abstractly via
+``jax.eval_shape`` over ``model.init_cache``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models import model as model_lib
+
+SDS = jax.ShapeDtypeStruct
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *, dtype=jnp.bfloat16):
+    """Batch pytree of ShapeDtypeStructs for a (arch, shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": SDS((B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = SDS(
+                (B, cfg.num_patches, cfg.vision_embed_dim), dtype)
+        if cfg.is_encoder_decoder:
+            batch["frames"] = SDS(
+                (B, cfg.encoder_seq_len, cfg.encoder_feature_dim), dtype)
+        return batch
+    # decode: one new token against a cache of length S
+    return {
+        "token": SDS((B, 1), jnp.int32),
+        "pos": SDS((), jnp.int32),
+    }
+
+
+def cache_specs_abstract(cfg: ModelConfig, shape: ShapeConfig,
+                         dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: model_lib.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                     dtype))
+
+
+def params_abstract(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: model_lib.init_params(jax.random.PRNGKey(0), cfg,
+                                      dtype=dtype))
+
+
+def concrete_batch(cfg: ModelConfig, shape_or_specs, key=None,
+                   dtype=jnp.bfloat16):
+    """Materialize a random batch matching ``input_specs`` (examples/tests)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    specs = shape_or_specs if isinstance(shape_or_specs, dict) else \
+        input_specs(cfg, shape_or_specs, dtype=dtype)
+    out = {}
+    for i, (k, v) in enumerate(sorted(specs.items())):
+        kk = jax.random.fold_in(key, i)
+        if v.dtype == jnp.int32:
+            out[k] = jax.random.randint(kk, v.shape, 0,
+                                        min(cfg.vocab_size, 32768), jnp.int32)
+        else:
+            out[k] = jax.random.normal(kk, v.shape, v.dtype)
+    return out

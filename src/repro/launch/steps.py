@@ -1,0 +1,212 @@
+"""Distributed step builders: (arch x shape x mesh) -> lowerable setups.
+
+Each builder returns a ``StepSetup``: the step callable, abstract
+(ShapeDtypeStruct) arguments, and the matching in_shardings — everything
+``dryrun.py`` needs to ``jit(...).lower(...).compile()`` and everything
+``train.py``/``serve.py`` need to run for real (they materialize the same
+trees).
+
+The train step is the BlockLLM step (``core.blockllm.build_step_fn``) with
+the static selection policy: the paper's technique is a first-class part of
+the production training path, and its distributed consequence — gradient
+and optimizer sharding over only the active K-of-L blocks, DP all-reduce
+bytes scaled by K/L — is what §Perf measures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeConfig
+from repro.core import blockllm as bll
+from repro.core import selection as sel_lib
+from repro.core import units as units_lib
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import dp_axes as mesh_dp_axes
+from repro.models import model as model_lib
+from repro.optim.adam import Adam
+from repro.runtime import shard_ctx, sharding
+
+Pytree = Any
+
+
+@dataclass
+class StepSetup:
+    name: str
+    fn: Callable
+    args: Tuple           # abstract or concrete pytrees, positional
+    in_shardings: Tuple
+    rules: shard_ctx.ShardRules
+    donate: Tuple = ()    # state args aliased in-place (cache, opt, sel)
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def lower(self):
+        with shard_ctx.use(self.rules):
+            return jax.jit(self.fn, in_shardings=self.in_shardings,
+                           donate_argnums=self.donate).lower(*self.args)
+
+
+def _rules_for(mesh: Mesh, cfg=None) -> shard_ctx.ShardRules:
+    dp = mesh_dp_axes(mesh)
+    if cfg is not None and sharding.pure_dp(cfg):
+        # SSM archs: batch over EVERY axis, activations replicated on none
+        dp_all = dp + (sharding.TP,)
+        return shard_ctx.ShardRules(
+            mesh=mesh, dp_axes=dp_all,
+            activation_rules={"residual": PartitionSpecAll(dp_all)})
+    return shard_ctx.ShardRules(
+        mesh=mesh, dp_axes=dp,
+        activation_rules=sharding.default_activation_rules(dp))
+
+
+def PartitionSpecAll(dp_all):
+    return P(dp_all, None, None)
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _tree_specs(cfg, tree, mesh):
+    return sharding.param_specs(cfg, tree, mesh)
+
+
+def _zero_extend(ns, shape, mesh, dp):
+    """ZeRO: additionally shard a leaf over the data axes on the first
+    dim that is currently unsharded and divisible (optimizer moments —
+    f32 update temporaries shard with them; grads arrive via
+    reduce-scatter, updated weights all-gather back: ZeRO-2)."""
+    from jax.sharding import NamedSharding
+    spec = list(ns.spec) + [None] * (len(shape) - len(ns.spec))
+    start = 1 if len(shape) > 1 else 0  # skip the stacked-rows axis
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    for i in range(start, len(shape)):
+        if spec[i] is None and shape[i] % dp_size == 0 and shape[i] > 1:
+            spec[i] = dp if len(dp) > 1 else dp[0]
+            break
+    return NamedSharding(mesh, P(*spec))
+
+
+def _zero_specs(cfg, tree, mesh, dp):
+    base = sharding.param_specs(cfg, tree, mesh)
+    return jax.tree.map(
+        lambda ns, leaf: _zero_extend(ns, leaf.shape, mesh, dp),
+        base, tree)
+
+
+def build_train_setup(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                      *, sparsity: float = 0.95, k_frac: float = 0.25,
+                      attn_impl: str = "chunked") -> StepSetup:
+    """BlockLLM distributed train step (static policy, abstract args)."""
+    rules = _rules_for(mesh, cfg)
+    dp = rules.dp_axes
+    params = specs_lib.params_abstract(cfg, dtype=jnp.bfloat16)
+    index = units_lib.build_unit_index(cfg, params)
+    scfg = sel_lib.SelectorConfig(
+        sparsity=sparsity, policy="static", static_k_frac=k_frac,
+        probe_rows_per_stack=1)
+    plan, q = sel_lib.select(index, sel_lib.NormTracker(),
+                             sel_lib.VisitTracker(), scfg)
+    adam = Adam(lr=1e-3)
+    bcfg = bll.BlockLLMConfig(selector=scfg)
+
+    active = jax.eval_shape(
+        lambda p: units_lib.extract_active(p, index, plan), params)
+    opt_state = jax.eval_shape(adam.init, active["sel"])
+    masks = jax.eval_shape(
+        lambda s: jax.tree.map(lambda a: jnp.ones(a.shape, jnp.bool_), s),
+        active["sel"])
+    batch = specs_lib.input_specs(cfg, shape)
+
+    raw_step = bll.build_step_fn(
+        cfg, index, adam, bcfg, plan.structure, refresh=False,
+        with_masks=True,
+        loss_fn=lambda p, b, overlay=None: model_lib.loss_fn(
+            p, cfg, b, attn_impl=attn_impl, overlay=overlay))
+
+    # shardings
+    p_specs = _tree_specs(cfg, params, mesh)
+    sel_specs = _tree_specs(cfg, active["sel"], mesh)
+    probe_specs = _tree_specs(cfg, active["probe"], mesh)
+    opt_specs = type(opt_state)(
+        _replicated(mesh), _zero_specs(cfg, opt_state.mu, mesh, dp),
+        _zero_specs(cfg, opt_state.nu, mesh, dp))
+    mask_specs = _tree_specs(cfg, masks, mesh)
+    idx_specs = jax.tree.map(lambda _: _replicated(mesh), plan.stack_idx)
+    pidx_specs = jax.tree.map(lambda _: _replicated(mesh), plan.probe_idx)
+    b_specs = sharding.batch_specs(shape.kind, batch, mesh, dp)
+
+    args = (params, active["sel"], active["probe"], plan.stack_idx,
+            plan.probe_idx, opt_state, masks, batch,
+            jnp.asarray(0.5, jnp.float32))
+    in_shardings = (p_specs, sel_specs, probe_specs, idx_specs, pidx_specs,
+                    opt_specs, mask_specs, b_specs, _replicated(mesh))
+    return StepSetup(
+        name=f"{cfg.name}:{shape.name}", fn=raw_step, args=args,
+        in_shardings=in_shardings, rules=rules, donate=(1, 5, 6),
+        meta={"kind": "train", "plan": plan, "q": q,
+              "active_fraction": _active_fraction(index, plan)})
+
+
+def _active_fraction(index, plan) -> float:
+    sizes = index.unit_sizes()
+    tot = sum(sizes[u] for u in plan.selected_labels() if u in sizes)
+    return tot / index.total_params
+
+
+def build_prefill_setup(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                        *, attn_impl: str = "chunked") -> StepSetup:
+    rules = _rules_for(mesh, cfg)
+    dp = rules.dp_axes
+    params = specs_lib.params_abstract(cfg, dtype=jnp.bfloat16)
+    batch = specs_lib.input_specs(cfg, shape)
+
+    def prefill_fn(params, batch):
+        return model_lib.prefill(params, cfg, batch, attn_impl=attn_impl)
+
+    p_specs = _tree_specs(cfg, params, mesh)
+    b_specs = sharding.batch_specs(shape.kind, batch, mesh, dp)
+    return StepSetup(
+        name=f"{cfg.name}:{shape.name}", fn=prefill_fn,
+        args=(params, batch), in_shardings=(p_specs, b_specs), rules=rules,
+        meta={"kind": "prefill"})
+
+
+def build_decode_setup(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                       *, attn_impl: str = "chunked") -> StepSetup:
+    rules = _rules_for(mesh, cfg)
+    dp = rules.dp_axes
+    params = specs_lib.params_abstract(cfg, dtype=jnp.bfloat16)
+    cache = specs_lib.cache_specs_abstract(cfg, shape)
+    io = specs_lib.input_specs(cfg, shape)
+
+    def decode_fn(params, cache, token, pos):
+        return model_lib.decode_step(params, cfg, cache, token, pos,
+                                     attn_impl=attn_impl)
+
+    p_specs = _tree_specs(cfg, params, mesh)
+    c_specs = sharding.cache_specs(cfg, cache, mesh, dp)
+    t_specs = sharding.batch_specs(shape.kind, io["token"], mesh, dp)
+    return StepSetup(
+        name=f"{cfg.name}:{shape.name}", fn=decode_fn,
+        args=(params, cache, io["token"], io["pos"]),
+        in_shardings=(p_specs, c_specs, t_specs, _replicated(mesh)),
+        rules=rules, donate=(1,), meta={"kind": "decode"})
+
+
+def build_setup(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                **kw) -> StepSetup:
+    if shape.kind == "train":
+        return build_train_setup(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_setup(cfg, shape, mesh, **kw)
+    return build_decode_setup(cfg, shape, mesh, **kw)

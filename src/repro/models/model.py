@@ -1,0 +1,624 @@
+"""Model zoo dispatcher: ``ModelConfig`` -> pure (init / forward / decode).
+
+Layer stacking: the decoder is partitioned into *stages* (``cfg.stages()``);
+each stage scans over ``G`` repetitions of a block ``pattern`` with
+parameters stacked ``[G, ...]`` per pattern position.  This keeps the HLO
+small at 26-48 layer depth, makes remat policy uniform, and gives the
+BlockLLM static-BCD mode its gather axis (a "block" = one stacked row).
+
+Modes:
+  train   — full-sequence teacher forcing, returns loss-ready logits.
+  prefill — full sequence, additionally returns the decode cache.
+  decode  — one token against a cache (``pos`` = index of the new token).
+
+Families: dense/moe LMs, VLM (stub patch-embedding frontend), hybrid
+(RG-LRU), SSM (xLSTM), audio (whisper enc-dec with stub conv frontend).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import (
+    BLOCK_GLOBAL_ATTN, BLOCK_LOCAL_ATTN, BLOCK_MLSTM, BLOCK_RECURRENT,
+    BLOCK_SLSTM, ModelConfig)
+from repro.models import layers, moe as moe_lib, rglru, xlstm
+from repro.runtime import shard_ctx, ssm_parallel
+from repro.runtime.moe_parallel import moe_apply_maybe_sharded
+
+Pytree = Any
+
+ATTN_BLOCKS = (BLOCK_GLOBAL_ATTN, BLOCK_LOCAL_ATTN)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _block_init(key, cfg: ModelConfig, btype: str, *, cross=False):
+    ks = jax.random.split(key, 6)
+    if btype in ATTN_BLOCKS:
+        p = {
+            "ln1": layers.norm_init(cfg.d_model),
+            "attn": layers.attention_init(ks[0], cfg),
+            "ln2": layers.norm_init(cfg.d_model),
+        }
+        if cfg.num_experts:
+            p["moe"] = moe_lib.moe_init(ks[1], cfg)
+        elif cfg.d_ff:
+            p["mlp"] = layers.mlp_init(ks[1], cfg)
+        if cross:
+            p["lnx"] = layers.norm_init(cfg.d_model)
+            p["xattn"] = layers.attention_init(ks[2], cfg, cross=True)
+        return p
+    if btype == BLOCK_RECURRENT:
+        return {
+            "ln1": layers.norm_init(cfg.d_model),
+            "rec": rglru.block_init(ks[0], cfg),
+            "ln2": layers.norm_init(cfg.d_model),
+            "mlp": layers.mlp_init(ks[1], cfg),
+        }
+    if btype == BLOCK_MLSTM:
+        return xlstm.mlstm_init(ks[0], cfg)
+    if btype == BLOCK_SLSTM:
+        return xlstm.slstm_init(ks[0], cfg)
+    raise ValueError(btype)
+
+
+def _stage_init(key, cfg, pattern, n_groups, *, cross=False):
+    """Stacked params: {posJ: pytree with leading [n_groups] axis}."""
+    out = {}
+    for j, btype in enumerate(pattern):
+        ks = jax.random.split(jax.random.fold_in(key, j), n_groups)
+        stacked = jax.vmap(
+            lambda k: _block_init(k, cfg, btype, cross=cross))(ks)
+        out[f"pos{j}"] = stacked
+    return out
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Pytree:
+    ks = jax.random.split(key, 8)
+    p: dict = {
+        "embed": jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model)) * 0.02,
+        "final_norm": layers.norm_init(cfg.d_model),
+        "stages": [
+            _stage_init(jax.random.fold_in(ks[1], si), cfg, pattern, groups,
+                        cross=cfg.is_encoder_decoder)
+            for si, (pattern, groups) in enumerate(cfg.stages())
+        ],
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = jax.random.normal(ks[2], (cfg.d_model, cfg.vocab_size)) * 0.02
+    if cfg.vision_embed_dim:
+        p["vision_proj"] = layers.dense_init(
+            ks[3], cfg.vision_embed_dim, cfg.d_model)
+    if cfg.is_encoder_decoder:
+        enc_cfg = cfg.replace(num_layers=cfg.num_encoder_layers,
+                              pattern=(BLOCK_GLOBAL_ATTN,), num_experts=0,
+                              is_encoder_decoder=False,
+                              num_kv_heads=cfg.num_heads)  # encoder is MHA
+        p["encoder"] = {
+            "frontend": layers.dense_init(
+                ks[4], cfg.encoder_feature_dim or cfg.d_model, cfg.d_model),
+            "stages": [
+                _stage_init(jax.random.fold_in(ks[5], si), enc_cfg, pat, g)
+                for si, (pat, g) in enumerate(enc_cfg.stages())
+            ],
+            "final_norm": layers.norm_init(cfg.d_model),
+        }
+    if dtype != jnp.float32:
+        p = jax.tree.map(lambda a: a.astype(dtype), p)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# block apply
+# ---------------------------------------------------------------------------
+
+
+def _attn_cache_len(cfg, btype, seq_len):
+    if btype == BLOCK_LOCAL_ATTN:
+        return min(cfg.window_size or seq_len, seq_len)
+    return seq_len
+
+
+def _block_apply(cfg, btype, params, x, *, positions, mode, cache,
+                 enc_out=None, pos=None, attn_impl="chunked"):
+    """Returns (y, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if btype in ATTN_BLOCKS:
+        window = cfg.window_size if btype == BLOCK_LOCAL_ATTN else 0
+        h = layers.rms_norm(params["ln1"], x, cfg.norm_eps)
+        # Megatron-SP gather point: sequence-sharded -> full, in bf16
+        # (without it GSPMD gathers f32 norm internals / MLP weights)
+        h = shard_ctx.constrain(h, "block_in")
+        B, S, D = h.shape
+        H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+        q = (h @ params["attn"]["wq"].astype(h.dtype)).reshape(B, S, H, hd)
+        k = (h @ params["attn"]["wk"].astype(h.dtype)).reshape(B, S, KV, hd)
+        v = (h @ params["attn"]["wv"].astype(h.dtype)).reshape(B, S, KV, hd)
+        if mode != "decode":
+            # Megatron-SP: attention runs head-sharded with full sequence
+            # (one reshard per layer; pruned when heads don't divide)
+            q = shard_ctx.constrain(q, "attn_heads")
+            k = shard_ctx.constrain(k, "attn_kv_heads")
+            v = shard_ctx.constrain(v, "attn_kv_heads")
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+        new_cache = None
+        if mode == "decode":
+            ring = btype == BLOCK_LOCAL_ATTN
+            C = cache["k"].shape[1]
+            pos_b = jnp.broadcast_to(jnp.asarray(pos), (B,))
+            slot = (pos_b % C) if ring else pos_b
+            bidx = jnp.arange(B)
+            ck = cache["k"].at[bidx, slot].set(
+                k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[bidx, slot].set(
+                v[:, 0].astype(cache["v"].dtype))
+            o = layers.attention_decode(q, ck, cv, pos_b, window=window,
+                                        softcap=cfg.attn_softcap, ring=ring)
+            new_cache = {"k": ck, "v": cv}
+        else:
+            if attn_impl == "full" or S <= 2048:
+                o = layers.attention_full(
+                    q, k, v, positions, positions, causal=True, window=window,
+                    softcap=cfg.attn_softcap)
+            else:
+                o = layers.attention_chunked(
+                    q, k, v, positions, positions, causal=True, window=window,
+                    softcap=cfg.attn_softcap)
+            if mode == "prefill":
+                C = _attn_cache_len(cfg, btype, S)
+                if btype == BLOCK_LOCAL_ATTN and C < S:
+                    # ring layout: slot(p) = p % C, matching decode writes
+                    slots = jnp.arange(S - C, S) % C
+                    new_cache = {
+                        "k": jnp.zeros_like(k[:, :C]).at[:, slots].set(
+                            k[:, -C:]),
+                        "v": jnp.zeros_like(v[:, :C]).at[:, slots].set(
+                            v[:, -C:]),
+                    }
+                else:
+                    new_cache = {"k": k[:, -C:], "v": v[:, -C:]}
+        y = o.reshape(B, S, H * hd) @ params["attn"]["wo"].astype(x.dtype)
+        y = shard_ctx.constrain(y, "residual")  # reduce-scatter point
+        x = x + y
+        if enc_out is not None and "xattn" in params:
+            h = layers.rms_norm(params["lnx"], x, cfg.norm_eps)
+            xk, xv = enc_out  # precomputed cross k,v [B, Se, H, hd]
+            xq = (h @ params["xattn"]["wq"].astype(h.dtype)).reshape(B, S, H, hd)
+            Se = xk.shape[1]
+            kp = jnp.broadcast_to(jnp.arange(Se)[None], (B, Se))
+            qp = jnp.zeros((B, S), jnp.int32)  # non-causal cross attention
+            o = layers.attention_full(xq, xk, xv, qp, kp, causal=False)
+            x = x + o.reshape(B, S, H * hd) @ params["xattn"]["wo"].astype(x.dtype)
+        h = layers.rms_norm(params["ln2"], x, cfg.norm_eps)
+        if cfg.num_experts:
+            y, aux = moe_apply_maybe_sharded(params["moe"], h, cfg)
+        elif cfg.d_ff:
+            h = shard_ctx.constrain(h, "block_in")
+            y = layers.mlp_apply(params["mlp"], h, cfg.mlp_type)
+            y = shard_ctx.constrain(y, "residual")
+        else:
+            y = jnp.zeros_like(h)
+        return x + y, new_cache, aux
+
+    if btype == BLOCK_RECURRENT:
+        h = layers.rms_norm(params["ln1"], x, cfg.norm_eps)
+        y, new_cache = rglru.block_apply(params["rec"], h, mode=mode,
+                                         cache=cache)
+        x = x + y
+        h = layers.rms_norm(params["ln2"], x, cfg.norm_eps)
+        return x + layers.mlp_apply(params["mlp"], h, cfg.mlp_type), \
+            new_cache, aux
+
+    if btype == BLOCK_MLSTM:
+        y, new_cache = ssm_parallel.block_shard_map(
+            lambda p, xx, c: xlstm.mlstm_block_apply(p, xx, mode=mode,
+                                                     cache=c),
+            params, x, cache)
+        return x + y, new_cache, aux
+
+    if btype == BLOCK_SLSTM:
+        y, new_cache = ssm_parallel.block_shard_map(
+            lambda p, xx, c: xlstm.slstm_block_apply(p, xx, cfg, mode=mode,
+                                                     cache=c),
+            params, x, cache)
+        return x + y, new_cache, aux
+    raise ValueError(btype)
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               dtype=jnp.bfloat16) -> Pytree:
+    """Decode cache pytree mirroring the stage/scan structure."""
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def block_cache(btype):
+        if btype in ATTN_BLOCKS:
+            C = _attn_cache_len(cfg, btype, seq_len)
+            return {"k": jnp.zeros((batch, C, KV, hd), dtype),
+                    "v": jnp.zeros((batch, C, KV, hd), dtype)}
+        if btype == BLOCK_RECURRENT:
+            return rglru.init_cache(cfg, batch, dtype)
+        if btype == BLOCK_MLSTM:
+            return xlstm.mlstm_init_cache(cfg, batch)
+        if btype == BLOCK_SLSTM:
+            return xlstm.slstm_init_cache(cfg, batch)
+        raise ValueError(btype)
+
+    stages = []
+    for pattern, groups in cfg.stages():
+        st = {}
+        for j, btype in enumerate(pattern):
+            one = block_cache(btype)
+            st[f"pos{j}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (groups,) + a.shape), one)
+        stages.append(st)
+    cache = {"stages": stages}
+    if cfg.is_encoder_decoder:
+        H = cfg.num_heads
+        cache["cross_kv"] = [
+            {f"pos{j}": {"k": jnp.zeros((groups, batch, cfg.encoder_seq_len,
+                                         H, hd), dtype),
+                         "v": jnp.zeros((groups, batch, cfg.encoder_seq_len,
+                                         H, hd), dtype)}
+             for j in range(len(pattern))}
+            for pattern, groups in cfg.stages()]
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# stack apply (scan over stages)
+# ---------------------------------------------------------------------------
+
+
+def _resolve_overlay(gp, g, ov):
+    """Per-layer lazy BCD merge (beyond-paper, EXPERIMENTS.md §Perf I10).
+
+    ``ov`` = {"idx": [K] int32, "rows": pytree [K, ...],
+              "pidx"/"probe": optional probe set}.  Instead of scattering
+    active rows into the full stack up front (whose cotangent is a
+    FULL-SIZE [L, ...] buffer that GSPMD all-reduces at full size), each
+    scan step resolves its own row: gradients accumulate directly at
+    [K, ...] and the DP gradient reduction scales with the active
+    fraction.
+    """
+    def pick(base, idx, rows):
+        # NB: `base` passes through UN-touched on miss — it is either the
+        # stop-gradient'd frozen row or the (differentiable!) result of a
+        # previous pick; re-stop-gradding here would sever sel gradients
+        # whenever a probe set exists (bug caught by
+        # tests/test_blockllm.py::test_mask_sparsity_matches_q).
+        hit = idx == g
+        any_hit = hit.any()
+        p = jnp.argmax(hit)
+        return jax.tree.map(
+            lambda f, a: jnp.where(
+                any_hit, lax.dynamic_index_in_dim(
+                    a, p, 0, keepdims=False).astype(f.dtype), f),
+            base, rows)
+
+    out = jax.tree.map(lax.stop_gradient, gp)
+    if ov.get("rows") is not None:
+        out = pick(out, ov["idx"], ov["rows"])
+    if ov.get("probe") is not None:
+        out = pick(out, ov["pidx"], ov["probe"])
+    return out
+
+
+def _stack_apply(cfg, stage_params, x, *, positions, mode, caches=None,
+                 cross_kv=None, enc_present=False, attn_impl="chunked",
+                 pos=None, overlay=None):
+    """Scan the staged block stack.  Returns (x, new_caches, aux).
+
+    ``overlay``: optional {sid: {"idx", "rows", "pidx", "probe"}} — the
+    BlockLLM active/probe rows, resolved lazily per layer (see
+    ``_resolve_overlay``).
+    """
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for si, (pattern, groups) in enumerate(cfg.stages()):
+        sp = stage_params[si]
+        scache = caches[si] if caches is not None else None
+        sxkv = cross_kv[si] if cross_kv is not None else None
+        sov = {f"pos{j}": (overlay or {}).get(f"s{si}/pos{j}")
+               for j in range(len(pattern))}
+
+        def body(carry, per_group):
+            h, aux = carry
+            h = shard_ctx.constrain(h, "residual")  # sequence parallelism
+            gp, gc, gx, g = per_group
+            new_gc = {}
+            for j, btype in enumerate(pattern):
+                cj = gc[f"pos{j}"] if gc is not None else None
+                ex = None
+                if enc_present and btype in ATTN_BLOCKS:
+                    ex = (gx[f"pos{j}"]["k"], gx[f"pos{j}"]["v"]) \
+                        if gx is not None else None
+                bp = gp[f"pos{j}"]
+                if sov[f"pos{j}"] is not None:
+                    bp = _resolve_overlay(bp, g, sov[f"pos{j}"])
+                h, cj_new, a = _block_apply(
+                    cfg, btype, bp, h, positions=positions,
+                    mode=mode, cache=cj, enc_out=ex, pos=pos,
+                    attn_impl=attn_impl)
+                if cj_new is not None:
+                    new_gc[f"pos{j}"] = cj_new
+                aux = aux + a
+            return (h, aux), (new_gc if new_gc else None)
+
+        if cfg.remat and mode == "train":
+            body = jax.checkpoint(body, prevent_cse=False)
+        (x, aux_total), out_caches = lax.scan(
+            body, (x, aux_total),
+            (sp, scache, sxkv, jnp.arange(groups, dtype=jnp.int32)))
+        new_caches.append(out_caches)
+    return x, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, cfg, tokens, *, patch_embeds=None, base_pos=0):
+    x = params["embed"].astype(_cdtype(cfg))[tokens]
+    if patch_embeds is not None:
+        proj = (patch_embeds.astype(x.dtype)
+                @ params["vision_proj"].astype(x.dtype))
+        P = proj.shape[1]
+        x = jnp.concatenate([proj, x[:, P:]], axis=1)  # multimodal packing
+    if not cfg.rope_theta:  # absolute (whisper): sinusoidal positions
+        S = x.shape[1]
+        pe = layers.sinusoidal_positions(S + base_pos, cfg.d_model, x.dtype)
+        x = x + pe[base_pos:base_pos + S]
+    return x
+
+
+def _unembed(params, cfg, x):
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].astype(x.dtype).T
+    else:
+        logits = x @ params["head"].astype(x.dtype)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits
+
+
+def _cdtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# encoder (whisper)
+# ---------------------------------------------------------------------------
+
+
+def _encode(params, cfg, frames, attn_impl="chunked"):
+    enc = params["encoder"]
+    x = frames.astype(_cdtype(cfg)) @ enc["frontend"].astype(_cdtype(cfg))
+    S = x.shape[1]
+    x = x + layers.sinusoidal_positions(S, cfg.d_model, x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], x.shape[:2])
+    enc_cfg = cfg.replace(num_layers=cfg.num_encoder_layers,
+                          pattern=(BLOCK_GLOBAL_ATTN,), num_experts=0,
+                          is_encoder_decoder=False, rope_theta=0.0,
+                          num_kv_heads=cfg.num_heads)  # encoder is MHA
+
+    for si, (pattern, groups) in enumerate(enc_cfg.stages()):
+        sp = enc["stages"][si]
+
+        def body(h, gp):
+            hn = layers.rms_norm(gp["pos0"]["ln1"], h, cfg.norm_eps)
+            B, S, D = hn.shape
+            H, hd = cfg.num_heads, cfg.resolved_head_dim
+            a = gp["pos0"]["attn"]
+            q = (hn @ a["wq"].astype(hn.dtype)).reshape(B, S, H, hd)
+            k = (hn @ a["wk"].astype(hn.dtype)).reshape(B, S, H, hd)
+            v = (hn @ a["wv"].astype(hn.dtype)).reshape(B, S, H, hd)
+            o = layers.attention_full(q, k, v, positions, positions,
+                                      causal=False)
+            h = h + o.reshape(B, S, H * hd) @ a["wo"].astype(h.dtype)
+            hn = layers.rms_norm(gp["pos0"]["ln2"], h, cfg.norm_eps)
+            h = h + layers.mlp_apply(gp["pos0"]["mlp"], hn, cfg.mlp_type)
+            return h, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = lax.scan(body, x, sp)
+    return layers.rms_norm(enc["final_norm"], x, cfg.norm_eps)
+
+
+def _cross_kv(params, cfg, enc_out):
+    """Precompute per-decoder-layer cross k/v from encoder output."""
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    B, Se, D = enc_out.shape
+    out = []
+    for si, (pattern, groups) in enumerate(cfg.stages()):
+        sp = params["stages"][si]
+        st = {}
+        for j in range(len(pattern)):
+            xa = sp[f"pos{j}"]["xattn"]  # stacked [G, ...]
+            k = jnp.einsum("bsd,gde->gbse", enc_out,
+                           xa["wk"].astype(enc_out.dtype))
+            v = jnp.einsum("bsd,gde->gbse", enc_out,
+                           xa["wv"].astype(enc_out.dtype))
+            st[f"pos{j}"] = {"k": k.reshape(groups, B, Se, H, hd),
+                             "v": v.reshape(groups, B, Se, H, hd)}
+        out.append(st)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+
+def forward(params, cfg: ModelConfig, batch, *, mode="train",
+            attn_impl="chunked", return_hidden=False, overlay=None):
+    """Full-sequence forward.  Returns (logits|hidden, aux, caches|None)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x = _embed(params, cfg, tokens, patch_embeds=batch.get("patch_embeds"))
+    cross_kv = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encode(params, cfg, batch["frames"], attn_impl)
+        cross_kv = _cross_kv(params, cfg, enc_out)
+    x, caches, aux = _stack_apply(
+        cfg, params["stages"], x, positions=positions,
+        mode=mode, cross_kv=cross_kv, enc_present=cfg.is_encoder_decoder,
+        attn_impl=attn_impl, overlay=overlay)
+    x = layers.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    out = x if return_hidden else _unembed(params, cfg, x)
+    if mode == "prefill":
+        cache = {"stages": caches}
+        if cross_kv is not None:
+            cache["cross_kv"] = cross_kv
+        return out, aux, cache
+    return out, aux, None
+
+
+def _labels_mask(batch):
+    tokens = batch["tokens"]
+    labels = batch.get("labels")
+    if labels is None:
+        labels = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+        mask = jnp.concatenate(
+            [jnp.ones_like(tokens[:, 1:]), jnp.zeros_like(tokens[:, :1])],
+            axis=1).astype(jnp.float32)
+    else:
+        mask = (labels >= 0).astype(jnp.float32)
+        labels = jnp.maximum(labels, 0)
+    return labels, mask
+
+
+def _xent_from_logits(logits, labels, mask):
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return ((logz - gold) * mask).sum()
+
+
+def _chunked_xent(params, cfg, hidden, labels, mask, chunk):
+    """Cross entropy without materializing [B, S, V] logits.
+
+    Scans the sequence in chunks; each chunk's logits are rematerialized in
+    the backward pass (jax.checkpoint) => peak logits memory is
+    [B, chunk, V] instead of [B, S, V].  Beyond-paper memory optimization
+    (DESIGN.md §5) — exact same math as the direct path (tested).
+    """
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk -= 1
+    n = S // chunk
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def piece(carry, xs):
+        xc, lc, mc = xs  # [B, chunk, D], [B, chunk], [B, chunk]
+        logits = _unembed(params, cfg, xc)
+        return carry + _xent_from_logits(logits, lc, mc), None
+
+    xs = (hidden.reshape(B, n, chunk, D).swapaxes(0, 1),
+          labels.reshape(B, n, chunk).swapaxes(0, 1),
+          mask.reshape(B, n, chunk).swapaxes(0, 1))
+    total, _ = lax.scan(piece, jnp.zeros((), jnp.float32), xs)
+    return total
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, attn_impl="chunked",
+            loss_chunk=None, overlay=None):
+    """Next-token cross entropy (+ MoE aux).  Returns (loss, metrics).
+
+    ``loss_chunk``: None => auto (chunked when S*V is large); 0 => direct.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    labels, mask = _labels_mask(batch)
+    if loss_chunk is None:
+        loss_chunk = 512 if S * cfg.vocab_size > (1 << 27) else 0
+    if loss_chunk:
+        hidden, aux, _ = forward(params, cfg, batch, mode="train",
+                                 attn_impl=attn_impl, return_hidden=True,
+                                 overlay=overlay)
+        nll_sum = _chunked_xent(params, cfg, hidden, labels, mask, loss_chunk)
+    else:
+        logits, aux, _ = forward(params, cfg, batch, mode="train",
+                                 attn_impl=attn_impl, overlay=overlay)
+        nll_sum = _xent_from_logits(logits, labels, mask)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    nll = nll_sum / denom
+    loss = nll + aux
+    metrics = {"nll": nll, "aux": aux, "tokens": mask.sum()}
+    return loss, metrics
+
+
+def prefill(params, cfg, batch, *, attn_impl="chunked"):
+    logits, _, cache = forward(params, cfg, batch, mode="prefill",
+                               attn_impl=attn_impl)
+    return logits[:, -1], cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos,
+                *, attn_impl="chunked"):
+    """One decode step.  token [B,1] int32; pos = scalar int32 or [B]
+    per-slot positions (slot-batched serving).
+
+    Returns (logits [B, vocab], new_cache).
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    B = token.shape[0]
+    pos_b = jnp.broadcast_to(pos, (B,))
+    positions = pos_b[:, None]
+    x = params["embed"].astype(_cdtype(cfg))[token]
+    if not cfg.rope_theta:  # absolute positions: sinusoidal rows at pos_b
+        d = cfg.d_model
+        div = jnp.exp(jnp.arange(0, d, dtype=jnp.float32)[0::2]
+                      * (-math.log(10000.0) / d))
+        ang = pos_b[:, None].astype(jnp.float32) * div[None]  # [B, d/2]
+        pe = jnp.zeros((B, d), jnp.float32).at[:, 0::2].set(jnp.sin(ang))
+        pe = pe.at[:, 1::2].set(jnp.cos(ang))
+        x = x + pe[:, None, :].astype(x.dtype)
+    x, new_stage_caches, _ = _stack_apply(
+        cfg, params["stages"], x, positions=positions, mode="decode",
+        caches=cache["stages"], cross_kv=cache.get("cross_kv"),
+        enc_present=cfg.is_encoder_decoder, pos=pos_b, attn_impl=attn_impl)
+    x = layers.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = _unembed(params, cfg, x)
+    new_cache = dict(cache)
+    new_cache["stages"] = new_stage_caches
+    return logits[:, 0], new_cache
+
+
+def param_labels(cfg: ModelConfig, params) -> list:
+    """Flat list of selectable block-unit labels (BlockLLM granularity).
+
+    One label per (stage, pos, group) = one real layer, plus 'embed',
+    'head', 'encoder' and 'final_norm' units.
+    """
+    labels = ["embed", "final_norm"]
+    if "head" in params:
+        labels.append("head")
+    if "vision_proj" in params:
+        labels.append("vision_proj")
+    if "encoder" in params:
+        labels.append("encoder")
+    for si, (pattern, groups) in enumerate(cfg.stages()):
+        for j in range(len(pattern)):
+            for g in range(groups):
+                labels.append(f"s{si}/pos{j}/g{g}")
+    return labels

@@ -1,0 +1,154 @@
+"""Mixture-of-Experts feed-forward (GShard-style capacity dispatch).
+
+Routing: softmax router, top-k experts per token, capacity
+``C = ceil(k * T * capacity_factor / E)`` per token chunk (tokens over
+capacity are dropped — GShard semantics; the pure-jnp *dense* reference
+used in tests computes every expert and proves equality when no token is
+dropped).
+
+Memory structure (measured on the 512-device dry-run):
+- tokens are processed in chunks of ``token_chunk`` under a rematerialized
+  scan — the dispatch/combine intermediates live for one chunk at a time;
+- the combine loops over the k routing slots so no [T*k, D] tensor is ever
+  materialized.
+
+Tensor parallelism: expert counts here (60, 40) do not divide the 16-way
+model axis, so experts are *replicated* across `model` and the per-expert
+hidden dim is sharded (column->row parallel pair with one psum at the end,
+shared expert folded into the same psum) — driven by the fully-manual
+shard_map in ``runtime/moe_parallel.py``; see DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers
+
+
+def moe_init(key, cfg):
+    d, E, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    down_scale = 1.0 / math.sqrt(f) / math.sqrt(2 * cfg.num_layers)
+    p = {
+        "router": layers.dense_init(ks[0], d, E, scale=0.02),
+        "w_gate": jax.random.normal(ks[1], (E, d, f)) * (1.0 / math.sqrt(d)),
+        "w_up": jax.random.normal(ks[2], (E, d, f)) * (1.0 / math.sqrt(d)),
+        "w_down": jax.random.normal(ks[3], (E, f, d)) * down_scale,
+    }
+    if cfg.shared_expert_d_ff:
+        p["shared"] = layers.mlp_init(ks[4], cfg, d_ff=cfg.shared_expert_d_ff)
+    return p
+
+
+def _capacity(T, cfg):
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    c = int(math.ceil(k * T * cfg.capacity_factor / E))
+    return max(8, c)
+
+
+def _moe_chunk(params, xt, cfg, capacity, tp_axis):
+    """One token chunk: xt [T, D] -> (y [T, D] partial, aux scalar)."""
+    T, D = xt.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    C = capacity
+
+    logits = (xt @ params["router"].astype(xt.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                       # [T, E]
+    topw, topi = lax.top_k(probs, k)                              # [T, k]
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = probs.mean(0)
+    ce = jnp.zeros((E,), jnp.float32).at[topi.reshape(-1)].add(1.0) / (T * k)
+    aux = cfg.router_aux_coef * E * jnp.sum(me * ce)
+
+    # rank of each (token, slot) within its expert
+    flat_e = topi.reshape(-1)                                     # [T*k]
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot
+    rank = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    keep = rank < C
+
+    token_id = jnp.arange(T * k) // k
+    disp = jnp.full((E, C), T, jnp.int32)
+    disp = disp.at[flat_e, rank].set(jnp.where(keep, token_id, T),
+                                     mode="drop")
+
+    xpad = jnp.concatenate([xt, jnp.zeros((1, D), xt.dtype)], axis=0)
+    xe = xpad[disp]                                               # [E, C, D]
+    h = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"].astype(xe.dtype))
+    u = jnp.einsum("ecd,edf->ecf", xe, params["w_up"].astype(xe.dtype))
+    ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u,
+                    params["w_down"].astype(xe.dtype))            # [E, C, D]
+
+    # combine: loop over the k slots — no [T*k, D] intermediate
+    y = jnp.zeros((T, D), xt.dtype)
+    rank_k = rank.reshape(T, k)
+    keep_k = keep.reshape(T, k)
+    for j in range(k):
+        ej = topi[:, j]                                           # [T]
+        rj = jnp.minimum(rank_k[:, j], C - 1)
+        wj = jnp.where(keep_k[:, j], topw[:, j], 0.0).astype(xt.dtype)
+        y = y + ye[ej, rj] * wj[:, None]
+
+    if "shared" in params:
+        y = y + layers.mlp_apply(params["shared"], xt, "swiglu")
+    if tp_axis is not None:
+        y = jax.lax.psum(y, tp_axis)
+    return y, aux
+
+
+def moe_apply(params, x, cfg, *, capacity=None, tp_axis=None,
+              token_chunk=8192):
+    """x [B, S, D] -> (y [B, S, D], aux_loss scalar).
+
+    Tokens are flattened and processed in rematerialized chunks; capacity
+    is per chunk.  ``tp_axis``: see module docstring.
+    """
+    B, S, D = x.shape
+    T = B * S
+    xt = x.reshape(T, D)
+    chunk = min(token_chunk, T)
+    while T % chunk:
+        chunk -= 1
+    C = capacity if capacity else _capacity(chunk, cfg)
+    if chunk == T:
+        y, aux = _moe_chunk(params, xt, cfg, C, tp_axis)
+        return y.reshape(B, S, D), aux
+
+    n = T // chunk
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def piece(carry, xc):
+        y, aux = _moe_chunk(params, xc, cfg, C, tp_axis)
+        return carry + aux, y
+
+    aux, ys = lax.scan(piece, jnp.zeros((), jnp.float32),
+                       xt.reshape(n, chunk, D))
+    return ys.reshape(B, S, D), aux / n
+
+
+def moe_apply_dense_ref(params, x, cfg):
+    """Exact dense reference: every expert on every token (tests only)."""
+    B, S, D = x.shape
+    xt = x.reshape(B * S, D)
+    logits = (xt @ params["router"].astype(xt.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    k = cfg.num_experts_per_tok
+    topw, topi = lax.top_k(probs, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    gate = jnp.zeros_like(probs).at[
+        jnp.arange(xt.shape[0])[:, None], topi].set(topw)  # [T,E]
+    h = jnp.einsum("td,edf->etf", xt, params["w_gate"].astype(xt.dtype))
+    u = jnp.einsum("td,edf->etf", xt, params["w_up"].astype(xt.dtype))
+    ye = jnp.einsum("etf,efd->etd", jax.nn.silu(h) * u,
+                    params["w_down"].astype(xt.dtype))
+    y = jnp.einsum("te,etd->td", gate.astype(xt.dtype), ye)
+    if "shared" in params:
+        y = y + layers.mlp_apply(params["shared"], xt, "swiglu")
+    return y.reshape(B, S, D), jnp.zeros((), jnp.float32)

@@ -1,0 +1,118 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)               (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)               (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)     (log-space decay, c=8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The linear recurrence is associative => parallel mode uses
+``lax.associative_scan`` (TPU-friendly log-depth scan); decode mode is a
+single fused step.  The gate projections here are dense (the reference uses
+block-diagonal per-head gates; dense is a strict superset — DESIGN.md §2c).
+
+Block layout (Griffin recurrent block):
+    x -> [linear y-branch (gelu)] ---------------.
+    x -> [linear x-branch] -> conv1d -> RG-LRU --*--> out proj
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers
+
+_C = 8.0
+
+
+def rglru_init(key, cfg):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 7)
+    # Lambda init so that a = exp(-c*softplus(L)*r) spreads over (0.9, 0.999)
+    u = jax.random.uniform(ks[0], (w,), minval=0.9, maxval=0.999)
+    log_a = jnp.log(u)  # target log decay at r=1
+    lam = jnp.log(jnp.expm1(-log_a / _C))  # softplus^-1(-log_a / c)
+    return {
+        "in_x": layers.dense_init(ks[1], d, w),
+        "in_y": layers.dense_init(ks[2], d, w),
+        "conv": layers.conv1d_init(ks[3], cfg.conv1d_width, w),
+        "gate_a": layers.dense_init(ks[4], w, w, scale=1.0 / math.sqrt(w)),
+        "gate_x": layers.dense_init(ks[5], w, w, scale=1.0 / math.sqrt(w)),
+        "lambda": lam,
+        "out": layers.dense_init(ks[6], w, d,
+                                 scale=1.0 / math.sqrt(w) / math.sqrt(2 * cfg.num_layers)),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "b_x": jnp.zeros((w,), jnp.float32),
+    }
+
+
+def _gates(params, x):
+    r = jax.nn.sigmoid(x @ params["gate_a"].astype(x.dtype)
+                       + params["b_a"].astype(x.dtype))
+    i = jax.nn.sigmoid(x @ params["gate_x"].astype(x.dtype)
+                       + params["b_x"].astype(x.dtype))
+    log_a = -_C * jax.nn.softplus(params["lambda"]).astype(jnp.float32) \
+        * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, (mult * i.astype(jnp.float32) * x.astype(jnp.float32))
+
+
+def rglru_scan(params, x, h0=None):
+    """x [B,S,W] -> (y [B,S,W], h_last [B,W]). Parallel associative scan."""
+    B, S, W = x.shape
+    a, bx = _gates(params, x)  # both [B,S,W] fp32
+    if h0 is not None:
+        # fold initial state in as a virtual step: h_0 contributes a-prefix
+        bx = bx.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = lax.associative_scan(combine, (a, bx), axis=1)
+    return hh.astype(x.dtype), hh[:, -1]
+
+
+def rglru_step(params, x_t, h):
+    """Decode: x_t [B,W], h [B,W] -> (y [B,W], h')."""
+    a, bx = _gates(params, x_t[:, None, :])
+    h_new = a[:, 0] * h.astype(jnp.float32) + bx[:, 0]
+    return h_new.astype(x_t.dtype), h_new
+
+
+def block_init(key, cfg):
+    return rglru_init(key, cfg)
+
+
+def block_apply(params, x, *, mode, cache=None):
+    """Full Griffin recurrent block.  x [B,S,D].
+
+    cache = {"h": [B,W] fp32, "conv": [B, cw-1, W]} for decode.
+    Returns (y [B,S,D], new_cache).
+    """
+    y_branch = jax.nn.gelu(x @ params["in_y"].astype(x.dtype), approximate=True)
+    xb = x @ params["in_x"].astype(x.dtype)
+    if mode == "decode":
+        xb, conv_state = layers.causal_conv1d(params["conv"], xb,
+                                              state=cache["conv"])
+        out, h = rglru_step(params, xb[:, 0], cache["h"])
+        out = out[:, None, :]
+        new_cache = {"h": h, "conv": conv_state}
+    else:
+        xb, conv_state = layers.causal_conv1d(params["conv"], xb)
+        out, h = rglru_scan(params, xb)
+        new_cache = {"h": h, "conv": conv_state} if mode == "prefill" else None
+    out = out * y_branch
+    return out @ params["out"].astype(x.dtype), new_cache
+
+
+def init_cache(cfg, batch, dtype=jnp.bfloat16):
+    w = cfg.lru_width or cfg.d_model
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv1d_width - 1, w), dtype)}

@@ -1,0 +1,312 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM.
+
+mLSTM recurrence (per head, exp input gate, exp forget gate, stabilized):
+    C_t = f_t C_{t-1} + i_t k_t v_t^T        (matrix memory [hd, hd])
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = (C_t^T q_t) / max(|n_t . q_t|, exp(-m_t))
+
+Training/prefill uses a **chunkwise-parallel** form (intra-chunk quadratic,
+inter-chunk recurrent over the chunk grid) with log-space stabilizers —
+the TPU-friendly factorization (MXU-sized intra-chunk matmuls, a short scan
+across chunks).  ``mlstm_recurrent_ref`` is the naive per-step oracle used
+by the tests.
+
+sLSTM keeps a scalar memory per channel with block-diagonal (per-head)
+recurrent gate weights — inherently sequential => lax.scan over time.
+
+Block wiring (projection factor 2 for mLSTM; d_ff=0 per the assigned
+config — no separate FFN):
+    x -> RMSNorm -> up(d->2i), split (z, g)
+         z -> per-head qkv -> mLSTM -> GN -> * silu(g) -> down(i->d)
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg):
+    d, H = cfg.d_model, cfg.num_heads
+    i = 2 * d  # projection factor 2
+    hd = i // H
+    ks = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(hd)
+    return {
+        "norm": layers.norm_init(d),
+        "w_up": layers.dense_init(ks[0], d, 2 * i),
+        "wq": jax.random.normal(ks[1], (H, hd, hd)) * s,
+        "wk": jax.random.normal(ks[2], (H, hd, hd)) * s,
+        "wv": jax.random.normal(ks[3], (H, hd, hd)) * s,
+        "w_if": layers.dense_init(ks[4], d, 2 * H, scale=0.02),
+        "b_i": jnp.full((H,), -2.0),   # small input gate at init
+        "b_f": jnp.full((H,), 3.0),    # forget gate near 1 at init
+        "gn": layers.norm_init(i),
+        "w_down": layers.dense_init(
+            ks[5], i, d, scale=1.0 / math.sqrt(i) / math.sqrt(2 * cfg.num_layers)),
+    }
+
+
+def _mlstm_qkvg(params, x):
+    """x [B,S,D] -> q,k,v [B,S,H,hd], log-gates li, lf [B,S,H], gate g, inner i."""
+    B, S, D = x.shape
+    xn = layers.rms_norm(params["norm"], x)
+    u = xn @ params["w_up"].astype(x.dtype)  # [B,S,2i]
+    i_dim = u.shape[-1] // 2
+    z, g = jnp.split(u, 2, axis=-1)
+    H = params["wq"].shape[0]
+    hd = i_dim // H
+    zh = z.reshape(B, S, H, hd)
+    q = jnp.einsum("bshd,hde->bshe", zh, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bshd,hde->bshe", zh, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bshd,hde->bshe", zh, params["wv"].astype(x.dtype))
+    gates = (xn @ params["w_if"].astype(x.dtype)).astype(jnp.float32)
+    li = gates[..., :H] + params["b_i"]              # log input gate (pre-exp)
+    lf = jax.nn.log_sigmoid(gates[..., H:] + params["b_f"])  # log forget in (-inf,0)
+    return q, k, v, li, lf, g, i_dim
+
+
+def mlstm_chunkwise(q, k, v, li, lf, *, chunk=256, state=None):
+    """Chunkwise-parallel stabilized mLSTM.
+
+    q,k,v [B,S,H,hd]; li,lf [B,S,H] log gates.
+    state: optional (C [B,H,hd,hd], n [B,H,hd], m [B,H]).
+    Returns (h [B,S,H,hd], final state).
+    """
+    B, S, H, hd = q.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    scale = 1.0 / math.sqrt(hd)
+
+    # reshape to chunks; move head dim forward: [B,H,nc,K,...]
+    qc = q.reshape(B, nc, chunk, H, hd).transpose(0, 3, 1, 2, 4)  # [B,H,nc,K,hd]
+    kc = k.reshape(B, nc, chunk, H, hd).transpose(0, 3, 1, 2, 4)
+    vc = v.reshape(B, nc, chunk, H, hd).transpose(0, 3, 1, 2, 4)
+    lic = li.reshape(B, nc, chunk, H).transpose(0, 3, 1, 2)  # [B,H,nc,K]
+    lfc = lf.reshape(B, nc, chunk, H).transpose(0, 3, 1, 2)
+
+    b = jnp.cumsum(lfc, axis=-1)  # local cumulative log-decay incl. step j
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    idx = jnp.arange(chunk)
+    tri = idx[:, None] >= idx[None, :]  # [K,K] causal within chunk
+
+    def chunk_step(carry, inp):
+        C, n, m = carry  # [B,H,hd,hd], [B,H,hd], [B,H]
+        qj, kj, vj, lij, bj = inp  # [B,H,K,hd] x3, [B,H,K] x2
+        # stabilizers
+        m_inter = m[..., None] + bj                                  # [B,H,K]
+        intra_log = lij[..., None, :] + bj[..., :, None] - bj[..., None, :]
+        intra_log = jnp.where(tri, intra_log, -jnp.inf)              # [B,H,K,K]
+        m_intra = intra_log.max(-1)                                  # [B,H,K]
+        mj = jnp.maximum(m_inter, m_intra)
+        mj = jnp.maximum(mj, -1e30)  # keep finite
+
+        # inter-chunk contribution
+        w_inter = jnp.exp(m_inter - mj)                              # [B,H,K]
+        qf = qj.astype(jnp.float32) * scale
+        h_inter = jnp.einsum("bhkd,bhde->bhke", qf, C) * w_inter[..., None]
+        n_inter = jnp.einsum("bhkd,bhd->bhk", qf, n) * w_inter
+
+        # intra-chunk contribution
+        sc = jnp.exp(intra_log - mj[..., None])                       # [B,H,K,K]
+        logits = jnp.einsum("bhkd,bhjd->bhkj", qf, kj.astype(jnp.float32))
+        a = sc * logits
+        h_intra = jnp.einsum("bhkj,bhjd->bhkd", a, vj.astype(jnp.float32))
+        n_intra = a.sum(-1)
+
+        denom = jnp.maximum(jnp.abs(n_inter + n_intra), jnp.exp(-mj))
+        h = (h_inter + h_intra) / denom[..., None]
+
+        # state update to end of chunk
+        Bc = bj[..., -1]                                             # [B,H]
+        m_state_cand = (lij + Bc[..., None] - bj).max(-1)            # [B,H]
+        m_new = jnp.maximum(m + Bc, m_state_cand)
+        m_new = jnp.maximum(m_new, -1e30)
+        w_old = jnp.exp(m + Bc - m_new)                              # [B,H]
+        wk_ = jnp.exp(lij + Bc[..., None] - bj - m_new[..., None])   # [B,H,K]
+        kf = kj.astype(jnp.float32)
+        vf = vj.astype(jnp.float32)
+        C_new = C * w_old[..., None, None] + jnp.einsum(
+            "bhk,bhkd,bhke->bhde", wk_, kf, vf)
+        n_new = n * w_old[..., None] + jnp.einsum("bhk,bhkd->bhd", wk_, kf)
+        return (C_new, n_new, m_new), h
+
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in (qc, kc, vc, lic, b))
+    (Cf, nf, mf), hs = lax.scan(chunk_step, (C0, n0, m0), xs)
+    # hs [nc,B,H,K,hd] -> [B,S,H,hd]
+    h = jnp.moveaxis(hs, 0, 2).reshape(B, H, S, hd).swapaxes(1, 2)
+    return h.astype(q.dtype), (Cf, nf, mf)
+
+
+def mlstm_step(q, k, v, li, lf, state):
+    """Single decode step. q,k,v [B,H,hd]; li,lf [B,H]."""
+    C, n, m = state
+    hd = q.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+    m_new = jnp.maximum(lf + m, li)
+    m_new = jnp.maximum(m_new, -1e30)
+    fw = jnp.exp(lf + m - m_new)
+    iw = jnp.exp(li - m_new)
+    kf, vf, qf = (a.astype(jnp.float32) for a in (k, v, q))
+    C_new = C * fw[..., None, None] + iw[..., None, None] * (
+        kf[..., :, None] * vf[..., None, :])
+    n_new = n * fw[..., None] + iw[..., None] * kf
+    qs = qf * scale
+    num = jnp.einsum("bhd,bhde->bhe", qs, C_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qs, n_new)),
+                      jnp.exp(-m_new))
+    h = num / den[..., None]
+    return h.astype(q.dtype), (C_new, n_new, m_new)
+
+
+def mlstm_recurrent_ref(q, k, v, li, lf, state=None):
+    """Naive per-step oracle (tests). Shapes as mlstm_chunkwise."""
+    B, S, H, hd = q.shape
+    if state is None:
+        state = (jnp.zeros((B, H, hd, hd), jnp.float32),
+                 jnp.zeros((B, H, hd), jnp.float32),
+                 jnp.full((B, H), -jnp.inf, jnp.float32))
+
+    def step(st, inp):
+        qt, kt, vt, lit, lft = inp
+        h, st2 = mlstm_step(qt, kt, vt, lit, lft, st)
+        return st2, h
+
+    xs = (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0),
+          jnp.moveaxis(li, 1, 0), jnp.moveaxis(lf, 1, 0))
+    stf, hs = lax.scan(step, state, xs)
+    return jnp.moveaxis(hs, 0, 1), stf
+
+
+def mlstm_block_apply(params, x, *, mode, cache=None, chunk=256):
+    B, S, D = x.shape
+    q, k, v, li, lf, g, i_dim = _mlstm_qkvg(params, x)
+    if mode == "decode":
+        h, st = mlstm_step(q[:, 0], k[:, 0], v[:, 0], li[:, 0], lf[:, 0],
+                           cache)
+        h = h[:, None]  # [B,1,H,hd]
+        new_cache = st
+    else:
+        h, st = mlstm_chunkwise(q, k, v, li, lf, chunk=min(chunk, S),
+                                state=cache)
+        new_cache = st if mode == "prefill" else None
+    hflat = h.reshape(B, -1, i_dim)
+    hflat = layers.rms_norm(params["gn"], hflat)
+    out = (hflat * jax.nn.silu(g)) @ params["w_down"].astype(x.dtype)
+    return out, new_cache
+
+
+def mlstm_init_cache(cfg, batch):
+    H = cfg.num_heads
+    hd = (2 * cfg.d_model) // H
+    return (jnp.zeros((batch, H, hd, hd), jnp.float32),
+            jnp.zeros((batch, H, hd), jnp.float32),
+            jnp.full((batch, H), -jnp.inf, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg):
+    d, H = cfg.d_model, cfg.num_heads
+    hd = d // H
+    ks = jax.random.split(key, 10)
+    p = {"norm": layers.norm_init(d), "gn": layers.norm_init(d)}
+    for gi, gate in enumerate(("i", "f", "z", "o")):
+        p[f"w_{gate}"] = layers.dense_init(ks[gi], d, d, scale=0.02)
+        p[f"r_{gate}"] = jax.random.normal(ks[4 + gi], (H, hd, hd)) * (
+            1.0 / math.sqrt(hd))
+        p[f"b_{gate}"] = (jnp.full((d,), 3.0) if gate == "f"
+                          else jnp.zeros((d,)))
+    p["w_down"] = layers.dense_init(
+        ks[8], d, d, scale=1.0 / math.sqrt(d) / math.sqrt(2 * cfg.num_layers))
+    return p
+
+
+def _slstm_cell(params, xt, state, H, *, wx=None):
+    """xt [B,D]; state (c,n,m,h) each [B,D] fp32.
+
+    ``wx``: optional precomputed input projections [B, 4, D] (i,f,z,o) —
+    the sequence path hoists them out of the time scan (one big matmul
+    instead of 4 per step; in-loop HBM traffic drops to the recurrent
+    r_* matrices only — §Perf I7).
+    """
+    c, n, m, h = state
+    B, D = xt.shape
+    hd = D // H
+    hh = h.reshape(B, H, hd)
+
+    def gate(idx, name):
+        if wx is not None:
+            w = wx[:, idx].astype(jnp.float32)
+        else:
+            w = (xt @ params[f"w_{name}"].astype(xt.dtype)
+                 ).astype(jnp.float32)
+        r = jnp.einsum("bhd,hde->bhe", hh,
+                       params[f"r_{name}"].astype(jnp.float32)).reshape(B, D)
+        return w + r + params[f"b_{name}"]
+
+    it, ft, zt, ot = gate(0, "i"), gate(1, "f"), gate(2, "z"), gate(3, "o")
+    lf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(lf + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(lf + m - m_new)
+    c_new = f_p * c + i_p * jnp.tanh(zt)
+    n_new = jnp.maximum(f_p * n + i_p, 1e-6)
+    h_new = jax.nn.sigmoid(ot) * (c_new / n_new)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_block_apply(params, x, cfg, *, mode, cache=None):
+    B, S, D = x.shape
+    H = cfg.num_heads
+    xn = layers.rms_norm(params["norm"], x)
+    if cache is None:
+        cache = slstm_init_cache(cfg, B)
+    if mode == "decode":
+        st, h = _slstm_cell(params, xn[:, 0], cache, H)
+        hs = h[:, None]
+        new_cache = st
+    else:
+        # hoist the 4 input projections out of the time loop
+        wx_all = jnp.stack(
+            [xn @ params[f"w_{g}"].astype(xn.dtype)
+             for g in ("i", "f", "z", "o")], axis=2)  # [B, S, 4, D]
+
+        def step(st, inp):
+            xt, wxt = inp
+            st2, h = _slstm_cell(params, xt, st, H, wx=wxt)
+            return st2, h
+
+        stf, hs = lax.scan(step, cache,
+                           (jnp.moveaxis(xn, 1, 0),
+                            jnp.moveaxis(wx_all, 1, 0)))
+        hs = jnp.moveaxis(hs, 0, 1)
+        new_cache = stf if mode == "prefill" else None
+    hs = layers.rms_norm(params["gn"], hs.astype(x.dtype))
+    return hs @ params["w_down"].astype(x.dtype), new_cache
+
+
+def slstm_init_cache(cfg, batch):
+    D = cfg.d_model
+    return (jnp.zeros((batch, D), jnp.float32),
+            jnp.full((batch, D), 1e-6, jnp.float32),
+            jnp.full((batch, D), -1e30, jnp.float32),
+            jnp.zeros((batch, D), jnp.float32))

@@ -1,0 +1,121 @@
+"""From-scratch Adam/AdamW over arbitrary pytrees (optax-like API).
+
+``init(params) -> state``; ``update(grads, state, params) -> (new_params,
+state)``.  Moments are kept in fp32 regardless of parameter dtype (mixed
+precision master statistics); the update is cast back to the param dtype.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+class AdamState(NamedTuple):
+    count: jnp.ndarray  # int32 scalar
+    mu: Pytree          # first moments (fp32)
+    nu: Pytree          # second moments (fp32)
+
+
+@dataclass(frozen=True)
+class Adam:
+    lr: Union[float, Schedule] = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0  # AdamW-style decoupled decay
+    clip_norm: float = 0.0     # global-norm clipping, 0 = off
+
+    def init(self, params: Pytree) -> AdamState:
+        z = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamState(jnp.zeros((), jnp.int32), z,
+                         jax.tree.map(jnp.copy, z))
+
+    def _lr(self, count):
+        return self.lr(count) if callable(self.lr) else jnp.asarray(self.lr)
+
+    def processed_grad(self, grads, state):
+        """Adam-preconditioned gradient G~ = m_hat / (sqrt(v_hat)+eps).
+
+        This is the quantity BlockLLM scores layers with (paper eq. 1);
+        exposed so the selection code shares the exact optimizer math.
+        """
+        count = state.count + 1
+        bc1 = 1.0 - self.b1 ** count.astype(jnp.float32)
+        bc2 = 1.0 - self.b2 ** count.astype(jnp.float32)
+
+        def one(g, m, v):
+            g = g.astype(jnp.float32)
+            m2 = self.b1 * m + (1 - self.b1) * g
+            v2 = self.b2 * v + (1 - self.b2) * jnp.square(g)
+            upd = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + self.eps)
+            return upd, m2, v2
+
+        flat, treedef = jax.tree.flatten(grads)
+        mflat = treedef.flatten_up_to(state.mu)
+        vflat = treedef.flatten_up_to(state.nu)
+        out = [one(g, m, v) for g, m, v in zip(flat, mflat, vflat)]
+        upds = treedef.unflatten([o[0] for o in out])
+        mu = treedef.unflatten([o[1] for o in out])
+        nu = treedef.unflatten([o[2] for o in out])
+        return upds, AdamState(count, mu, nu)
+
+    def update(self, grads: Pytree, state: AdamState, params: Pytree,
+               *, update_mask: Optional[Pytree] = None):
+        """Returns (new_params, new_state).
+
+        ``update_mask``: optional pytree of {0,1} arrays (or None leaves)
+        applied multiplicatively to the *update* — the BlockLLM within-layer
+        mask semantics (moments still track the full selected layer).
+        """
+        if self.clip_norm:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gn + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        upds, new_state = self.processed_grad(grads, state)
+        if update_mask is not None:
+            upds = jax.tree.map(
+                lambda u, m: u if m is None else u * m.astype(u.dtype),
+                upds, update_mask, is_leaf=lambda x: x is None)
+        lr = self._lr(state.count)
+
+        def apply(p, u):
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        return jax.tree.map(apply, params, upds), new_state
+
+    def state_bytes(self, state: AdamState) -> int:
+        return sum(a.size * a.dtype.itemsize
+                   for a in jax.tree.leaves((state.mu, state.nu)))
+
+
+def global_norm(tree: Pytree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves))) if leaves else jnp.zeros(())
+
+
+def sgd_momentum(lr=1e-2, momentum=0.9):
+    """Minimal SGD+momentum (used by ablations)."""
+
+    class _S:
+        def init(self, params):
+            return jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def update(self, grads, state, params):
+            new_state = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                state, grads)
+            new_params = jax.tree.map(
+                lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+                params, new_state)
+            return new_params, new_state
+
+    return _S()

@@ -1,0 +1,36 @@
+"""Learning-rate schedules (paper: cosine annealing to 10%, optional warmup).
+
+The paper's pretraining setup uses cosine decay to 10% of peak with no
+warmup for BlockLLM (GaLore gets 10% warmup) — both are expressible here.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine(peak_lr, total_steps, *, warmup_steps=0, final_frac=0.1):
+    total_steps = max(total_steps, 1)
+
+    def sched(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") \
+            else jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        t = jnp.clip((step - warmup_steps)
+                     / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+    return sched
+
+
+def linear_warmup_rsqrt(peak_lr, warmup_steps=1000):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32) + 1
+        return peak_lr * jnp.minimum(step / warmup_steps,
+                                     jnp.sqrt(warmup_steps / step))
+
+    return sched

@@ -1,0 +1,128 @@
+"""Batched decode serving loop (continuous-batching-lite).
+
+A request queue feeds fixed-size decode batches; finished sequences are
+swapped out slot-wise while the rest keep decoding — the slot-batching
+scheme of production LLM servers reduced to its JAX essentials:
+
+- one jitted decode step with **per-slot positions** (slots are at
+  different sequence offsets),
+- an **active-slot mask**: the cache of inactive slots is frozen by a
+  jitted blend (recurrent states would otherwise advance on pad tokens),
+- prompt priming through the same decode step (teacher forcing), with the
+  final prime logits emitting the first generated token — no wasted step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as model_lib
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # [P] int32
+    max_new_tokens: int = 16
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class DecodeServer:
+    def __init__(self, cfg, params, *, batch_slots: int = 4,
+                 max_seq: int = 256, attn_impl: str = "full"):
+        self.cfg = cfg
+        self.params = params
+        self.slots = batch_slots
+        self.max_seq = max_seq
+        self.queue: List[Request] = []
+        self.active: List[Optional[Request]] = [None] * batch_slots
+        self.pos = np.zeros(batch_slots, np.int32)  # next write index
+        self.cache = model_lib.init_cache(cfg, batch_slots, max_seq)
+        self.tokens = np.zeros((batch_slots, 1), np.int32)
+        self.steps = 0
+
+        def _decode(params, cache, token, pos_vec, active_mask):
+            logits, new_cache = model_lib.decode_step(
+                params, cfg, cache, token, pos_vec, attn_impl=attn_impl)
+
+            def blend(n, o):
+                m = active_mask.reshape((1, -1) + (1,) * (n.ndim - 2)) \
+                    if n.ndim >= 2 else active_mask
+                return jnp.where(m, n, o)
+
+            return logits, jax.tree.map(blend, new_cache, cache)
+
+        self._decode = jax.jit(_decode, donate_argnums=(1,))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _mask(self, only: Optional[int] = None) -> np.ndarray:
+        if only is not None:
+            m = np.zeros(self.slots, bool)
+            m[only] = True
+            return m
+        return np.asarray([r is not None for r in self.active])
+
+    def _admit(self):
+        for slot in range(self.slots):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self.active[slot] = req
+                logits = None
+                toks = self.tokens.copy()
+                for t, tok in enumerate(req.prompt):
+                    toks[slot, 0] = int(tok)
+                    pos = self.pos.copy()
+                    pos[slot] = t
+                    logits, self.cache = self._decode(
+                        self.params, self.cache, jnp.asarray(toks),
+                        jnp.asarray(pos), jnp.asarray(self._mask(slot)))
+                # final prime logits predict the first new token
+                first = int(jnp.argmax(logits[slot]))
+                req.out.append(first)
+                self.tokens[slot, 0] = first
+                self.pos[slot] = len(req.prompt)
+                if len(req.out) >= req.max_new_tokens:
+                    req.done = True
+                    self.active[slot] = None
+
+    def step(self) -> int:
+        """One decode step for all active slots; returns #finished."""
+        self._admit()
+        mask = self._mask()
+        if not mask.any():
+            return 0
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.tokens),
+            jnp.asarray(self.pos), jnp.asarray(mask))
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        finished = 0
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(nxt[slot])
+            req.out.append(tok)
+            self.tokens[slot, 0] = tok
+            self.pos[slot] += 1
+            if (len(req.out) >= req.max_new_tokens
+                    or self.pos[slot] >= self.max_seq - 1):
+                req.done = True
+                self.active[slot] = None
+                finished += 1
+        self.steps += 1
+        return finished
+
+    def run_until_drained(self, max_steps=10_000) -> List[Request]:
+        all_reqs = list(self.queue)
+        for _ in range(max_steps):
+            self.step()
+            if not self.queue and all(r is None for r in self.active):
+                break
+        return all_reqs

@@ -1,0 +1,99 @@
+"""Ambient sharding context for model code.
+
+The model definition stays mesh-agnostic; when the distributed launcher
+installs a context, the model applies activation sharding constraints
+(sequence parallelism on the residual stream) and routes MoE dispatch
+through a data-parallel ``shard_map`` island (per-shard capacity — GShard
+semantics; see DESIGN.md §5).
+
+Every constraint is divisibility-checked at trace time and silently
+skipped when a dim does not divide its mesh axes — the fallback that lets
+one rule set serve all 10 architectures.
+"""
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass
+class ShardRules:
+    mesh: Mesh
+    dp_axes: Tuple[str, ...] = ("data",)
+    tp_axis: str = "model"
+    # named activation constraints: name -> PartitionSpec
+    activation_rules: Dict[str, P] = field(default_factory=dict)
+    moe_shard_map: bool = True
+
+    def axis_size(self, axes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        return int(np.prod([self.mesh.shape[a] for a in axes]))
+
+
+_CTX: Optional[ShardRules] = None
+
+
+def get() -> Optional[ShardRules]:
+    return _CTX
+
+
+@contextlib.contextmanager
+def use(rules: Optional[ShardRules]):
+    global _CTX
+    prev = _CTX
+    _CTX = rules
+    try:
+        yield
+    finally:
+        _CTX = prev
+
+
+def fits(shape, spec: P, mesh: Mesh) -> bool:
+    """True iff every sharded dim divides the product of its mesh axes."""
+    for dim, axes in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axes is None:
+            continue
+        ax = (axes,) if isinstance(axes, str) else tuple(axes)
+        size = int(np.prod([mesh.shape[a] for a in ax]))
+        if size > 1 and dim % size != 0:
+            return False
+    return True
+
+
+def prune_spec(shape, spec: P, mesh: Mesh) -> P:
+    """Drop (per-dimension) the axes that do not divide — the fallback."""
+    out = []
+    padded = tuple(spec) + (None,) * (len(shape) - len(spec))
+    for dim, axes in zip(shape, padded):
+        if axes is None:
+            out.append(None)
+            continue
+        ax = (axes,) if isinstance(axes, str) else tuple(axes)
+        keep = []
+        for a in ax:
+            size = int(np.prod([mesh.shape[x] for x in keep + [a]]))
+            if dim % size == 0:
+                keep.append(a)
+        out.append(tuple(keep) if len(keep) > 1 else (keep[0] if keep else None))
+    return P(*out)
+
+
+def constrain(x, name: str):
+    """Apply a named activation constraint if a context is installed."""
+    ctx = _CTX
+    if ctx is None:
+        return x
+    spec = ctx.activation_rules.get(name)
+    if spec is None:
+        return x
+    spec = prune_spec(x.shape, spec, ctx.mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))

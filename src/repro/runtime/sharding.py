@@ -1,0 +1,207 @@
+"""Logical-axis sharding rules with divisibility-aware fallback.
+
+``param_specs`` walks the parameter pytree and assigns a PartitionSpec per
+leaf from its path (MaxText-style logical rules).  Every rule is pruned
+per-dimension against the mesh (``shard_ctx.prune_spec``): a head count or
+vocab that does not divide the model axis falls back to replication for
+that dim — this single mechanism absorbs all the per-arch divisibility
+quirks (granite 24H/16, whisper 20H/16, gemma 4H, 40/60-expert MoEs, odd
+vocabs) without per-arch special cases.  See DESIGN.md §5.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.runtime.shard_ctx import prune_spec
+
+Pytree = Any
+
+TP = "model"
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        k = getattr(p, "key", None)
+        if k is None:
+            k = getattr(p, "name", None)
+        if k is None:
+            k = str(getattr(p, "idx", ""))
+        out.append(str(k))
+    return tuple(out)
+
+
+def _leaf_spec(keys: Tuple[str, ...], shape, cfg, dp_axes) -> P:
+    """Raw (un-pruned) spec for a parameter leaf."""
+    last = keys[-1]
+    nd = len(shape)
+
+    def tail(*spec):
+        """Right-align a spec onto the trailing dims (leading dims unsharded:
+        stack axis G, expert axis handled explicitly below)."""
+        return P(*((None,) * (nd - len(spec)) + spec))
+
+    if last == "embed":
+        return P(TP, None)                      # vocab-sharded
+    if last == "head":
+        return P(None, TP)                      # vocab-sharded output
+    if last in ("wq", "wk", "wv"):
+        if nd >= 3 and shape[-1] == shape[-2]:  # xLSTM per-head [H,hd,hd]
+            return tail(None, TP)
+        return tail(None, TP)                   # column parallel (head dim)
+    if last == "wo":
+        return tail(TP, None)                   # row parallel
+    if last in ("w_gate", "w_up", "in_x", "in_y",
+                "w_i", "w_f", "w_z", "w_o", "gate_a", "gate_x"):
+        return tail(None, TP)                   # column parallel
+    if last in ("w_down", "out"):
+        return tail(TP, None)                   # row parallel
+    if last == "router":
+        return tail(None, None)                 # tiny; replicate
+    if last in ("lambda", "b_a", "b_x"):
+        return tail(TP)                         # follows lru width sharding
+    if last == "w" and "conv" in keys:
+        return tail(None, TP)                   # depthwise conv channels
+    if last == "b" and "conv" in keys:
+        return tail(TP)
+    if last == "frontend":
+        return tail(None, None)
+    if last == "vision_proj" or keys[0] == "vision_proj":
+        return P(None, None)
+    return P(*((None,) * nd))                   # norms, biases, gates: replicate
+
+
+def _head_aware_prune(keys, shape, spec, cfg, mesh) -> P:
+    """Attention q/kv sharding must keep whole heads per shard, else the
+    [B,S,H,hd] reshape forces a regather.  Replicate when heads don't
+    divide the model axis."""
+    last = keys[-1]
+    tp_size = int(mesh.shape[TP])
+    if last == "wq" and not (len(shape) >= 3 and shape[-1] == shape[-2]):
+        heads = cfg.num_heads
+        if "xattn" in keys:
+            heads = cfg.num_heads
+        if heads % tp_size != 0:
+            return P(*((None,) * len(shape)))
+    if last in ("wk", "wv") and not (len(shape) >= 3 and shape[-1] == shape[-2]):
+        heads = cfg.num_heads if "xattn" in keys or "encoder" in keys \
+            else cfg.num_kv_heads
+        if heads % tp_size != 0:
+            return P(*((None,) * len(shape)))
+    if last == "wo":
+        heads = cfg.num_heads
+        if heads % tp_size != 0:
+            return P(*((None,) * len(shape)))
+    return spec
+
+
+def pure_dp(cfg) -> bool:
+    """SSM (mLSTM/sLSTM) archs: 4 heads and a matrix memory make tensor
+    parallelism pathological (measured 228s HBM-term on the baseline —
+    EXPERIMENTS.md §Perf I5).  These run pure-DP over ALL mesh axes:
+    params replicated, batch sharded 256-way.  BlockLLM makes the DP
+    gradient all-reduce affordable: only the active K/L blocks reduce."""
+    return cfg.family == "ssm"
+
+
+def param_specs(cfg, params: Pytree, mesh: Mesh,
+                dp_axes=("data",)) -> Pytree:
+    """NamedSharding pytree for the full parameter tree."""
+    dp_only = pure_dp(cfg)
+
+    def one(path, leaf):
+        keys = _path_keys(path)
+        if dp_only:
+            # everything replicated — TP-sharded embeddings would clash
+            # with the batch-over-model sharding (measured: 1.9 TB of
+            # logits all-reduce when embed/head stayed TP — §Perf I5)
+            return NamedSharding(mesh, P(*((None,) * leaf.ndim)))
+        spec = _leaf_spec(keys, leaf.shape, cfg, dp_axes)
+        spec = _head_aware_prune(keys, leaf.shape, spec, cfg, mesh)
+        spec = prune_spec(leaf.shape, spec, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_specs(shape_kind: str, batch: Pytree, mesh: Mesh,
+                dp_axes=("data",)) -> Pytree:
+    dp = tuple(dp_axes)
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        spec = P(dp, *((None,) * (leaf.ndim - 1)))
+        return NamedSharding(mesh, prune_spec(leaf.shape, spec, mesh))
+
+    return jax.tree.map(one, batch)
+
+
+def cache_specs(cfg, cache: Pytree, mesh: Mesh, dp_axes=("data",)) -> Pytree:
+    """Decode-cache sharding.
+
+    Preference order per leaf: shard batch over dp; if batch == 1 (the
+    long-context cell) shard the *sequence/state* dim over every axis that
+    divides (data+model sequence sharding of the KV cache — GSPMD inserts
+    the softmax-reduction collectives in the decode attention).
+    """
+    dp = tuple(dp_axes)
+    all_axes = dp + (TP,)
+
+    def kv_spec(leaf):
+        # [G, B, C, KV, hd]
+        G, B, C, KV, hd = leaf.shape
+        tp_size = int(mesh.shape[TP])
+        if B % _size(mesh, dp) == 0 and _size(mesh, dp) > 1:
+            if KV % tp_size == 0:
+                spec = P(None, dp, None, TP, None)
+            else:
+                # kv heads don't divide: shard the sequence dim instead
+                # (GSPMD inserts the softmax-reduction collectives)
+                spec = P(None, dp, TP, None, None)
+        else:
+            spec = P(None, None, all_axes, None, None)
+        return prune_spec(leaf.shape, spec, mesh)
+
+    def generic(leaf):
+        # recurrent states: [G, B, ...width] — batch over dp else width
+        if leaf.ndim >= 2 and leaf.shape[1] % _size(mesh, dp) == 0 \
+                and _size(mesh, dp) > 1:
+            spec = P(None, dp, *((None,) * (leaf.ndim - 2)))
+        elif leaf.ndim >= 3:
+            spec = P(*((None,) * (leaf.ndim - 1)), TP)
+        else:
+            spec = P(*((None,) * leaf.ndim))
+        return prune_spec(leaf.shape, spec, mesh)
+
+    def one(path, leaf):
+        keys = _path_keys(path)
+        if keys[-1] in ("k", "v") and leaf.ndim == 5:
+            return NamedSharding(mesh, kv_spec(leaf))
+        return NamedSharding(mesh, generic(leaf))
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def _size(mesh, axes):
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def default_activation_rules(dp_axes=("data",)):
+    """Residual-stream sequence parallelism + head-sharded attention."""
+    dp = tuple(dp_axes)
+    # NOTE: a "block_in" full-sequence gather point was tried and REFUTED
+    # (EXPERIMENTS.md §Perf I2): forcing activation gathers costs more than
+    # the per-layer weight gathers GSPMD picks on its own.
+    return {
+        "residual": P(dp, TP, None),      # [B, S, D]: SP on sequence
+        "attn_heads": P(dp, None, TP, None),     # [B, S, H, hd]
+        "attn_kv_heads": P(dp, None, TP, None),  # [B, S, KV, hd]
+        "logits": P(dp, None, TP),        # [B, S, V]
+        "moe_tokens": P(dp, None, None),
+    }

@@ -1,0 +1,63 @@
+"""Straggler detection & mitigation hooks.
+
+On a real multi-host deployment every host runs this monitor around its
+train step.  Mitigations are deliberately mechanism-not-policy:
+
+- **detect**: per-step wall-time EMA + deviation; a host whose step time
+  exceeds ``threshold x`` the fleet median (gathered via the lightweight
+  all-gather in ``fleet_sync``, or fed externally) is flagged.
+- **mitigate**:
+  * ``skip_data``   — the flagged host serves a zero-weight batch (its
+    gradient contribution masks to zero; the all-reduce stays collective-
+    complete so nothing deadlocks) — implemented via the loss mask.
+  * ``checkpoint_and_exit`` — cooperative eviction: flush a checkpoint
+    and exit with a distinct code so the scheduler can replace the node.
+
+On this single-host container the fleet is simulated (tests inject fake
+timings); the decision logic is identical.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+@dataclass
+class StragglerConfig:
+    ema_alpha: float = 0.1
+    threshold: float = 2.0        # x median
+    warmup_steps: int = 5
+    action: str = "skip_data"     # skip_data | checkpoint_and_exit | none
+
+
+class StragglerMonitor:
+    def __init__(self, cfg: StragglerConfig = StragglerConfig(),
+                 num_hosts: int = 1, host_id: int = 0):
+        self.cfg = cfg
+        self.num_hosts = num_hosts
+        self.host_id = host_id
+        self.ema: Optional[float] = None
+        self.steps = 0
+        self.flagged = False
+        self._t0: Optional[float] = None
+
+    def step_begin(self):
+        self._t0 = time.monotonic()
+
+    def step_end(self, fleet_emas: Optional[List[float]] = None) -> str:
+        """Returns the action to take: 'none' | 'skip_data' | 'evict'."""
+        dt = time.monotonic() - self._t0
+        self.ema = dt if self.ema is None else (
+            self.cfg.ema_alpha * dt + (1 - self.cfg.ema_alpha) * self.ema)
+        self.steps += 1
+        if self.steps < self.cfg.warmup_steps:
+            return "none"
+        emas = fleet_emas if fleet_emas is not None else [self.ema]
+        med = sorted(emas)[len(emas) // 2]
+        self.flagged = self.ema > self.cfg.threshold * max(med, 1e-9)
+        if not self.flagged or self.cfg.action == "none":
+            return "none"
+        if self.cfg.action == "skip_data":
+            return "skip_data"
+        return "evict"

@@ -1,0 +1,138 @@
+"""Fault-tolerant training driver.
+
+Wires together: data pipeline (step-indexed, restart-safe), a trainer
+(BlockLLM / any baseline exposing ``train_step``/``memory_report``),
+atomic checkpointing with auto-resume, straggler monitoring, and crash
+recovery (a simulated-failure test rides on this loop).
+
+BlockLLM state that must survive restart — the norm dictionary, visit
+counts, loss history, current plan indices, step — is serialized into the
+checkpoint meta; arrays (params, active rows, Adam moments, masks) go in
+the array payload.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import checkpointer as ckpt_lib
+from repro.core.blockllm import BlockLLMTrainer
+from repro.runtime.straggler import StragglerConfig, StragglerMonitor
+
+
+@dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    keep_ckpts: int = 3
+    log_every: int = 10
+    straggler: StragglerConfig = dataclasses.field(
+        default_factory=lambda: StragglerConfig(action="none"))
+
+
+def _blockllm_meta(tr: BlockLLMTrainer) -> dict:
+    return {
+        "norms": tr.norms.norms,
+        "norm_age": tr.norms.age,
+        "visit_counts": tr.visits.counts,
+        "visit_rounds": tr.visits.total_rounds,
+        "loss_history": tr.loss_history[-256:],
+        "step": tr.step,
+        "reselections": tr.reselections,
+        "q": tr.q,
+        "stack_idx": {k: np.asarray(v).tolist()
+                      for k, v in tr.plan.stack_idx.items()},
+        "probe_idx": {k: np.asarray(v).tolist()
+                      for k, v in tr.plan.probe_idx.items()},
+    }
+
+
+def _restore_blockllm_meta(tr: BlockLLMTrainer, meta: dict):
+    import jax.numpy as jnp
+    tr.norms.norms = {k: float(v) for k, v in meta["norms"].items()}
+    tr.norms.age = {k: int(v) for k, v in meta["norm_age"].items()}
+    tr.visits.counts = {k: int(v) for k, v in meta["visit_counts"].items()}
+    tr.visits.total_rounds = int(meta["visit_rounds"])
+    tr.loss_history = list(meta["loss_history"])
+    tr.step = int(meta["step"])
+    tr.reselections = int(meta["reselections"])
+    tr.q = float(meta["q"])
+    tr.plan.stack_idx = {k: jnp.asarray(v, jnp.int32)
+                         for k, v in meta["stack_idx"].items()}
+    tr.plan.probe_idx = {k: jnp.asarray(v, jnp.int32)
+                         for k, v in meta["probe_idx"].items()}
+
+
+def _train_state(tr) -> Any:
+    if isinstance(tr, BlockLLMTrainer):
+        return {"params": tr.params, "sel": tr.active["sel"],
+                "probe": tr.active["probe"],
+                "opt": tr.opt_state, "masks": tr.masks}
+    return {"params": tr.params,
+            "opt": getattr(tr, "opt_state", getattr(tr, "state", None))}
+
+
+def _load_train_state(tr, state):
+    if isinstance(tr, BlockLLMTrainer):
+        tr.params = state["params"]
+        tr.active = {"sel": state["sel"], "probe": state["probe"]}
+        tr.opt_state = state["opt"]
+        tr.masks = state["masks"]
+        tr._needs_mask_refresh = False  # saved masks are current
+    else:
+        tr.params = state["params"]
+        if hasattr(tr, "opt_state"):
+            tr.opt_state = state["opt"]
+        else:
+            tr.state = state["opt"]
+
+
+def run(trainer, batch_fn: Callable[[int], dict], cfg: TrainLoopConfig,
+        *, on_step: Optional[Callable[[int, Dict], None]] = None,
+        crash_at: Optional[int] = None) -> Dict:
+    """Run (or resume) training.  ``batch_fn(step) -> batch``.
+
+    ``crash_at``: raise at that step AFTER state mutation — used by the
+    fault-tolerance test to prove checkpoint/restart recovers exactly.
+    """
+    start_step = 0
+    if cfg.ckpt_dir:
+        latest = ckpt_lib.latest_step(cfg.ckpt_dir)
+        if latest is not None:
+            state, meta = ckpt_lib.restore(
+                cfg.ckpt_dir, latest, _train_state(trainer))
+            _load_train_state(trainer, state)
+            if isinstance(trainer, BlockLLMTrainer) and "blockllm" in meta:
+                _restore_blockllm_meta(trainer, meta["blockllm"])
+            start_step = latest
+            trainer.step = start_step
+
+    mon = StragglerMonitor(cfg.straggler)
+    history = []
+    for step in range(start_step, cfg.total_steps):
+        mon.step_begin()
+        batch = batch_fn(step)
+        metrics = trainer.train_step(batch)
+        action = mon.step_end()
+        metrics["straggler_action"] = action
+        history.append(metrics["loss"])
+        if on_step:
+            on_step(step, metrics)
+        if cfg.log_every and (step + 1) % cfg.log_every == 0:
+            print(f"step {step + 1}: loss={metrics['loss']:.4f}", flush=True)
+        if cfg.ckpt_dir and (step + 1) % cfg.ckpt_every == 0:
+            meta = {}
+            if isinstance(trainer, BlockLLMTrainer):
+                meta["blockllm"] = _blockllm_meta(trainer)
+            ckpt_lib.save(cfg.ckpt_dir, step + 1, _train_state(trainer),
+                          meta=meta, keep=cfg.keep_ckpts)
+        if crash_at is not None and step + 1 == crash_at:
+            raise RuntimeError(f"simulated node failure at step {step + 1}")
+    return {"losses": history, "final_step": cfg.total_steps}

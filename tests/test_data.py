@@ -1,0 +1,55 @@
+"""Data pipeline: determinism, host sharding, restart safety."""
+import numpy as np
+import pytest
+
+from repro.data.pipeline import DataConfig, TokenPipeline
+
+
+def test_deterministic_across_instances():
+    cfg = DataConfig(vocab_size=100, seq_len=32, global_batch=4, seed=3)
+    a = TokenPipeline(cfg).batch(5)["tokens"]
+    b = TokenPipeline(cfg).batch(5)["tokens"]
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_steps_differ():
+    cfg = DataConfig(vocab_size=100, seq_len=32, global_batch=4)
+    a = TokenPipeline(cfg).batch(1)["tokens"]
+    b = TokenPipeline(cfg).batch(2)["tokens"]
+    assert not np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_host_shards_partition_global_batch():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=8)
+    full = TokenPipeline(cfg).global_batch_all_hosts(3)["tokens"]
+    parts = [TokenPipeline(cfg, host_id=h, num_hosts=4).batch(3)["tokens"]
+             for h in range(4)]
+    np.testing.assert_array_equal(
+        np.asarray(full), np.concatenate([np.asarray(p) for p in parts]))
+
+
+def test_tokens_in_range():
+    cfg = DataConfig(vocab_size=77, seq_len=64, global_batch=2)
+    t = np.asarray(TokenPipeline(cfg).batch(0)["tokens"])
+    assert t.min() >= 0 and t.max() < 77
+
+
+def test_learnable_structure():
+    """The synthetic stream has deterministic successors (models can learn)."""
+    cfg = DataConfig(vocab_size=100, seq_len=256, global_batch=1)
+    t = np.asarray(TokenPipeline(cfg).batch(0)["tokens"])[0]
+    pred = (t[:-1] * 31 + np.arange(cfg.structure)[:, None] * 7 + 13) % 100
+    frac = max((pred[i] == t[1:]).mean() for i in range(cfg.structure))
+    assert frac > 0.5  # one theme explains most transitions
+
+
+def test_file_source(tmp_path):
+    p = tmp_path / "corpus.txt"
+    p.write_text("hello world, this is a tiny corpus for testing " * 50)
+    cfg = DataConfig(vocab_size=256, seq_len=32, global_batch=2,
+                     source="file", path=str(p))
+    pipe = TokenPipeline(cfg)
+    b = np.asarray(pipe.batch(0)["tokens"])
+    assert b.shape == (2, 32) and b.max() < 256
+    b2 = np.asarray(TokenPipeline(cfg).batch(0)["tokens"])
+    np.testing.assert_array_equal(b, b2)

@@ -1,0 +1,161 @@
+"""Selection (paper Algorithm 2) invariants — unit + hypothesis property."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import selection as sel
+from repro.core import units as units_lib
+from repro.models import model as model_lib
+
+
+def _index(params, cfg):
+    return units_lib.build_unit_index(cfg, params)
+
+
+def test_unit_index_counts(tiny_cfg, tiny_params):
+    idx = _index(tiny_params, tiny_cfg)
+    total_from_units = sum(idx.unit_sizes().values())
+    total = sum(l.size for l in jax.tree.leaves(tiny_params))
+    assert total_from_units == total == idx.total_params
+
+
+def test_greedy_meets_budget(tiny_cfg, tiny_params):
+    idx = _index(tiny_params, tiny_cfg)
+    norms, visits = sel.NormTracker(), sel.VisitTracker()
+    # seed norms so selection is score-driven
+    for u in idx.unit_sizes():
+        norms.norms[u] = hash(u) % 100 + 1.0
+    scfg = sel.SelectorConfig(sparsity=0.9, policy="greedy",
+                              always_active_leaves=("final_norm",))
+    plan, q = sel.select(idx, norms, visits, scfg)
+    sizes = idx.unit_sizes()
+    sigma = sum(sizes[u] for u in plan.selected_labels())
+    n_s = (1 - 0.9) * idx.total_params
+    assert sigma >= n_s, "greedy must accumulate at least the budget"
+    assert 0 < q <= 1
+    assert abs(q * sigma - n_s) / n_s < 0.05  # q recovers the exact budget
+
+
+def test_greedy_picks_largest_norms(tiny_cfg, tiny_params):
+    idx = _index(tiny_params, tiny_cfg)
+    norms, visits = sel.NormTracker(), sel.VisitTracker()
+    row_units = [f"{s.sid}/g{g}" for s in idx.stacks
+                 for g in range(s.n_rows)]
+    for i, u in enumerate(row_units):
+        norms.norms[u] = float(i)            # later rows have larger norms
+    for li in idx.leaves:
+        norms.norms[li.name] = -1.0          # never pick leaves
+    scfg = sel.SelectorConfig(
+        sparsity=0.98, policy="greedy", use_visit_frequency=False,
+        selectable_leaves=(), always_active_leaves=())
+    plan, _ = sel.select(idx, norms, visits, scfg)
+    chosen = [u for u in plan.selected_labels() if "/g" in u]
+    chosen_norms = [norms.norms[u] for u in chosen]
+    not_chosen = [norms.norms[u] for u in row_units if u not in chosen]
+    assert min(chosen_norms) >= max(not_chosen)
+
+
+def test_subopt_inverts(tiny_cfg, tiny_params):
+    idx = _index(tiny_params, tiny_cfg)
+    norms, visits = sel.NormTracker(), sel.VisitTracker()
+    row_units = [f"{s.sid}/g{g}" for s in idx.stacks
+                 for g in range(s.n_rows)]
+    for i, u in enumerate(row_units):
+        norms.norms[u] = float(i)
+    scfg = sel.SelectorConfig(
+        sparsity=0.98, policy="greedy", invert=True,
+        use_visit_frequency=False, selectable_leaves=(),
+        always_active_leaves=())
+    plan, _ = sel.select(idx, norms, visits, scfg)
+    chosen = [norms.norms[u] for u in plan.selected_labels() if "/g" in u]
+    not_chosen = [norms.norms[u] for u in row_units
+                  if u not in plan.selected_labels()]
+    assert max(chosen) <= min(not_chosen)
+
+
+def test_visit_frequency_prefers_unvisited(tiny_cfg, tiny_params):
+    idx = _index(tiny_params, tiny_cfg)
+    norms, visits = sel.NormTracker(), sel.VisitTracker()
+    row_units = [f"{s.sid}/g{g}" for s in idx.stacks
+                 for g in range(s.n_rows)]
+    for u in row_units:
+        norms.norms[u] = 100.0 if u.endswith("g0") else 1.0
+    # visit g0 rows many times
+    for _ in range(10):
+        visits.record([u for u in row_units if u.endswith("g0")])
+    scfg = sel.SelectorConfig(
+        sparsity=0.99, policy="static", static_k_frac=0.25,
+        selectable_leaves=(), always_active_leaves=())
+    plan, _ = sel.select(idx, norms, visits, scfg)
+    chosen = plan.selected_labels()
+    # despite larger norms, heavily-visited g0 rows lose to unvisited ones
+    assert not any(u.endswith("g0") for u in chosen if "/g" in u)
+
+
+def test_static_policy_structure_stable(tiny_cfg, tiny_params):
+    idx = _index(tiny_params, tiny_cfg)
+    scfg = sel.SelectorConfig(sparsity=0.9, policy="static",
+                              static_k_frac=0.5)
+    norms, visits = sel.NormTracker(), sel.VisitTracker()
+    plan1, _ = sel.select(idx, norms, visits, scfg)
+    norms.norms = {u: float(np.random.rand()) for u in idx.unit_sizes()}
+    plan2, _ = sel.select(idx, norms, visits, scfg)
+    assert plan1.structure.k_per_stack == plan2.structure.k_per_stack
+
+
+def test_cyclic_policy_cycles(tiny_cfg, tiny_params):
+    idx = _index(tiny_params, tiny_cfg)
+    scfg = sel.SelectorConfig(policy="cyclic", cyclic_block_rows=1,
+                              selectable_leaves=(),
+                              always_active_leaves=())
+    seen = []
+    for cursor in range(4):
+        plan, _ = sel.select(idx, sel.NormTracker(), sel.VisitTracker(),
+                             scfg, cursor=cursor)
+        rows = [u for u in plan.selected_labels() if "/g" in u]
+        assert len(rows) == 1
+        seen.append(rows[0])
+    assert len(set(seen)) == 4, "cyclic must visit distinct blocks"
+
+
+@given(losses=st.lists(st.floats(0.1, 10.0), min_size=1, max_size=30),
+       m=st.integers(1, 8))
+@settings(max_examples=50, deadline=None)
+def test_should_reselect_property(losses, m):
+    out = sel.should_reselect(losses, m)
+    if len(losses) < m + 1:
+        assert out is False
+    else:
+        window = losses[-m - 1:-1]
+        assert out == (losses[-1] >= sum(window) / len(window))
+
+
+@given(s=st.floats(0.5, 0.99), k_frac=st.floats(0.1, 1.0))
+@settings(max_examples=20, deadline=None)
+def test_static_budget_property(s, k_frac):
+    from repro.configs.base import ModelConfig
+    from repro.models import model as m_
+    cfg = ModelConfig(name="t", family="dense", num_layers=4, d_model=16,
+                      num_heads=2, num_kv_heads=1, d_ff=32, vocab_size=64,
+                      remat=False)
+    params = m_.init_params(jax.random.PRNGKey(0), cfg)
+    idx = units_lib.build_unit_index(cfg, params)
+    scfg = sel.SelectorConfig(sparsity=s, policy="static",
+                              static_k_frac=k_frac)
+    plan, q = sel.select(idx, sel.NormTracker(), sel.VisitTracker(), scfg)
+    # every stack keeps at least 1 and at most ceil(G * k_frac) rows
+    for sid, k in plan.structure.k_per_stack:
+        g = idx.stack(sid).n_rows
+        assert 1 <= k <= max(1, math.ceil(g * k_frac))
+    assert 0 < q <= 1
+    # selected labels unique
+    labels = plan.selected_labels()
+    assert len(labels) == len(set(labels))
+    # probe rows disjoint from selected rows
+    for sid, pidx in plan.probe_idx.items():
+        sel_rows = set(np.asarray(plan.stack_idx[sid]).tolist())
+        assert not sel_rows & set(np.asarray(pidx).tolist())
