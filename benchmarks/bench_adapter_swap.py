@@ -1,0 +1,133 @@
+"""Adapter hot-swap benchmark: BlockDelta swap vs. full checkpoint reload.
+
+Measures the serving-side payoff of coordinate-block finetuning: flipping
+one resident base model to a different tenant by row scatter-swap
+(O(delta) bytes) against reloading a full parameter checkpoint
+(O(params) bytes + host->device transfer).
+
+Reported (CSV name,us_per_call,derived):
+  adapter_extract        delta extraction from a real BlockLLM finetune
+  adapter_swap_xla       apply+revert via donated XLA scatter
+  adapter_swap_kernel    apply+revert via the Pallas scatter-swap kernel
+                         (interpret mode off-TPU)
+  full_reload            host->device copy of every parameter
+  swap_bytes_ratio       delta bytes moved / full reload bytes  (<10%)
+
+    PYTHONPATH=src python -m benchmarks.bench_adapter_swap [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.adapters import apply_delta, delta_from_trainer, revert_delta
+from repro.core.blockllm import BlockLLMConfig, BlockLLMTrainer
+from repro.core.selection import SelectorConfig
+from repro.optim.adam import Adam
+
+
+def _finetuned_delta(cfg, steps: int):
+    """Train a real (tiny) BlockLLM finetune and extract its delta.
+
+    Selector shaped like a production finetune: ~3% of layers active
+    (1 of 32), embed/head frozen — the delta row granularity is the
+    layer, so the active layer fraction IS the delta density.
+    """
+    from repro.models import model
+    base = model.init_params(jax.random.PRNGKey(0), cfg)
+    base_copy = jax.tree.map(lambda a: a.copy(), base)
+    tr = BlockLLMTrainer(
+        cfg, base, adam=Adam(lr=3e-3),
+        bcfg=BlockLLMConfig(selector=SelectorConfig(
+            sparsity=0.97, policy="static",
+            static_k_frac=1.0 / cfg.num_layers, selectable_leaves=(),
+            patience=1000)))
+    pipe = common.pipeline_for(cfg, batch=4, seq=32)
+    for s in range(steps):
+        tr.train_step(pipe.batch(s))
+    t0 = time.monotonic()
+    delta = delta_from_trainer(tr, base_copy,
+                               meta={"adapter_id": "bench"})
+    extract_us = (time.monotonic() - t0) * 1e6
+    return base_copy, delta, extract_us
+
+
+def _time_swap(base, delta, mode: str, iters: int) -> float:
+    """Mean apply+revert (one full tenant flip) latency in us."""
+    from repro.adapters import copy_tree
+    params = copy_tree(base)  # donated swaps must not touch `base`
+    # warmup (compiles the per-leaf scatters)
+    params, disp = apply_delta(params, delta, mode=mode, donate=True,
+                               check_fingerprint=False)
+    params = revert_delta(params, disp, mode=mode, donate=True)
+    jax.block_until_ready(jax.tree.leaves(params))
+    t0 = time.monotonic()
+    for _ in range(iters):
+        params, disp = apply_delta(params, delta, mode=mode, donate=True,
+                                   check_fingerprint=False)
+        params = revert_delta(params, disp, mode=mode, donate=True)
+    jax.block_until_ready(jax.tree.leaves(params))
+    return (time.monotonic() - t0) / iters * 1e6
+
+
+def _time_full_reload(base, iters: int) -> float:
+    """Full-checkpoint alternative: re-place every leaf on device."""
+    host = [np.asarray(jax.device_get(l)) for l in jax.tree.leaves(base)]
+    t0 = time.monotonic()
+    for _ in range(iters):
+        dev = [jax.device_put(h) for h in host]
+        jax.block_until_ready(dev)
+    return (time.monotonic() - t0) / iters * 1e6
+
+
+def run(quick: bool = False):
+    # deep + scanned: 32 layer rows, so one active layer = ~3% density
+    cfg = common.small_llama(layers=32, d=64 if quick else 128,
+                             vocab=256 if quick else 512)
+    steps = 3 if quick else 8
+    iters = 3 if quick else 10
+    base, delta, extract_us = _finetuned_delta(cfg, steps)
+
+    param_bytes = sum(l.size * l.dtype.itemsize
+                      for l in jax.tree.leaves(base))
+    # one tenant flip = write delta rows + read back displaced rows
+    swap_bytes = 2 * delta.nbytes
+    ratio = swap_bytes / param_bytes
+
+    common.emit("adapter_extract", extract_us,
+                f"rows={delta.num_rows()};bytes={delta.nbytes}")
+    us_xla = _time_swap(base, delta, "xla", iters)
+    common.emit("adapter_swap_xla", us_xla, "apply+revert")
+    us_kernel = _time_swap(
+        base, delta,
+        "pallas" if __import__("jax").default_backend() == "tpu"
+        else "interpret", iters)
+    common.emit("adapter_swap_kernel", us_kernel, "apply+revert")
+    us_reload = _time_full_reload(base, iters)
+    common.emit("full_reload", us_reload, f"bytes={param_bytes}")
+    common.emit("swap_bytes_ratio", 0.0, f"{ratio:.4f}")
+
+    print(f"\nmodel: {cfg.param_count() / 1e6:.1f}M params "
+          f"({param_bytes / 2 ** 20:.1f} MiB)")
+    print(f"delta: {delta.num_rows()} rows, "
+          f"{delta.nbytes / 2 ** 20:.2f} MiB "
+          f"({delta.nbytes / param_bytes:.1%} of params)")
+    print(f"tenant flip moves {swap_bytes / 2 ** 20:.2f} MiB "
+          f"({ratio:.1%} of a full reload) — "
+          f"{'OK' if ratio < 0.10 else 'OVER'} the <10% budget")
+    print(f"swap (xla)     : {us_xla / 1e3:8.2f} ms")
+    print(f"swap (kernel)  : {us_kernel / 1e3:8.2f} ms")
+    print(f"full reload    : {us_reload / 1e3:8.2f} ms")
+    assert ratio < 0.10, (
+        f"swap bytes {swap_bytes} not < 10% of reload {param_bytes}")
+    return {"ratio": ratio, "swap_us": us_xla, "reload_us": us_reload}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(quick=ap.parse_args().quick)

@@ -18,9 +18,9 @@ def main() -> None:
     ap.add_argument("--only", default="")
     args = ap.parse_args()
 
-    from benchmarks import (common, fig5_finetune, fig6_sparsity,
-                            fig7_ablation, roofline, table1_pretrain,
-                            table2_sparsity, table7_glue)
+    from benchmarks import (bench_adapter_swap, common, fig5_finetune,
+                            fig6_sparsity, fig7_ablation, roofline,
+                            table1_pretrain, table2_sparsity, table7_glue)
     suites = {
         "table1": table1_pretrain.run,
         "table2": table2_sparsity.run,
@@ -29,6 +29,7 @@ def main() -> None:
         "fig7": fig7_ablation.run,
         "table7": table7_glue.run,
         "roofline": roofline.run,
+        "adapter_swap": bench_adapter_swap.run,
     }
     failures = []
     for name, fn in suites.items():

@@ -1,0 +1,57 @@
+"""BlockDelta — sparse coordinate-block adapters for multi-tenant serving.
+
+BlockLLM finetuning updates <5% of parameters, confined to selected
+coordinate blocks (rows of the stacked per-layer tensors, plus the odd
+whole leaf).  A finetuned task therefore ships as a **SparseDelta**: per
+edited leaf, the active row indices and the replacement row values.  One
+base model plus many cheap task deltas is the serving counterpart of the
+paper's training-memory story (S-LoRA-style multiplexing, but the
+adapter is a row edit of the base weights instead of a factorized
+side-car — no extra matmuls at decode time, and hot-swapping touches
+only the delta rows on device).
+
+Components
+----------
+- ``delta``     — extract / apply / revert / (de)serialize SparseDeltas.
+  Apply is a row *scatter-swap* (fused Pallas kernel on TPU,
+  ``kernels/scatter_apply.py``): it writes the adapter rows and returns
+  the displaced base rows, so revert is the same swap run again —
+  bit-exact, which is what lets one resident base model flip between
+  tenants indefinitely.
+- ``registry``  — on-disk adapter store + in-memory LRU cache with
+  ref-counting for concurrent serving.
+
+On-disk delta format (``blockdelta.v1``)
+----------------------------------------
+One directory per adapter, reusing the checkpointer's payload contract::
+
+    <root>/<adapter_id>/
+      manifest.json   # {"meta": {format, adapter_id, base_fingerprint,
+                      #           nbytes, ...},
+                      #  "leaves": [{name, key, dtype, stored_as, shape}]}
+      arrays.npz      # per edited leaf: "<leaf>::idx" int32 [K] row
+                      # indices (absent => whole-leaf replacement) and
+                      # "<leaf>::rows" [K, ...] replacement values
+      DONE            # commit marker
+
+Atomicity contract: the payload is staged in ``<adapter_id>.tmp``, DONE
+is written **last**, and a single POSIX ``rename`` commits the
+directory.  Readers (``AdapterRegistry.list_adapters``/``load_delta``)
+only consider directories containing DONE — a crash mid-write can never
+surface a torn adapter, and re-``put`` of an existing id replaces it
+atomically.  ``meta.base_fingerprint`` (leaf paths/shapes/dtypes hash)
+guards against applying a delta to a mismatched base architecture.
+Non-numpy dtypes (bf16/fp8) are stored bit-punned as uintN and viewed
+back on load, so the round trip is exact.
+"""
+from repro.adapters.delta import (DeltaEntry, SparseDelta, apply_delta,
+                                  copy_tree, delta_from_trainer,
+                                  extract_delta, fingerprint, load_delta,
+                                  revert_delta, save_delta)
+from repro.adapters.registry import AdapterRegistry, InMemoryRegistry
+
+__all__ = [
+    "DeltaEntry", "SparseDelta", "apply_delta", "copy_tree",
+    "delta_from_trainer", "extract_delta", "fingerprint", "load_delta",
+    "revert_delta", "save_delta", "AdapterRegistry", "InMemoryRegistry",
+]

@@ -1,0 +1,224 @@
+"""SparseDelta: a finetuned task as a row-sparse edit of the base model.
+
+BlockLLM confines updates to selected coordinate blocks (rows of the
+stacked per-layer parameters, plus the occasional whole leaf), so a
+finetune is representable as ``{leaf path -> (row indices, row values)}``
+— typically <5% of the base parameters.  This module extracts that delta
+from trained vs. base params, applies it on device (row scatter-swap,
+fused Pallas kernel on TPU), and serializes it via the checkpointer's
+atomic payload format.
+
+**Replacement semantics.**  Rows store the *tuned values*, not additive
+differences: ``apply`` swaps them in and hands back the displaced base
+rows, so revert is the same swap run again — bit-exact by construction.
+An additive float delta cannot promise that (``(x + d) - d != x`` in
+general), and exact revert is what multi-tenant serving leans on when it
+flips one base model between adapters thousands of times.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint import checkpointer as ckpt_lib
+
+Pytree = Any
+
+
+@dataclass
+class DeltaEntry:
+    """One leaf's edit: ``rows`` [K, ...] replacing rows ``idx`` of the
+    base leaf [G, ...].  ``idx is None`` => whole-leaf replacement (used
+    when every row changed, e.g. a selected ``final_norm``/``embed``).
+
+    ``rows`` is host numpy when loaded from disk / extracted, but a
+    *device* array in the displaced-rows delta ``apply_delta`` returns —
+    hot-swap revert never round-trips through the host."""
+    idx: Optional[np.ndarray]      # int32 [K] or None
+    rows: Any                      # [K, ...] np.ndarray or jax.Array
+
+    @property
+    def nbytes(self) -> int:
+        return self.rows.nbytes + (self.idx.nbytes if self.idx is not None
+                                   else 0)
+
+
+@dataclass
+class SparseDelta:
+    entries: Dict[str, DeltaEntry]           # leaf path -> edit
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(e.nbytes for e in self.entries.values())
+
+    def num_rows(self) -> int:
+        return sum(e.rows.shape[0] for e in self.entries.values())
+
+
+def copy_tree(tree: Pytree) -> Pytree:
+    """Deep-copy every leaf onto fresh device buffers.
+
+    The safety precondition for ``donate=True`` swaps: a donated leaf's
+    buffer is invalidated in place, so a tree that will be hot-swapped
+    must not alias arrays the caller still reads (server-owned weights,
+    pre-finetune base snapshots, benchmark working copies)."""
+    import jax.numpy as jnp
+    return jax.tree.map(lambda a: jnp.array(a, copy=True), tree)
+
+
+def fingerprint(params: Pytree) -> str:
+    """Structural fingerprint of a param tree (leaf paths/shapes/dtypes).
+
+    Cheap (no data hashing) — catches arch/shape mismatch between the
+    base a delta was extracted against and the base it is applied to.
+    """
+    names, leaves, _ = ckpt_lib._flatten_with_names(params)
+    h = hashlib.sha256()
+    for name, leaf in zip(names, leaves):
+        h.update(f"{name}:{tuple(leaf.shape)}:{leaf.dtype}\n".encode())
+    return h.hexdigest()[:16]
+
+
+def _row_view(a: np.ndarray) -> np.ndarray:
+    """[G, ...] row view; 0/1-D leaves become a single [1, N] row."""
+    if a.ndim <= 1:
+        return a.reshape(1, -1)
+    return a.reshape(a.shape[0], -1)
+
+
+def extract_delta(base: Pytree, tuned: Pytree, *,
+                  meta: Optional[dict] = None) -> SparseDelta:
+    """Diff two same-structure param trees into a SparseDelta.
+
+    Exact by construction: every row that differs in any element is
+    captured (BlockLLM's selection restricts which rows CAN differ; the
+    diff does not need to trust the plan, and also covers masked-update
+    rows that never actually moved — those are dropped).
+    """
+    names_b, leaves_b, _ = ckpt_lib._flatten_with_names(base)
+    names_t, leaves_t, _ = ckpt_lib._flatten_with_names(tuned)
+    assert names_b == names_t, "base/tuned param trees differ in structure"
+    entries: Dict[str, DeltaEntry] = {}
+    for name, lb, lt in zip(names_b, leaves_b, leaves_t):
+        b = np.asarray(jax.device_get(lb))
+        t = np.asarray(jax.device_get(lt))
+        assert b.shape == t.shape and b.dtype == t.dtype, name
+        if np.array_equal(b, t):
+            continue
+        bv, tv = _row_view(b), _row_view(t)
+        changed = np.nonzero((bv != tv).any(axis=1))[0]
+        if b.ndim <= 1 or len(changed) == bv.shape[0]:
+            entries[name] = DeltaEntry(idx=None, rows=t.copy())
+        else:
+            entries[name] = DeltaEntry(
+                idx=changed.astype(np.int32),
+                rows=np.ascontiguousarray(t[changed]))
+    md = dict(meta or {})
+    md.setdefault("base_fingerprint", fingerprint(base))
+    return SparseDelta(entries, md)
+
+
+def apply_delta(params: Pytree, delta: SparseDelta, *, mode: str = "auto",
+                donate: bool = False, check_fingerprint: bool = True
+                ) -> Tuple[Pytree, SparseDelta]:
+    """Swap the delta rows into ``params``.
+
+    Returns ``(new_params, displaced)`` where ``displaced`` is a
+    SparseDelta holding the rows the swap pushed out — applying it to
+    ``new_params`` restores ``params`` bit-exactly (the swap is an
+    involution).  ``mode`` routes the per-leaf scatter: ``auto`` (Pallas
+    on TPU / XLA scatter elsewhere), ``interpret``, ``xla``.
+
+    ``donate=True`` consumes the edited leaves of ``params`` in place —
+    O(delta) bytes moved on device instead of O(leaf) copies.  The
+    caller must then treat ``params`` as dead (use the returned tree);
+    the serving loop does this for hot swaps on its privately-owned
+    weights.  The default keeps ``params`` intact.
+    """
+    from repro.kernels import ops as kernel_ops
+
+    fp = delta.meta.get("base_fingerprint")
+    if check_fingerprint and fp is not None and fp != fingerprint(params):
+        raise ValueError(
+            "delta base_fingerprint does not match target params "
+            "(adapter extracted against a different architecture?)")
+    names, leaves, treedef = ckpt_lib._flatten_with_names(params)
+    by_name = dict(zip(names, range(len(names))))
+    out = list(leaves)
+    displaced: Dict[str, DeltaEntry] = {}
+    for name, e in delta.entries.items():
+        if name not in by_name:
+            raise KeyError(f"delta leaf {name!r} not present in params")
+        i = by_name[name]
+        leaf = out[i]
+        if e.idx is None:
+            # whole-leaf swap: the old leaf itself is the displaced
+            # payload (stays on device; nothing is copied)
+            displaced[name] = DeltaEntry(idx=None, rows=leaf)
+            out[i] = jax.numpy.asarray(e.rows).reshape(leaf.shape)
+        else:
+            idx = jax.numpy.asarray(e.idx)
+            rows = jax.numpy.asarray(e.rows)
+            new_leaf, disp = kernel_ops.scatter_swap(leaf, idx, rows,
+                                                     mode=mode,
+                                                     donate=donate)
+            out[i] = new_leaf
+            # displaced rows stay device-resident: revert re-swaps them
+            # without a host round-trip
+            displaced[name] = DeltaEntry(idx=e.idx, rows=disp)
+    disp_meta = dict(delta.meta)
+    disp_meta["displaced_by"] = delta.meta.get("adapter_id", "<anon>")
+    return treedef.unflatten(out), SparseDelta(displaced, disp_meta)
+
+
+def revert_delta(params: Pytree, displaced: SparseDelta, *,
+                 mode: str = "auto", donate: bool = False) -> Pytree:
+    """Undo an ``apply_delta`` using its displaced-rows return value."""
+    out, _ = apply_delta(params, displaced, mode=mode, donate=donate,
+                         check_fingerprint=False)
+    return out
+
+
+# ---------------------------------------------------------------------- #
+# serialization (shared atomic payload format — see adapters/__init__.py)
+# ---------------------------------------------------------------------- #
+
+
+def save_delta(path, delta: SparseDelta):
+    """Atomically write a delta directory (manifest+npz+DONE)."""
+    named = {}
+    for name, e in delta.entries.items():
+        if e.idx is not None:
+            named[f"{name}::idx"] = e.idx
+        named[f"{name}::rows"] = e.rows
+    meta = dict(delta.meta)
+    meta["format"] = "blockdelta.v1"
+    return ckpt_lib.write_payload(path, named, meta=meta)
+
+
+def load_delta(path) -> SparseDelta:
+    named, manifest = ckpt_lib.read_payload(path)
+    entries: Dict[str, DeltaEntry] = {}
+    for key, arr in named.items():
+        name, kind = key.rsplit("::", 1)
+        if kind == "rows":
+            entries[name] = DeltaEntry(
+                idx=named.get(f"{name}::idx"), rows=arr)
+    meta = manifest.get("meta", {})
+    assert meta.get("format") == "blockdelta.v1", \
+        f"{path}: not a BlockDelta payload"
+    return SparseDelta(entries, meta)
+
+
+def delta_from_trainer(trainer, base: Pytree, *,
+                       meta: Optional[dict] = None) -> SparseDelta:
+    """Convenience: diff a trainer's current merged params against the
+    pre-finetune base (any trainer exposing ``merged_params``/``params``)."""
+    tuned = (trainer.merged_params() if hasattr(trainer, "merged_params")
+             else trainer.params)
+    return extract_delta(base, tuned, meta=meta)

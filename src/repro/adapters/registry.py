@@ -1,0 +1,183 @@
+"""On-disk adapter store + in-memory LRU cache with serving ref-counts.
+
+Layout (one directory per adapter, committed atomically — the same
+manifest+npz+DONE contract as checkpoints):
+
+    <root>/
+      <adapter_id>/
+        manifest.json   (leaf entries + meta: base_fingerprint, nbytes…)
+        arrays.npz      (row indices + replacement rows per edited leaf)
+        DONE            (commit marker, written last)
+
+``put`` never exposes a half-written adapter: readers only list
+directories with DONE.  ``put`` onto an existing id replaces it
+atomically (rename) and invalidates the cache entry.
+
+Cache policy: ``capacity`` bounds resident deltas; eviction is LRU over
+entries with refcount 0.  ``acquire``/``release`` bracket an adapter
+while a serving loop has its rows swapped into the live model — a pinned
+(refcount > 0) delta is never evicted even when the cache is over
+capacity (correctness first: the server may still need its row values;
+the overflow drains on release).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import OrderedDict
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.adapters import delta as delta_lib
+from repro.adapters.delta import SparseDelta
+
+
+class AdapterRegistry:
+    def __init__(self, root, *, capacity: int = 4):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.capacity = capacity
+        self._lock = threading.RLock()
+        self._cache: "OrderedDict[str, SparseDelta]" = OrderedDict()
+        self._refs: Dict[str, int] = {}
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # ------------------------------------------------------------------ #
+    # disk
+    # ------------------------------------------------------------------ #
+
+    def path(self, adapter_id: str) -> Path:
+        # a real exception (not assert): an id like "" or "x/../../y"
+        # would make put() target — and replace-delete — arbitrary
+        # directories including the registry root itself
+        if (not adapter_id or "/" in adapter_id or "\\" in adapter_id
+                or adapter_id in (".", "..")):
+            raise ValueError(f"bad adapter id {adapter_id!r}")
+        return self.root / adapter_id
+
+    def put(self, adapter_id: str, delta: SparseDelta) -> Path:
+        """Atomically persist ``delta`` under ``adapter_id``."""
+        meta = dict(delta.meta)
+        meta["adapter_id"] = adapter_id
+        meta["nbytes"] = delta.nbytes
+        out = delta_lib.save_delta(self.path(adapter_id),
+                                   SparseDelta(delta.entries, meta))
+        with self._lock:
+            self._cache.pop(adapter_id, None)  # invalidate stale copy
+        return out
+
+    def exists(self, adapter_id: str) -> bool:
+        return (self.path(adapter_id) / "DONE").exists()
+
+    def list_adapters(self) -> List[str]:
+        return sorted(p.name for p in self.root.iterdir()
+                      if p.is_dir() and (p / "DONE").exists()
+                      and not p.name.endswith((".tmp", ".old")))
+
+    # ------------------------------------------------------------------ #
+    # cache + ref-counting
+    # ------------------------------------------------------------------ #
+
+    def _load_locked(self, adapter_id: str) -> SparseDelta:
+        if adapter_id in self._cache:
+            self.hits += 1
+            self._cache.move_to_end(adapter_id)
+            return self._cache[adapter_id]
+        self.misses += 1
+        # a concurrent re-put replaces the directory with two renames;
+        # retry absorbs the instant where neither payload is in place
+        d = None
+        for attempt in range(3):
+            if self.exists(adapter_id):
+                try:
+                    d = delta_lib.load_delta(self.path(adapter_id))
+                    break
+                except FileNotFoundError:
+                    pass
+            time.sleep(0.01 * (attempt + 1))
+        if d is None:
+            raise KeyError(f"adapter {adapter_id!r} not in registry "
+                           f"{self.root}")
+        self._cache[adapter_id] = d
+        self._evict_locked()
+        return d
+
+    def _evict_locked(self):
+        while len(self._cache) > self.capacity:
+            victim = next((k for k in self._cache
+                           if self._refs.get(k, 0) == 0), None)
+            if victim is None:  # everything pinned: keep over capacity
+                return
+            del self._cache[victim]
+            self.evictions += 1
+
+    def get(self, adapter_id: str) -> SparseDelta:
+        """Load (cached) without pinning — for offline inspection."""
+        with self._lock:
+            return self._load_locked(adapter_id)
+
+    def acquire(self, adapter_id: str) -> SparseDelta:
+        """Load + pin: the delta stays resident until ``release``."""
+        with self._lock:
+            d = self._load_locked(adapter_id)
+            self._refs[adapter_id] = self._refs.get(adapter_id, 0) + 1
+            return d
+
+    def release(self, adapter_id: str):
+        with self._lock:
+            n = self._refs.get(adapter_id, 0)
+            assert n > 0, f"release of un-acquired adapter {adapter_id!r}"
+            if n == 1:
+                self._refs.pop(adapter_id)
+            else:
+                self._refs[adapter_id] = n - 1
+            self._evict_locked()
+
+    def refcount(self, adapter_id: str) -> int:
+        with self._lock:
+            return self._refs.get(adapter_id, 0)
+
+    def cached_ids(self) -> List[str]:
+        with self._lock:
+            return list(self._cache)
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions,
+                    "resident": len(self._cache),
+                    "pinned": sum(1 for v in self._refs.values() if v)}
+
+
+class InMemoryRegistry:
+    """Registry-shaped wrapper over a plain ``{id: SparseDelta}`` dict —
+    lets tests and examples drive the multi-tenant server without disk."""
+
+    def __init__(self, deltas: Optional[Dict[str, SparseDelta]] = None):
+        self._deltas = dict(deltas or {})
+        self._refs: Dict[str, int] = {}
+
+    def put(self, adapter_id: str, d: SparseDelta):
+        self._deltas[adapter_id] = d
+
+    def exists(self, adapter_id: str) -> bool:
+        return adapter_id in self._deltas
+
+    def list_adapters(self) -> List[str]:
+        return sorted(self._deltas)
+
+    def get(self, adapter_id: str) -> SparseDelta:
+        return self._deltas[adapter_id]
+
+    def acquire(self, adapter_id: str) -> SparseDelta:
+        self._refs[adapter_id] = self._refs.get(adapter_id, 0) + 1
+        return self._deltas[adapter_id]
+
+    def release(self, adapter_id: str):
+        assert self._refs.get(adapter_id, 0) > 0
+        self._refs[adapter_id] -= 1
+
+    def refcount(self, adapter_id: str) -> int:
+        return self._refs.get(adapter_id, 0)

@@ -39,22 +39,28 @@ def _flatten_with_names(tree):
     return names, [l for _, l in flat], treedef
 
 
-def save(ckpt_dir, step: int, tree: Pytree, *, meta: Optional[dict] = None,
-         keep: int = 3):
-    ckpt_dir = Path(ckpt_dir)
-    ckpt_dir.mkdir(parents=True, exist_ok=True)
-    final = ckpt_dir / f"step_{step:08d}"
-    tmp = ckpt_dir / f"step_{step:08d}.tmp"
+def write_payload(final: Path, named_arrays, *, meta: Optional[dict] = None,
+                  extra: Optional[dict] = None) -> Path:
+    """Atomic manifest+npz+DONE write of an ordered ``{name: array}`` map.
+
+    The shared on-disk format of checkpoints AND adapter deltas:
+    ``<final>.tmp`` is populated, DONE is written last, then one POSIX
+    rename commits — a crash can never leave a half-written payload that
+    readers would pick up.  ``extra`` merges extra top-level manifest
+    keys (e.g. ``step``).
+    """
+    final = Path(final)
+    tmp = final.parent / (final.name + ".tmp")
     if tmp.exists():
         shutil.rmtree(tmp)
-    tmp.mkdir()
-    names, leaves, treedef = _flatten_with_names(tree)
+    tmp.mkdir(parents=True)
     arrays = {}
-    manifest = {"step": step, "meta": meta or {}, "leaves": []}
-    for i, (name, leaf) in enumerate(zip(names, leaves)):
+    manifest = {"meta": meta or {}, "leaves": []}
+    manifest.update(extra or {})
+    for i, (name, leaf) in enumerate(named_arrays.items()):
         arr = np.asarray(jax.device_get(leaf))
         key = f"a{i}"
-        stored_as = str(arr.dtype)
+        dtype = stored_as = str(arr.dtype)
         if arr.dtype not in (np.float64, np.float32, np.float16, np.int64,
                              np.int32, np.int16, np.int8, np.uint8,
                              np.uint16, np.uint32, np.uint64, np.bool_):
@@ -63,22 +69,67 @@ def save(ckpt_dir, step: int, tree: Pytree, *, meta: Optional[dict] = None,
             arr = arr.view(stored_as)
         arrays[key] = arr
         manifest["leaves"].append(
-            {"name": name, "key": key, "dtype": str(leaf.dtype),
+            {"name": name, "key": key, "dtype": dtype,
              "stored_as": stored_as, "shape": list(arr.shape)})
     np.savez(tmp / "arrays.npz", **arrays)
     (tmp / "manifest.json").write_text(json.dumps(manifest))
     (tmp / "DONE").write_text("ok")
     if final.exists():
-        shutil.rmtree(final)
-    os.rename(tmp, final)
+        # replace via two atomic renames (move the old payload aside,
+        # move the new one in) so no torn state is ever visible; the
+        # sub-microsecond not-present window between them is handled by
+        # readers retrying (AdapterRegistry._load_locked)
+        old = final.parent / (final.name + ".old")
+        if old.exists():
+            shutil.rmtree(old)
+        os.rename(final, old)
+        os.rename(tmp, final)
+        shutil.rmtree(old)
+    else:
+        os.rename(tmp, final)
+    return final
+
+
+def read_payload(path):
+    """Inverse of ``write_payload``: ordered ``{name: np.ndarray}`` (bit-
+    exact dtype round trip via ml_dtypes views) + the manifest dict."""
+    path = Path(path)
+    manifest = json.loads((path / "manifest.json").read_text())
+    arrays = np.load(path / "arrays.npz")
+    out = {}
+    for e in manifest["leaves"]:
+        arr = arrays[e["key"]]
+        if e.get("stored_as") and e["stored_as"] != e["dtype"]:
+            import ml_dtypes  # noqa: F401 — registers bf16/fp8 dtypes
+            arr = arr.view(np.dtype(e["dtype"]))
+        out[e["name"]] = arr
+    return out, manifest
+
+
+def save(ckpt_dir, step: int, tree: Pytree, *, meta: Optional[dict] = None,
+         keep: int = 3):
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    names, leaves, treedef = _flatten_with_names(tree)
+    named = {}
+    for name, leaf in zip(names, leaves):
+        assert name not in named, f"duplicate leaf path {name!r}"
+        named[name] = leaf
+    final = write_payload(ckpt_dir / f"step_{step:08d}", named, meta=meta,
+                          extra={"step": step})
     _gc(ckpt_dir, keep)
     return final
 
 
+def _committed_steps(ckpt_dir: Path):
+    # only step_<digits> with DONE count: .tmp (staging) and .old
+    # (mid-replace remnant) are never live checkpoints
+    return [p for p in ckpt_dir.glob("step_*")
+            if p.name.split("_", 1)[1].isdigit() and (p / "DONE").exists()]
+
+
 def _gc(ckpt_dir: Path, keep: int):
-    steps = sorted(p for p in ckpt_dir.glob("step_*") if
-                   (p / "DONE").exists())
-    for p in steps[:-keep]:
+    for p in sorted(_committed_steps(ckpt_dir))[:-keep]:
         shutil.rmtree(p)
 
 
@@ -86,8 +137,7 @@ def latest_step(ckpt_dir) -> Optional[int]:
     ckpt_dir = Path(ckpt_dir)
     if not ckpt_dir.exists():
         return None
-    steps = [int(p.name.split("_")[1]) for p in ckpt_dir.glob("step_*")
-             if (p / "DONE").exists() and not p.name.endswith(".tmp")]
+    steps = [int(p.name.split("_")[1]) for p in _committed_steps(ckpt_dir)]
     return max(steps) if steps else None
 
 
@@ -96,8 +146,7 @@ def restore(ckpt_dir, step: int, like: Pytree, *,
     """Restore into the structure of ``like``; placement per ``shardings``
     (a pytree of jax.sharding.Sharding) or default device placement."""
     path = Path(ckpt_dir) / f"step_{step:08d}"
-    manifest = json.loads((path / "manifest.json").read_text())
-    arrays = np.load(path / "arrays.npz")
+    named, manifest = read_payload(path)
     flat_like, treedef = jax.tree.flatten(like)
     entries = manifest["leaves"]
     assert len(entries) == len(flat_like), \
@@ -106,10 +155,7 @@ def restore(ckpt_dir, step: int, like: Pytree, *,
                   if shardings is not None else [None] * len(flat_like))
     out = []
     for e, proto, sh in zip(entries, flat_like, shard_flat):
-        arr = arrays[e["key"]]
-        if e.get("stored_as") and e["stored_as"] != e["dtype"]:
-            import ml_dtypes  # bit-exact round trip for bf16/fp8
-            arr = arr.view(np.dtype(e["dtype"]))
+        arr = named[e["name"]]
         assert list(arr.shape) == list(proto.shape), \
             f"{e['name']}: {arr.shape} vs {proto.shape}"
         arr = arr.astype(proto.dtype)

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from repro.kernels import masked_adam as ma
 from repro.kernels import flash_attention as fa
 from repro.kernels import rglru_scan as rg
+from repro.kernels import scatter_apply as sa
 from repro.models import layers
 
 Pytree = Any
@@ -105,6 +106,66 @@ def masked_adam_tree(params: Pytree, grads: Pytree, mu: Pytree, nu: Pytree,
     return (td.unflatten([o[0] for o in out]),
             td.unflatten([o[1] for o in out]),
             td.unflatten([o[2] for o in out]))
+
+
+# --------------------------------------------------------------------- #
+# adapter row scatter-swap
+# --------------------------------------------------------------------- #
+
+
+# NB: the 2-D reshapes live INSIDE the jitted bodies.  Outside jit,
+# ``x.reshape`` eagerly allocates a fresh buffer — an O(leaf) copy that
+# would defeat the donated O(delta) swap for the common 3-D stacked
+# leaves; inside jit XLA aliases them for free.
+
+
+def _swap_body(full, idx, rows):
+    f2 = full.reshape(full.shape[0], -1)
+    r2 = rows.reshape(rows.shape[0], -1)
+    out = f2.at[idx].set(r2.astype(f2.dtype))
+    return out.reshape(full.shape), f2[idx].reshape(rows.shape)
+
+
+_scatter_swap_xla_donated = jax.jit(_swap_body, donate_argnums=(0,))
+_scatter_swap_xla = jax.jit(_swap_body)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",),
+                   donate_argnums=(0,))
+def _scatter_swap_kernel(full, idx, rows, *, interpret):
+    f2 = full.reshape(full.shape[0], -1)
+    r2 = rows.reshape(rows.shape[0], -1)
+    out2, disp2 = sa.scatter_swap_2d(f2, idx, r2, interpret=interpret)
+    return out2.reshape(full.shape), disp2.reshape(rows.shape)
+
+
+def scatter_swap(full, idx, rows, *, mode: str = "auto",
+                 donate: bool = False):
+    """Swap rows ``idx`` of an arbitrary-rank leaf with ``rows``.
+
+    ``full`` [G, ...]; ``rows`` [K, ...] with matching trailing dims.
+    Returns ``(new_full, displaced_rows)`` — an exact involution (see
+    kernels/scatter_apply.py).  ``mode``: ``pallas`` | ``interpret`` |
+    ``xla`` | ``auto`` (Pallas on TPU, XLA scatter elsewhere).
+
+    ``donate=True`` consumes ``full`` (in-place on device — O(K) bytes
+    moved instead of an O(G) copy; the caller must drop its reference).
+    The default keeps the input alive and pays a one-time copy — the
+    safe choice for offline extract/apply paths.
+    """
+    if idx.shape[0] == 0:
+        return full, rows
+    if mode == "auto":
+        mode = "pallas" if pallas_available() else "xla"
+    if mode == "xla":
+        fn = _scatter_swap_xla_donated if donate else _scatter_swap_xla
+        return fn(full, idx, rows)
+    # the Pallas kernel aliases full->out unconditionally; copy first
+    # when the caller wants its input kept alive
+    if not donate:
+        full = jnp.array(full, copy=True)
+    return _scatter_swap_kernel(full, idx, rows,
+                                interpret=(mode == "interpret"))
 
 
 # --------------------------------------------------------------------- #

@@ -47,6 +47,15 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
                       v.astype(jnp.float32)).astype(q.dtype)
 
 
+def scatter_swap_ref(full, idx, rows):
+    """Oracle for kernels.scatter_apply.scatter_swap_2d.
+
+    full [G, C]; idx [K] int32 (unique); rows [K, C].
+    Returns (full with rows written at idx, the displaced rows).
+    """
+    return full.at[idx].set(rows.astype(full.dtype)), full[idx]
+
+
 def rglru_ref(a, b, h0=None):
     """Oracle for kernels.rglru_scan: h_t = a_t * h_{t-1} + b_t.
 

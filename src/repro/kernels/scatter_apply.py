@@ -1,0 +1,88 @@
+"""Fused row scatter-swap — the adapter hot-swap kernel (Pallas/TPU).
+
+Applying a BlockDelta adapter touches only the K delta rows of each
+[G, ...] parameter stack.  Unfused, a hot swap is a gather (save the
+displaced base rows for revert) plus a scatter (write the adapter rows):
+XLA materializes a full-tensor copy for the scatter (`.at[idx].set`
+without donation) — O(G*C) bytes moved for an O(K*C) update.
+
+This kernel fuses both into one pass over ONLY the delta rows:
+
+    full_out           = full;  full_out[idx[k]] = rows[k]
+    saved_out[k]       = full[idx[k]]
+
+- the grid is (K, C/block_c): one program per delta-row tile — untouched
+  rows are never streamed through VMEM;
+- ``input_output_aliases`` aliases ``full`` to ``full_out``: the update is
+  in-place, so HBM traffic is 2 row-reads + 2 row-writes per delta row
+  (the swap itself), nothing proportional to G;
+- the row indices ride in scalar-prefetch SMEM
+  (``PrefetchScalarGridSpec``): the block index_map computes each tile's
+  HBM offset from ``idx`` before the body runs, so the DMA pipeline
+  stays ahead of compute.
+
+The swap is an involution: calling it again with ``saved_out`` restores
+``full`` bit-exactly (replacement semantics — see adapters/delta.py for
+why BlockDelta stores replacement rows rather than additive deltas).
+
+Interpret mode runs the same kernel on CPU for tests; ``kernels/ref.py:
+scatter_swap_ref`` is the pure-jnp oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU grid spec; interpret mode supports it on CPU
+    from jax.experimental.pallas import tpu as pltpu
+except Exception:  # pragma: no cover
+    pltpu = None
+
+
+def _kernel(idx_ref, full_ref, rows_ref, full_out, saved_out):
+    # order matters within one program: read the displaced row first
+    saved_out[...] = full_ref[...]
+    full_out[...] = rows_ref[...].astype(full_out.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"),
+                   donate_argnums=(0,))
+def scatter_swap_2d(full, idx, rows, *, block_c=512, interpret=False):
+    """Swap rows ``idx`` of ``full`` [G, C] with ``rows`` [K, C].
+
+    Returns ``(new_full, displaced)`` where ``new_full[idx] == rows`` and
+    ``displaced == old full[idx]``.  ``full`` is donated (in-place on
+    device).  Exact involution: ``scatter_swap_2d(new_full, idx,
+    displaced)`` restores the original bit-for-bit.
+    """
+    if pltpu is None:
+        raise RuntimeError(
+            "pallas TPU support is unavailable in this jax build "
+            "(PrefetchScalarGridSpec missing) — use the 'xla' scatter "
+            "path (kernels.ops.scatter_swap mode='xla')")
+    G, C = full.shape
+    K = idx.shape[0]
+    bc = min(block_c, C)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(K, pl.cdiv(C, bc)),
+        in_specs=[
+            pl.BlockSpec((1, bc), lambda k, j, idx_ref: (idx_ref[k], j)),
+            pl.BlockSpec((1, bc), lambda k, j, idx_ref: (k, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bc), lambda k, j, idx_ref: (idx_ref[k], j)),
+            pl.BlockSpec((1, bc), lambda k, j, idx_ref: (k, j)),
+        ],
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(full.shape, full.dtype),
+                   jax.ShapeDtypeStruct((K, C), full.dtype)],
+        input_output_aliases={1: 0},  # full aliases full_out (in-place)
+        interpret=interpret,
+    )(idx, full, rows)

@@ -15,22 +15,39 @@ parallelism across DCN).  Axis semantics:
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5 has explicit axis types; older jax is Auto-only
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+
+
+def make_mesh_compat(shape, axis_names) -> Mesh:
+    """``jax.make_mesh`` with Auto axis types across jax versions.
+
+    ``axis_types`` (and ``jax.sharding.AxisType``) only exist in newer
+    jax; on older versions every axis is implicitly Auto, which is
+    exactly what we request — so omitting the kwarg is equivalent.
+    """
+    if AxisType is None:
+        return jax.make_mesh(shape, axis_names)
+    return jax.make_mesh(shape, axis_names,
+                         axis_types=(AxisType.Auto,) * len(axis_names))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_host_mesh(model_axis: int = 1) -> Mesh:
     """Small mesh over whatever devices exist (tests / CPU examples)."""
     n = len(jax.devices())
     assert n % model_axis == 0
-    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return make_mesh_compat((n // model_axis, model_axis),
+                            ("data", "model"))
 
 
 def dp_axes(mesh: Mesh):

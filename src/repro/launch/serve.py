@@ -1,6 +1,13 @@
 """Serving launcher: batched greedy decode over a request file or demo set.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --reduce 8
+
+Multi-tenant: point ``--adapters`` at a BlockDelta registry directory
+(see repro.adapters) and requests are spread across the base model and
+every stored adapter — one resident base, deltas hot-swapped between
+decode micro-batches:
+
+    PYTHONPATH=src python -m repro.launch.serve --adapters /path/to/reg
 """
 from __future__ import annotations
 
@@ -16,6 +23,14 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--adapters", default=None,
+                    help="BlockDelta registry dir: serve every stored "
+                         "adapter alongside the base model")
+    ap.add_argument("--tenants", default="all",
+                    help="comma-separated adapter ids to serve "
+                         "(default: all in the registry)")
+    ap.add_argument("--steps-per-turn", type=int, default=8,
+                    help="decode steps per adapter group before rotating")
     args = ap.parse_args(argv)
 
     import jax
@@ -31,12 +46,27 @@ def main(argv=None):
     if cfg.is_encoder_decoder or cfg.family == "vlm":
         raise SystemExit("serve demo supports LM-family archs")
     params = model_lib.init_params(jax.random.PRNGKey(args.seed), cfg)
+
+    registry, tenants = None, [None]
+    if args.adapters:
+        from repro.adapters import AdapterRegistry
+        registry = AdapterRegistry(args.adapters)
+        ids = (registry.list_adapters() if args.tenants == "all"
+               else [t for t in args.tenants.split(",") if t])
+        missing = [t for t in ids if not registry.exists(t)]
+        if missing:
+            raise SystemExit(f"adapters not in registry: {missing}")
+        tenants += ids
+        print(f"multi-tenant: base + {len(ids)} adapter(s) {ids}")
+
     srv = DecodeServer(cfg, params, batch_slots=args.slots,
-                       max_seq=args.max_seq)
+                       max_seq=args.max_seq, registry=registry,
+                       steps_per_turn=args.steps_per_turn)
     rng = np.random.default_rng(args.seed)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size, 4 + i % 4),
-                    max_new_tokens=args.new_tokens)
+                    max_new_tokens=args.new_tokens,
+                    adapter_id=tenants[i % len(tenants)])
             for i in range(args.requests)]
     for r in reqs:
         srv.submit(r)
@@ -47,8 +77,14 @@ def main(argv=None):
     tok = sum(len(r.out) for r in reqs)
     print(f"served {len(reqs)} requests, {tok} tokens in {dt:.2f}s "
           f"({tok / dt:.1f} tok/s, {srv.steps} decode steps)")
+    if registry is not None:
+        s = srv.stats()
+        print(f"adapter swaps: {s['swaps']}, "
+              f"{s['swap_bytes'] / 2 ** 20:.2f} MiB moved; "
+              f"registry: {registry.stats()}")
     for r in reqs[:3]:
-        print(f"  req {r.rid}: {list(r.prompt)} -> {r.out}")
+        tag = f" [{r.adapter_id or 'base'}]"
+        print(f"  req {r.rid}{tag}: {list(r.prompt)} -> {r.out}")
     return reqs
 
 

@@ -1,4 +1,4 @@
-"""Batched decode serving loop (continuous-batching-lite).
+"""Batched decode serving loop (continuous-batching-lite, multi-tenant).
 
 A request queue feeds fixed-size decode batches; finished sequences are
 swapped out slot-wise while the rest keep decoding — the slot-batching
@@ -10,6 +10,16 @@ scheme of production LLM servers reduced to its JAX essentials:
   jitted blend (recurrent states would otherwise advance on pad tokens),
 - prompt priming through the same decode step (teacher forcing), with the
   final prime logits emitting the first generated token — no wasted step.
+
+Multi-tenant (BlockDelta) serving: requests may carry an ``adapter_id``
+resolved against an adapter registry (``repro.adapters``).  One base
+model stays resident; the scheduler groups slots by adapter and runs
+each group for a micro-batch of ``steps_per_turn`` decode steps, hot-
+swapping the delta rows between turns (row scatter-swap — O(delta)
+bytes, not O(params)).  Because inactive slots are masked out of both
+the cache blend and token emission, a slot only ever decodes under its
+own adapter's weights: per-request outputs are identical to a single-
+tenant server running that adapter alone.
 """
 from __future__ import annotations
 
@@ -23,29 +33,49 @@ import numpy as np
 
 from repro.models import model as model_lib
 
+BASE = None  # adapter id of the un-adapted base model
+
 
 @dataclass
 class Request:
     rid: int
     prompt: np.ndarray          # [P] int32
     max_new_tokens: int = 16
+    adapter_id: Optional[str] = BASE   # None => base model
     out: List[int] = field(default_factory=list)
     done: bool = False
 
 
 class DecodeServer:
     def __init__(self, cfg, params, *, batch_slots: int = 4,
-                 max_seq: int = 256, attn_impl: str = "full"):
+                 max_seq: int = 256, attn_impl: str = "full",
+                 registry=None, steps_per_turn: int = 8,
+                 swap_mode: str = "auto"):
         self.cfg = cfg
-        self.params = params
+        if registry is not None:
+            # the server owns its resident weights: hot swaps donate the
+            # edited leaves in place, so they must not alias caller arrays
+            from repro.adapters import copy_tree
+            params = copy_tree(params)
+        self.params = params            # live tree (current adapter applied)
         self.slots = batch_slots
         self.max_seq = max_seq
+        self.registry = registry
+        self.steps_per_turn = max(1, steps_per_turn)
+        self.swap_mode = swap_mode
         self.queue: List[Request] = []
         self.active: List[Optional[Request]] = [None] * batch_slots
         self.pos = np.zeros(batch_slots, np.int32)  # next write index
         self.cache = model_lib.init_cache(cfg, batch_slots, max_seq)
         self.tokens = np.zeros((batch_slots, 1), np.int32)
         self.steps = 0
+        # adapter swap state
+        self._applied: Optional[str] = BASE
+        self._displaced = None          # SparseDelta restoring the base
+        self._turn_group: Optional[str] = BASE
+        self._turn_left = 0
+        self.swaps = 0
+        self.swap_bytes = 0
 
         def _decode(params, cache, token, pos_vec, active_mask):
             logits, new_cache = model_lib.decode_step(
@@ -61,43 +91,153 @@ class DecodeServer:
         self._decode = jax.jit(_decode, donate_argnums=(1,))
 
     def submit(self, req: Request):
+        if req.adapter_id is not BASE:
+            # reject up front: an unknown adapter discovered at schedule
+            # time would wedge the queue (the request can never decode)
+            if self.registry is None:
+                raise ValueError(f"request {req.rid} wants adapter "
+                                 f"{req.adapter_id!r} but no registry is "
+                                 f"set")
+            if not self.registry.exists(req.adapter_id):
+                raise ValueError(f"request {req.rid}: adapter "
+                                 f"{req.adapter_id!r} not in registry")
         self.queue.append(req)
 
-    def _mask(self, only: Optional[int] = None) -> np.ndarray:
+    # ------------------------------------------------------------------ #
+    # adapter swapping
+    # ------------------------------------------------------------------ #
+
+    def _ensure_adapter(self, adapter_id: Optional[str]):
+        """Make ``self.params`` carry ``adapter_id`` (lazy: no-op when it
+        already does).  Swap = revert current delta rows, apply new ones;
+        both are exact row swaps so the base is never corrupted."""
+        if adapter_id == self._applied:
+            return
+        from repro.adapters import delta as delta_lib
+        if self._applied is not BASE:
+            disp, self._displaced = self._displaced, None
+            self.params = delta_lib.revert_delta(
+                self.params, disp, mode=self.swap_mode, donate=True)
+            self.registry.release(self._applied)
+            # state committed per half-swap: if the apply below fails the
+            # server is consistently back on the base model
+            self._applied = BASE
+            self.swap_bytes += disp.nbytes
+            self.swaps += 1
+        if adapter_id is not BASE:
+            d = self.registry.acquire(adapter_id)
+            try:
+                self.params, self._displaced = delta_lib.apply_delta(
+                    self.params, d, mode=self.swap_mode, donate=True)
+            except Exception:
+                self.registry.release(adapter_id)
+                raise
+            self._applied = adapter_id
+            self.swap_bytes += d.nbytes
+            self.swaps += 1
+
+    def restore_base(self):
+        """Revert any applied adapter — ``self.params`` is the pristine
+        base again (bit-exact; see adapters/delta.py)."""
+        self._ensure_adapter(BASE)
+
+    # ------------------------------------------------------------------ #
+    # scheduling
+    # ------------------------------------------------------------------ #
+
+    def _present_groups(self) -> List[Optional[str]]:
+        """Adapter ids that can make progress RIGHT NOW, in deterministic
+        order: a group with an active slot can decode; a queue-only group
+        needs a free slot to admit into.  Queue-only groups with every
+        slot occupied are excluded — rotating to them would pay a swap
+        pair for zero decode work (they re-qualify once a slot frees)."""
+        free = any(r is None for r in self.active)
+        active_groups = {r.adapter_id for r in self.active if r is not None}
+        seen, out = set(), []
+        for r in list(self.active) + self.queue:
+            if r is None or r.adapter_id in seen:
+                continue
+            seen.add(r.adapter_id)
+            if r.adapter_id in active_groups or free:
+                out.append(r.adapter_id)
+        return out
+
+    def _group_has_work(self, g) -> bool:
+        return any(r is not None and r.adapter_id == g
+                   for r in list(self.active) + self.queue)
+
+    def _schedule(self) -> Optional[str]:
+        """Pick the adapter group for this decode micro-step: stay on the
+        current group for up to ``steps_per_turn`` steps, then rotate —
+        amortizing each hot swap over a micro-batch of decode steps."""
+        groups = self._present_groups()
+        if not groups:
+            return self._turn_group
+        if (self._turn_left > 0 and self._turn_group in groups):
+            return self._turn_group
+        if self._turn_group in groups and len(groups) == 1:
+            self._turn_left = self.steps_per_turn
+            return self._turn_group
+        # rotate: next group after the current one in list order
+        try:
+            i = groups.index(self._turn_group)
+            nxt = groups[(i + 1) % len(groups)]
+        except ValueError:
+            nxt = groups[0]
+        self._turn_group = nxt
+        self._turn_left = self.steps_per_turn
+        return nxt
+
+    def _mask(self, only: Optional[int] = None,
+              group: Optional[str] = BASE, any_group: bool = False
+              ) -> np.ndarray:
         if only is not None:
             m = np.zeros(self.slots, bool)
             m[only] = True
             return m
-        return np.asarray([r is not None for r in self.active])
+        return np.asarray([r is not None and
+                           (any_group or r.adapter_id == group)
+                           for r in self.active])
 
-    def _admit(self):
+    def _admit(self, group: Optional[str] = BASE):
+        """Fill free slots with queued requests of ``group`` and prime
+        their prompts (the delta for ``group`` is already applied)."""
         for slot in range(self.slots):
-            if self.active[slot] is None and self.queue:
-                req = self.queue.pop(0)
-                self.active[slot] = req
-                logits = None
-                toks = self.tokens.copy()
-                for t, tok in enumerate(req.prompt):
-                    toks[slot, 0] = int(tok)
-                    pos = self.pos.copy()
-                    pos[slot] = t
-                    logits, self.cache = self._decode(
-                        self.params, self.cache, jnp.asarray(toks),
-                        jnp.asarray(pos), jnp.asarray(self._mask(slot)))
-                # final prime logits predict the first new token
-                first = int(jnp.argmax(logits[slot]))
-                req.out.append(first)
-                self.tokens[slot, 0] = first
-                self.pos[slot] = len(req.prompt)
-                if len(req.out) >= req.max_new_tokens:
-                    req.done = True
-                    self.active[slot] = None
+            if self.active[slot] is not None:
+                continue
+            qi = next((i for i, r in enumerate(self.queue)
+                       if r.adapter_id == group), None)
+            if qi is None:
+                return
+            req = self.queue.pop(qi)
+            self.active[slot] = req
+            logits = None
+            toks = self.tokens.copy()
+            for t, tok in enumerate(req.prompt):
+                toks[slot, 0] = int(tok)
+                pos = self.pos.copy()
+                pos[slot] = t
+                logits, self.cache = self._decode(
+                    self.params, self.cache, jnp.asarray(toks),
+                    jnp.asarray(pos), jnp.asarray(self._mask(slot)))
+            # final prime logits predict the first new token
+            first = int(jnp.argmax(logits[slot]))
+            req.out.append(first)
+            self.tokens[slot, 0] = first
+            self.pos[slot] = len(req.prompt)
+            if len(req.out) >= req.max_new_tokens:
+                req.done = True
+                self.active[slot] = None
 
     def step(self) -> int:
-        """One decode step for all active slots; returns #finished."""
-        self._admit()
-        mask = self._mask()
+        """One decode micro-step for the scheduled adapter group;
+        returns #finished requests."""
+        group = self._schedule()
+        self._ensure_adapter(group)
+        self._admit(group)
+        mask = self._mask(group=group)
         if not mask.any():
+            self._turn_left = 0  # group drained during admission: rotate
             return 0
         logits, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(self.tokens),
@@ -105,7 +245,7 @@ class DecodeServer:
         nxt = np.asarray(jnp.argmax(logits, -1))
         finished = 0
         for slot, req in enumerate(self.active):
-            if req is None:
+            if req is None or not mask[slot]:
                 continue
             tok = int(nxt[slot])
             req.out.append(tok)
@@ -117,6 +257,9 @@ class DecodeServer:
                 self.active[slot] = None
                 finished += 1
         self.steps += 1
+        self._turn_left -= 1
+        if not self._group_has_work(group):
+            self._turn_left = 0
         return finished
 
     def run_until_drained(self, max_steps=10_000) -> List[Request]:
@@ -126,3 +269,8 @@ class DecodeServer:
             if not self.queue and all(r is None for r in self.active):
                 break
         return all_reqs
+
+    def stats(self) -> Dict[str, float]:
+        return {"steps": self.steps, "swaps": self.swaps,
+                "swap_bytes": self.swap_bytes,
+                "applied": self._applied}

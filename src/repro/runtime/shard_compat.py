@@ -1,0 +1,41 @@
+"""shard_map across jax versions.
+
+Newer jax exposes ``jax.shard_map(f, mesh, in_specs, out_specs,
+axis_names=..., check_vma=...)``; older releases only have
+``jax.experimental.shard_map.shard_map(f, mesh, in_specs, out_specs,
+check_rep=..., auto=...)``.  The mapping is mechanical:
+
+- ``check_vma`` (new) == ``check_rep`` (old)
+- ``axis_names`` (new: the axes the body is *manual* over) is the
+  complement of ``auto`` (old: the axes left to the compiler)
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    _new_shard_map = jax.shard_map  # jax >= 0.6-style public API
+except AttributeError:  # pragma: no cover - depends on installed jax
+    _new_shard_map = None
+    from jax.experimental.shard_map import shard_map as _old_shard_map
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma=None):
+    if _new_shard_map is not None:
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return _new_shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kw)
+    kw = {}
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            kw["auto"] = auto
+    return _old_shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)

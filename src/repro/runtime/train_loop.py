@@ -35,6 +35,11 @@ class TrainLoopConfig:
     log_every: int = 10
     straggler: StragglerConfig = dataclasses.field(
         default_factory=lambda: StragglerConfig(action="none"))
+    # BlockDelta export: at every checkpoint (and at run end) diff the
+    # trainer's merged params against the pre-finetune base and publish
+    # the row-sparse delta to an adapter registry (repro.adapters).
+    adapter_dir: Optional[str] = None
+    adapter_id: str = "adapter"
 
 
 def _blockllm_meta(tr: BlockLLMTrainer) -> dict:
@@ -114,6 +119,7 @@ def run(trainer, batch_fn: Callable[[int], dict], cfg: TrainLoopConfig,
             start_step = latest
             trainer.step = start_step
 
+    export = _AdapterExporter.maybe(trainer, cfg, start_step)
     mon = StragglerMonitor(cfg.straggler)
     history = []
     for step in range(start_step, cfg.total_steps):
@@ -133,6 +139,50 @@ def run(trainer, batch_fn: Callable[[int], dict], cfg: TrainLoopConfig,
                 meta["blockllm"] = _blockllm_meta(trainer)
             ckpt_lib.save(cfg.ckpt_dir, step + 1, _train_state(trainer),
                           meta=meta, keep=cfg.keep_ckpts)
+            if export:
+                export.emit(trainer, step + 1)
         if crash_at is not None and step + 1 == crash_at:
             raise RuntimeError(f"simulated node failure at step {step + 1}")
+    if export:
+        export.emit(trainer, cfg.total_steps)
     return {"losses": history, "final_step": cfg.total_steps}
+
+
+class _AdapterExporter:
+    """Publishes the trainer's row-sparse delta vs. the pre-finetune base
+    to an adapter registry at checkpoint boundaries (export hook)."""
+
+    def __init__(self, registry, base, adapter_id: str):
+        self.registry = registry
+        self.base = base
+        self.adapter_id = adapter_id
+        self.last_step = -1
+
+    @staticmethod
+    def maybe(trainer, cfg: "TrainLoopConfig", start_step: int):
+        if not cfg.adapter_dir:
+            return None
+        if start_step != 0:
+            # resumed runs have lost the pre-finetune base; a correct
+            # delta needs the base snapshot from step 0
+            print("adapter export skipped: resume without a base snapshot",
+                  flush=True)
+            return None
+        from repro.adapters import AdapterRegistry, copy_tree
+        base = (trainer.merged_params()
+                if hasattr(trainer, "merged_params") else trainer.params)
+        # deep copy: merged trees can alias buffers the jitted train step
+        # donates (e.g. BlockLLM active leaves) — the snapshot must outlive
+        # the whole run
+        return _AdapterExporter(AdapterRegistry(cfg.adapter_dir),
+                                copy_tree(base), cfg.adapter_id)
+
+    def emit(self, trainer, step: int):
+        if step == self.last_step:
+            return  # final step coincides with a checkpoint boundary
+        from repro.adapters import delta_from_trainer
+        d = delta_from_trainer(trainer, self.base,
+                               meta={"step": step,
+                                     "adapter_id": self.adapter_id})
+        self.registry.put(self.adapter_id, d)
+        self.last_step = step

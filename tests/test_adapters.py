@@ -1,0 +1,342 @@
+"""BlockDelta adapter subsystem: extract/apply/revert exactness, the
+scatter-swap kernel vs. its oracle, registry LRU + ref-counting, the
+train-loop export hook, and a multi-tenant serve equivalence test."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.adapters import (AdapterRegistry, InMemoryRegistry, SparseDelta,
+                            apply_delta, extract_delta, fingerprint,
+                            load_delta, revert_delta, save_delta)
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref as kernel_ref
+from repro.kernels import scatter_apply as sa
+from repro.models import model
+
+K = jax.random.PRNGKey
+
+
+def _perturb(params, *, rows=(1, 3), leaf=None, scale=0.5, seed=0):
+    """Tuned tree: bump ``rows`` of every stack (and optionally one whole
+    leaf) — the shape of a BlockLLM finetune."""
+    rng = np.random.RandomState(seed)
+    out = dict(jax.tree.map(lambda a: a, params))
+    stages = []
+    for stage in params["stages"]:
+        st = {}
+        for pos, sub in stage.items():
+            st[pos] = jax.tree.map(
+                lambda a: a.at[np.asarray(rows)].add(
+                    scale * jnp.asarray(rng.randn(len(rows),
+                                                  *a.shape[1:]),
+                                        a.dtype)), sub)
+        stages.append(st)
+    out["stages"] = stages
+    if leaf is not None:
+        out[leaf] = jax.tree.map(lambda a: a + scale, out[leaf])
+    return out
+
+
+# --------------------------------------------------------------------- #
+# delta extract / apply / revert
+# --------------------------------------------------------------------- #
+
+
+def test_extract_apply_revert_roundtrip_exact(tiny_cfg, tiny_params):
+    tuned = _perturb(tiny_params, leaf="final_norm")
+    d = extract_delta(tiny_params, tuned, meta={"adapter_id": "a"})
+    # only the touched rows are captured
+    for name, e in d.entries.items():
+        if e.idx is not None:
+            assert e.idx.tolist() == [1, 3], name
+    assert d.nbytes < sum(l.size * l.dtype.itemsize
+                          for l in jax.tree.leaves(tiny_params))
+
+    for mode in ("xla", "interpret"):
+        applied, displaced = apply_delta(tiny_params, d, mode=mode)
+        for a, b in zip(jax.tree.leaves(applied), jax.tree.leaves(tuned)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        back = revert_delta(applied, displaced, mode=mode)
+        for a, b in zip(jax.tree.leaves(back),
+                        jax.tree.leaves(tiny_params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_extract_skips_identical_and_detects_masked_rows(tiny_params):
+    d = extract_delta(tiny_params, tiny_params)
+    assert d.entries == {}
+    assert d.nbytes == 0
+
+
+def test_fingerprint_guards_mismatched_base(tiny_cfg, tiny_params):
+    tuned = _perturb(tiny_params)
+    d = extract_delta(tiny_params, tuned)
+    other = model.init_params(K(1), tiny_cfg)  # same arch => same print
+    apply_delta(other, d)  # fingerprint is structural: this is allowed
+    d.meta["base_fingerprint"] = "deadbeefdeadbeef"
+    with pytest.raises(ValueError, match="fingerprint"):
+        apply_delta(tiny_params, d)
+
+
+def test_delta_serialization_bit_exact(tmp_path, tiny_params):
+    tuned = _perturb(tiny_params, leaf="final_norm")
+    d = extract_delta(tiny_params, tuned, meta={"adapter_id": "a"})
+    save_delta(tmp_path / "a", d)
+    assert (tmp_path / "a" / "DONE").exists()
+    d2 = load_delta(tmp_path / "a")
+    assert set(d2.entries) == set(d.entries)
+    for name in d.entries:
+        e, e2 = d.entries[name], d2.entries[name]
+        np.testing.assert_array_equal(e.rows, e2.rows)
+        if e.idx is None:
+            assert e2.idx is None
+        else:
+            np.testing.assert_array_equal(e.idx, e2.idx)
+    assert d2.meta["base_fingerprint"] == d.meta["base_fingerprint"]
+
+
+def test_delta_bf16_roundtrip(tmp_path):
+    base = {"w": jnp.arange(64, dtype=jnp.bfloat16).reshape(8, 8)}
+    tuned = {"w": base["w"].at[2].add(jnp.bfloat16(1.5))}
+    d = extract_delta(base, tuned)
+    save_delta(tmp_path / "bf", d)
+    d2 = load_delta(tmp_path / "bf")
+    applied, _ = apply_delta(base, d2)
+    np.testing.assert_array_equal(np.asarray(applied["w"], np.float32),
+                                  np.asarray(tuned["w"], np.float32))
+
+
+# --------------------------------------------------------------------- #
+# scatter-swap kernel vs ref
+# --------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("G,C,k", [(16, 1000, 3), (8, 128, 8), (5, 7, 2)])
+def test_scatter_swap_kernel_matches_ref(G, C, k):
+    rng = np.random.RandomState(0)
+    full_np = rng.randn(G, C).astype(np.float32)
+    rows_np = rng.randn(k, C).astype(np.float32)
+    idx = jnp.asarray(rng.choice(G, size=k, replace=False), jnp.int32)
+    ref_full, ref_disp = kernel_ref.scatter_swap_ref(
+        jnp.asarray(full_np), idx, jnp.asarray(rows_np))
+    # NB: the kernel donates its first argument — pass fresh arrays
+    out, disp = sa.scatter_swap_2d(jnp.asarray(full_np), idx,
+                                   jnp.asarray(rows_np), interpret=True)
+    out_np = np.asarray(out)
+    np.testing.assert_array_equal(out_np, np.asarray(ref_full))
+    np.testing.assert_array_equal(np.asarray(disp), np.asarray(ref_disp))
+    # involution: swapping the displaced rows back restores the original
+    back, disp2 = sa.scatter_swap_2d(out, idx, disp, interpret=True)
+    np.testing.assert_array_equal(np.asarray(back), full_np)
+    np.testing.assert_array_equal(np.asarray(disp2), rows_np)
+
+
+def test_scatter_swap_wrapper_arbitrary_rank():
+    rng = np.random.RandomState(1)
+    full = jnp.asarray(rng.randn(6, 4, 5), jnp.float32)
+    rows = jnp.asarray(rng.randn(2, 4, 5), jnp.float32)
+    idx = jnp.asarray([4, 0], jnp.int32)
+    for mode in ("xla", "interpret"):
+        out, disp = kernel_ops.scatter_swap(full, idx, rows, mode=mode)
+        np.testing.assert_array_equal(np.asarray(out[4]),
+                                      np.asarray(rows[0]))
+        np.testing.assert_array_equal(np.asarray(disp),
+                                      np.asarray(full)[np.asarray(idx)])
+    # empty index set is a no-op
+    out, _ = kernel_ops.scatter_swap(
+        full, jnp.zeros((0,), jnp.int32),
+        jnp.zeros((0, 4, 5), jnp.float32), mode="interpret")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(full))
+
+
+# --------------------------------------------------------------------- #
+# registry: LRU + ref-counting + atomicity
+# --------------------------------------------------------------------- #
+
+
+def _tiny_delta(i: int) -> SparseDelta:
+    from repro.adapters.delta import DeltaEntry
+    return SparseDelta(
+        {"w": DeltaEntry(idx=np.asarray([i % 4], np.int32),
+                         rows=np.full((1, 8), float(i), np.float32))},
+        meta={})
+
+
+def test_registry_lru_eviction(tmp_path):
+    reg = AdapterRegistry(tmp_path, capacity=2)
+    for i in range(3):
+        reg.put(f"a{i}", _tiny_delta(i))
+    assert reg.list_adapters() == ["a0", "a1", "a2"]
+    reg.get("a0")
+    reg.get("a1")
+    reg.get("a2")                      # evicts a0 (LRU)
+    assert reg.cached_ids() == ["a1", "a2"]
+    assert reg.stats()["evictions"] == 1
+    reg.get("a0")                      # miss -> reload, evicts a1
+    assert reg.stats()["misses"] == 4
+    reg.get("a2")
+    assert reg.stats()["hits"] == 1
+
+
+def test_registry_refcount_blocks_eviction(tmp_path):
+    reg = AdapterRegistry(tmp_path, capacity=1)
+    reg.put("a", _tiny_delta(0))
+    reg.put("b", _tiny_delta(1))
+    reg.acquire("a")
+    reg.acquire("a")
+    assert reg.refcount("a") == 2
+    reg.get("b")                       # over capacity but "a" is pinned
+    assert "a" in reg.cached_ids()
+    reg.release("a")
+    assert reg.refcount("a") == 1
+    reg.release("a")                   # drops to 0 -> eviction drains
+    assert reg.refcount("a") == 0
+    assert len(reg.cached_ids()) <= 1
+    with pytest.raises(AssertionError):
+        reg.release("a")
+
+
+def test_registry_put_is_atomic_and_replaces(tmp_path):
+    reg = AdapterRegistry(tmp_path, capacity=2)
+    reg.put("a", _tiny_delta(0))
+    # a torn write (no DONE) must be invisible
+    bad = tmp_path / "torn"
+    bad.mkdir()
+    (bad / "manifest.json").write_text("{}")
+    assert reg.list_adapters() == ["a"]
+    assert not reg.exists("torn")
+    # re-put replaces atomically and invalidates the cache
+    reg.get("a")
+    reg.put("a", _tiny_delta(5))
+    assert float(reg.get("a").entries["w"].rows[0, 0]) == 5.0
+
+
+# --------------------------------------------------------------------- #
+# train-loop export hook
+# --------------------------------------------------------------------- #
+
+
+def test_train_loop_exports_adapter(tmp_path, tiny_cfg):
+    from repro.core.blockllm import BlockLLMConfig, BlockLLMTrainer
+    from repro.core.selection import SelectorConfig
+    from repro.optim.adam import Adam
+    from repro.runtime.train_loop import TrainLoopConfig, run
+
+    params = model.init_params(K(0), tiny_cfg)
+    base = jax.tree.map(lambda a: a.copy(), params)
+    tr = BlockLLMTrainer(
+        tiny_cfg, params, adam=Adam(lr=3e-3),
+        bcfg=BlockLLMConfig(selector=SelectorConfig(
+            sparsity=0.9, policy="static", static_k_frac=0.5,
+            patience=1000)))
+    toks = jnp.arange(32)[None, :].repeat(2, 0) % tiny_cfg.vocab_size
+    run(tr, lambda s: {"tokens": (toks + s) % tiny_cfg.vocab_size},
+        TrainLoopConfig(total_steps=4, ckpt_every=2,
+                        ckpt_dir=str(tmp_path / "ckpt"), log_every=0,
+                        adapter_dir=str(tmp_path / "adapters"),
+                        adapter_id="taskB"))
+    reg = AdapterRegistry(tmp_path / "adapters")
+    assert reg.list_adapters() == ["taskB"]
+    d = reg.get("taskB")
+    assert d.num_rows() > 0
+    # applying the exported delta to the base reproduces merged params
+    applied, _ = apply_delta(base, d)
+    for a, b in zip(jax.tree.leaves(applied),
+                    jax.tree.leaves(tr.merged_params())):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------- #
+# multi-tenant serving equivalence
+# --------------------------------------------------------------------- #
+
+
+def test_multi_tenant_serve_matches_single_tenant(tiny_cfg, tiny_params):
+    from repro.runtime.serve_loop import DecodeServer, Request
+
+    tunedA = _perturb(tiny_params, rows=(0, 2), scale=0.8, seed=10)
+    tunedB = _perturb(tiny_params, rows=(1, 3), scale=-0.6, seed=20)
+    reg = InMemoryRegistry({
+        "A": extract_delta(tiny_params, tunedA, meta={"adapter_id": "A"}),
+        "B": extract_delta(tiny_params, tunedB, meta={"adapter_id": "B"}),
+    })
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, tiny_cfg.vocab_size, 3 + i % 3)
+               for i in range(6)]
+    tenancy = ["A", "B", None, "B", "A", None]
+
+    srv = DecodeServer(tiny_cfg, tiny_params, batch_slots=3, max_seq=64,
+                       registry=reg, steps_per_turn=2)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=6, adapter_id=t)
+            for i, (p, t) in enumerate(zip(prompts, tenancy))]
+    for r in reqs:
+        srv.submit(r)
+    srv.run_until_drained()
+    assert all(r.done for r in reqs)
+    assert srv.swaps > 0
+
+    # after restore_base the resident params are the pristine base
+    srv.restore_base()
+    for a, b in zip(jax.tree.leaves(srv.params),
+                    jax.tree.leaves(tiny_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # single-tenant references: each adapter served alone
+    for tenant, tuned in (("A", tunedA), ("B", tunedB),
+                          (None, tiny_params)):
+        ref_srv = DecodeServer(tiny_cfg, tuned, batch_slots=3, max_seq=64)
+        ref_reqs = [Request(rid=r.rid, prompt=r.prompt, max_new_tokens=6)
+                    for r in reqs if r.adapter_id == tenant]
+        for r in ref_reqs:
+            ref_srv.submit(r)
+        ref_srv.run_until_drained()
+        by_rid = {r.rid: r for r in ref_reqs}
+        for r in reqs:
+            if r.adapter_id == tenant:
+                assert r.out == by_rid[r.rid].out, \
+                    f"req {r.rid} (adapter {tenant}) diverged"
+
+
+def test_serve_rejects_adapter_without_registry(tiny_cfg, tiny_params):
+    from repro.runtime.serve_loop import DecodeServer, Request
+    srv = DecodeServer(tiny_cfg, tiny_params, batch_slots=1, max_seq=32)
+    with pytest.raises(ValueError, match="no registry"):
+        srv.submit(Request(rid=0, prompt=np.asarray([1, 2], np.int32),
+                           adapter_id="ghost"))
+
+
+def test_serve_rejects_unknown_adapter_at_submit(tiny_cfg, tiny_params):
+    from repro.runtime.serve_loop import DecodeServer, Request
+    reg = InMemoryRegistry({"real": extract_delta(
+        tiny_params, _perturb(tiny_params))})
+    srv = DecodeServer(tiny_cfg, tiny_params, batch_slots=1, max_seq=32,
+                       registry=reg)
+    with pytest.raises(ValueError, match="not in registry"):
+        srv.submit(Request(rid=0, prompt=np.asarray([1, 2], np.int32),
+                           adapter_id="ghost"))
+
+
+def test_scheduler_skips_queue_only_group_with_no_free_slot(tiny_cfg,
+                                                            tiny_params):
+    """A queued adapter group must not trigger hot swaps while every
+    slot is occupied by another group (swap pair for zero decode)."""
+    from repro.runtime.serve_loop import DecodeServer, Request
+    reg = InMemoryRegistry({"A": extract_delta(
+        tiny_params, _perturb(tiny_params, seed=3))})
+    srv = DecodeServer(tiny_cfg, tiny_params, batch_slots=1, max_seq=64,
+                       registry=reg, steps_per_turn=2)
+    long_base = Request(rid=0, prompt=np.asarray([1, 2], np.int32),
+                        max_new_tokens=12)
+    queued_a = Request(rid=1, prompt=np.asarray([3, 4], np.int32),
+                       max_new_tokens=4, adapter_id="A")
+    srv.submit(long_base)
+    srv.step()           # admits the base request into the only slot
+    srv.submit(queued_a)
+    for _ in range(5):   # base still occupies the slot: no swap allowed
+        srv.step()
+    assert not long_base.done and srv.swaps == 0
+    srv.run_until_drained()
+    assert long_base.done and queued_a.done
+    assert srv.swaps == 1  # exactly one apply once the slot freed

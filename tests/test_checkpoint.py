@@ -102,11 +102,11 @@ ELASTIC_SCRIPT = r"""
 import os, sys, json
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d"
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import checkpointer as ck
+from repro.launch.mesh import make_mesh_compat
 
-mesh = jax.make_mesh((%d, %d), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh_compat((%d, %d), ("data", "model"))
 tree = {"w": jnp.arange(64.0).reshape(8, 8)}
 mode = sys.argv[1]
 path = sys.argv[2]
@@ -125,8 +125,9 @@ else:
 
 def test_elastic_restore_across_meshes(tmp_path):
     """Save on a (2,4) 8-device mesh, restore on a (2,2) 4-device mesh."""
-    env = dict(os.environ, PYTHONPATH="src")
-    env.pop("JAX_PLATFORMS", None)
+    # explicit cpu pin (not unset): with libtpu installed but no TPU,
+    # platform probing hangs — see tests/test_distributed.py::_run
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
     p1 = subprocess.run(
         [sys.executable, "-c", ELASTIC_SCRIPT % (8, 2, 4), "save",
          str(tmp_path)], capture_output=True, text=True, env=env,

@@ -15,8 +15,11 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _run(script: str) -> str:
-    env = dict(os.environ, PYTHONPATH="src")
-    env.pop("JAX_PLATFORMS", None)
+    # Pin the cpu platform EXPLICITLY (don't unset): containers with
+    # libtpu installed but no TPU hardware hang in TPU client init when
+    # jax is left to probe platforms.  --xla_force_host_platform_device
+    # _count composes fine with JAX_PLATFORMS=cpu.
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
     p = subprocess.run([sys.executable, "-c", script], capture_output=True,
                        text=True, env=env, cwd=REPO, timeout=900)
     assert p.returncode == 0, (p.stdout[-2000:], p.stderr[-3000:])
@@ -27,10 +30,10 @@ SHARDED_TRAIN = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.configs.base import ModelConfig
 from repro.configs.shapes import ShapeConfig
 from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_mesh_compat
 from repro.launch.specs import concrete_batch
 from repro.models import model
 from repro.runtime import shard_ctx
@@ -39,8 +42,7 @@ cfg = ModelConfig(name="t", family="dense", num_layers=4, d_model=64,
                   num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256,
                   remat=False, dtype="float32")
 shape = ShapeConfig("t", seq_len=32, global_batch=8, kind="train")
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh_compat((4, 2), ("data", "model"))
 setup = steps_lib.build_train_setup(cfg, shape, mesh, sparsity=0.8,
                                     k_frac=0.5, attn_impl="full")
 # materialize concrete args from the abstract ones
@@ -85,8 +87,9 @@ MOE_SHARDMAP = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType, PartitionSpec as P, NamedSharding
+from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.configs.base import ModelConfig
+from repro.launch.mesh import make_mesh_compat
 from repro.models import moe as moe_lib
 from repro.runtime import shard_ctx
 from repro.runtime.moe_parallel import moe_apply_maybe_sharded
@@ -95,8 +98,7 @@ cfg = ModelConfig(name="t", family="moe", num_layers=2, d_model=32,
                   num_heads=4, num_kv_heads=2, d_ff=0, vocab_size=64,
                   num_experts=4, num_experts_per_tok=2, moe_d_ff=64,
                   capacity_factor=16.0, remat=False, dtype="float32")
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh_compat((4, 2), ("data", "model"))
 p = moe_lib.moe_init(jax.random.PRNGKey(0), cfg)
 x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 32))
 rules = shard_ctx.ShardRules(mesh=mesh, dp_axes=("data",))
@@ -120,7 +122,7 @@ COMPRESSED_PSUM = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
+from repro.launch.mesh import make_mesh_compat
 from repro.runtime.compression import (compressed_psum_tree, init_errors,
                                         quantize_int8, dequantize_int8)
 
@@ -132,7 +134,7 @@ err = np.abs(np.asarray(deq - x))
 bound = np.repeat(np.asarray(s), 256)[:1024] * 0.5 + 1e-6
 assert (err <= bound).all()
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+mesh = make_mesh_compat((8,), ("data",))
 g = {"w": jax.random.normal(jax.random.PRNGKey(1), (64, 64))}
 e = init_errors(g)
 
@@ -158,10 +160,10 @@ COMM_SCALING = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
 from repro.configs.base import ModelConfig
 from repro.configs.shapes import ShapeConfig
 from repro.launch import steps as steps_lib, hlo_cost
+from repro.launch.mesh import make_mesh_compat
 from repro.runtime import shard_ctx
 
 # large enough that GSPMD must reduce gradients rather than replicate
@@ -170,8 +172,7 @@ cfg = ModelConfig(name="t", family="dense", num_layers=8, d_model=256,
                   num_heads=4, num_kv_heads=4, d_ff=1024, vocab_size=2048,
                   remat=False, dtype="float32")
 shape = ShapeConfig("t", seq_len=256, global_batch=32, kind="train")
-mesh = jax.make_mesh((8, 1), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh_compat((8, 1), ("data", "model"))
 
 def grad_comm_bytes(k_frac):
     setup = steps_lib.build_train_setup(cfg, shape, mesh, sparsity=0.5,
