@@ -11,23 +11,26 @@ import jax
 import numpy as np
 
 from benchmarks import common
-from repro.baselines.badam import BAdamTrainer
-from repro.baselines.galore import GaLore, GaLoreTrainer
-from repro.baselines.lora import LoRATrainer
-from repro.core.blockllm import BlockLLMConfig, BlockLLMTrainer
+from repro import trainers
+from repro.core.blockllm import BlockLLMConfig
 from repro.core.selection import SelectorConfig
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.models import model as model_lib
 from repro.optim.adam import Adam
+from repro.trainers.api import TrainerHandle
+
+
+def _handle(name, cfg, params, **kw):
+    core = trainers.make(name, cfg, **kw)
+    return TrainerHandle(core, core.init(jax.random.PRNGKey(0), params))
 
 
 def _pretrain(cfg, steps, pipe):
-    from repro.core.blockllm import FullAdamTrainer
-    tr = FullAdamTrainer(cfg, model_lib.init_params(
+    tr = _handle("adam", cfg, model_lib.init_params(
         jax.random.PRNGKey(0), cfg), adam=Adam(lr=2e-3))
     for s in range(steps):
         tr.train_step(pipe.batch(s))
-    return tr.params
+    return tr.state.arrays["params"]
 
 
 def run(quick=False):
@@ -46,19 +49,18 @@ def run(quick=False):
     methods = {
         # embeddings frozen for every method (LoRA/BAdam convention; at
         # this toy scale the embedding would otherwise dominate memory)
-        "blockllm": lambda: BlockLLMTrainer(
-            cfg, clone(), adam=Adam(lr=1e-3),
+        "blockllm": lambda: _handle(
+            "blockllm", cfg, clone(), adam=Adam(lr=1e-3),
             bcfg=BlockLLMConfig(selector=SelectorConfig(
                 sparsity=0.95, patience=100, policy="static",
                 static_k_frac=0.25, selectable_leaves=(),
                 always_active_leaves=("final_norm",)))),
-        "lora": lambda: LoRATrainer(cfg, clone(), rank=8,
-                                    adam=Adam(lr=1e-3)),
-        "galore": lambda: GaLoreTrainer(
-            cfg, clone(), galore=GaLore(rank=8, lr=1e-3,
-                                        update_proj_gap=20)),
-        "badam": lambda: BAdamTrainer(cfg, clone(), switch_every=10,
-                                      adam=Adam(lr=1e-3)),
+        "lora": lambda: _handle("lora", cfg, clone(), rank=8,
+                                adam=Adam(lr=1e-3)),
+        "galore": lambda: _handle("galore", cfg, clone(), rank=8,
+                                  lr=1e-3, update_proj_gap=20),
+        "badam": lambda: _handle("badam", cfg, clone(), switch_every=10,
+                                 adam=Adam(lr=1e-3)),
     }
     table = {}
     for name, mk in methods.items():

@@ -1,12 +1,11 @@
-"""Quickstart: BlockLLM in ~30 lines.
+"""Quickstart: BlockLLM through the functional TrainerCore API.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 
+from repro import trainers
 from repro.configs.base import ModelConfig
-from repro.core.blockllm import BlockLLMConfig, BlockLLMTrainer
-from repro.core.selection import SelectorConfig
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.models import model
 from repro.optim.adam import Adam
@@ -18,24 +17,26 @@ cfg = ModelConfig(name="demo", family="dense", num_layers=6, d_model=128,
                   remat=False)
 params = model.init_params(jax.random.PRNGKey(0), cfg)
 
-# 2. wrap it in the BlockLLM trainer: only ~10% of parameters get
-#    gradients + Adam state; blocks re-selected by gradient norm / visit
-#    frequency when the loss plateaus (paper Algorithm 1+2).
-trainer = BlockLLMTrainer(
-    cfg, params, adam=Adam(lr=1e-3),
-    bcfg=BlockLLMConfig(selector=SelectorConfig(
-        sparsity=0.9, patience=20, policy="static", static_k_frac=0.25)))
+# 2. resolve the trainer by name from the registry ("blockllm", "adam",
+#    "galore", "lora", "badam" all speak the same init/step protocol).
+#    BlockLLM: only ~10% of parameters get gradients + Adam state; blocks
+#    re-selected by gradient norm / visit frequency when the loss
+#    plateaus (paper Algorithm 1+2).
+core = trainers.make("blockllm", cfg, adam=Adam(lr=1e-3),
+                     sparsity=0.9, patience=20, policy="static",
+                     k_frac=0.25)
+state = core.init(jax.random.PRNGKey(0), params)
 
-# 3. train on the deterministic synthetic pipeline
+# 3. train on the deterministic synthetic pipeline — state in, state out
 pipe = TokenPipeline(DataConfig(vocab_size=512, seq_len=64, global_batch=8))
 for step in range(30):
-    metrics = trainer.train_step(pipe.batch(step))
+    state, metrics = core.step(state, pipe.batch(step))
     if step % 10 == 0:
         print(f"step {step}: loss={metrics['loss']:.4f}")
 
-rep = trainer.memory_report()
+rep = core.memory_report(state)
 print(f"\nfinal loss  : {metrics['loss']:.4f}")
 print(f"train state : {rep['total_train_state'] / 2**20:.2f} MiB "
       f"(grads+opt+masks, vs params {rep['params_bytes'] / 2**20:.2f} MiB)")
-print(f"re-selections: {trainer.reselections}, "
-      f"recompiles: {trainer.recompiles} (static policy: stays at 2)")
+print(f"re-selections: {state.meta['reselections']}, "
+      f"recompiles: {core.recompiles} (static policy: stays at 2)")

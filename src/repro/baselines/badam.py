@@ -9,34 +9,20 @@ draws (BlockLLM = BAdam + informed selection + masks + adaptive trigger).
 from __future__ import annotations
 
 from repro.core.blockllm import BlockLLMConfig, BlockLLMTrainer
-from repro.core.selection import SelectorConfig
 from repro.optim.adam import Adam
-
-
-def badam_config(switch_every: int = 100, block_rows: int = 1,
-                 train_embeddings: bool = False) -> BlockLLMConfig:
-    leaves = ("embed", "head") if train_embeddings else ()
-    return BlockLLMConfig(
-        selector=SelectorConfig(
-            policy="cyclic",
-            cyclic_block_rows=block_rows,
-            reselect_every=switch_every,
-            probe_rows_per_stack=0,
-            use_visit_frequency=False,
-            mask_updates=False,
-            always_active_leaves=("final_norm",) + leaves,
-            selectable_leaves=(),
-        ),
-        mask_refresh="never",
-    )
+from repro.trainers.badam import badam_config  # noqa: F401 — re-export
 
 
 class BAdamTrainer(BlockLLMTrainer):
+    """Deprecated: thin shim over ``trainers.badam.BAdamCore``."""
+
     def __init__(self, cfg, params, *, switch_every=100, block_rows=1,
                  adam=None, loss_fn=None, attn_impl="full",
                  train_embeddings=False):
-        super().__init__(
-            cfg, params,
-            bcfg=badam_config(switch_every, block_rows, train_embeddings),
-            adam=adam or Adam(lr=1e-3), loss_fn=loss_fn,
-            attn_impl=attn_impl)
+        from repro.trainers.badam import BAdamCore
+        core = BAdamCore(cfg, switch_every=switch_every,
+                         block_rows=block_rows,
+                         train_embeddings=train_embeddings,
+                         adam=adam or Adam(lr=1e-3), loss_fn=loss_fn,
+                         attn_impl=attn_impl)
+        super().__init__(cfg, params, _core=core)

@@ -19,9 +19,6 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.models import model as model_lib
-from repro.optim.adam import Adam, AdamState
-
 Pytree = Any
 
 
@@ -141,40 +138,44 @@ class GaLore:
 
 
 class GaLoreTrainer:
+    """Deprecated: thin shim over ``trainers.galore.GaLoreCore``.
+
+    NOTE: ``self.state`` is now the protocol ``TrainState``; the raw
+    ``GaLoreState`` lives at ``self.state.arrays["opt"]`` (also exposed
+    as ``self.opt_state``).
+    """
+
     def __init__(self, cfg, params, *, galore=None, loss_fn=None,
                  attn_impl="full"):
+        from repro.trainers.galore import GaLoreCore
+        self.core = GaLoreCore(cfg, galore=galore, loss_fn=loss_fn,
+                               attn_impl=attn_impl)
         self.cfg = cfg
-        self.galore = galore or GaLore()
-        self.params = params
-        self.state = self.galore.init(params)
-        self.step = 0
-        self.loss_history: list = []
-        loss = loss_fn or (lambda p, b: model_lib.loss_fn(
-            p, cfg, b, attn_impl=attn_impl))
-        gl = self.galore
-
-        @jax.jit
-        def stepf(params, state, batch):
-            (l, metrics), g = jax.value_and_grad(
-                loss, has_aux=True)(params, batch)
-            new_p, new_s = gl.update(g, state, params)
-            return new_p, new_s, l, metrics
-
-        self._stepf = stepf
+        self.galore = self.core.galore
+        self.state = self.core.init(jax.random.PRNGKey(0), params)
 
     def train_step(self, batch):
-        self.params, self.state, l, _ = self._stepf(
-            self.params, self.state, batch)
-        self.step += 1
-        self.loss_history.append(float(l))
-        return {"loss": float(l), "step": self.step}
+        self.state, metrics = self.core.step(self.state, batch)
+        return metrics
 
     def memory_report(self):
-        nb = lambda t: sum(l.size * l.dtype.itemsize
-                           for l in jax.tree.leaves(t))
-        return {"params_bytes": nb(self.params),
-                "grads_bytes": nb(self.params),
-                "opt_state_bytes": self.galore.state_bytes(self.state),
-                "mask_bytes": 0, "probe_bytes": 0,
-                "total_train_state": nb(self.params)
-                + self.galore.state_bytes(self.state)}
+        return self.core.memory_report(self.state)
+
+    def merged_params(self):
+        return self.core.merged_params(self.state)
+
+    @property
+    def params(self):
+        return self.state.arrays["params"]
+
+    @property
+    def opt_state(self) -> GaLoreState:
+        return self.state.arrays["opt"]
+
+    @property
+    def step(self) -> int:
+        return int(self.state.meta["step"])
+
+    @property
+    def loss_history(self) -> list:
+        return self.state.meta["loss_history"]

@@ -14,9 +14,6 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.models import model as model_lib
-from repro.optim.adam import Adam
-
 Pytree = Any
 
 TARGET_KEYS = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
@@ -65,51 +62,45 @@ def lora_merge(params: Pytree, factors: Pytree, *, alpha: float,
 
 
 class LoRATrainer:
+    """Deprecated: thin shim over ``trainers.lora.LoRACore``."""
+
     def __init__(self, cfg, params, *, rank=8, alpha=None, adam=None,
                  loss_fn=None, attn_impl="full", key=None):
+        from repro.trainers.lora import LoRACore
+        self.core = LoRACore(cfg, rank=rank, alpha=alpha, adam=adam,
+                             loss_fn=loss_fn, attn_impl=attn_impl)
         self.cfg = cfg
-        self.rank = rank
-        self.alpha = alpha if alpha is not None else 4 * rank  # paper Table 9
-        self.params = params
-        self.factors = lora_init(key or jax.random.PRNGKey(0), params, rank)
-        self.adam = adam or Adam(lr=1e-3)
-        self.opt_state = self.adam.init(self.factors)
-        self.step = 0
-        self.loss_history: list = []
-        loss = loss_fn or (lambda p, b: model_lib.loss_fn(
-            p, cfg, b, attn_impl=attn_impl))
-        rank_, alpha_, adam_ = self.rank, self.alpha, self.adam
-
-        @jax.jit
-        def stepf(params, factors, opt_state, batch):
-            def lossf(f):
-                merged = lora_merge(params, f, alpha=alpha_, rank=rank_)
-                return loss(merged, batch)
-
-            (l, metrics), g = jax.value_and_grad(
-                lossf, has_aux=True)(factors)
-            new_f, new_s = adam_.update(g, opt_state, factors)
-            return new_f, new_s, l, metrics
-
-        self._stepf = stepf
+        self.rank = self.core.rank
+        self.alpha = self.core.alpha
+        self.adam = self.core.adam
+        self.state = self.core.init(key or jax.random.PRNGKey(0), params)
 
     def train_step(self, batch):
-        self.factors, self.opt_state, l, _ = self._stepf(
-            self.params, self.factors, self.opt_state, batch)
-        self.step += 1
-        self.loss_history.append(float(l))
-        return {"loss": float(l), "step": self.step}
+        self.state, metrics = self.core.step(self.state, batch)
+        return metrics
 
     def merged_params(self):
-        return lora_merge(self.params, self.factors, alpha=self.alpha,
-                          rank=self.rank)
+        return self.core.merged_params(self.state)
 
     def memory_report(self):
-        nb = lambda t: sum(l.size * l.dtype.itemsize
-                           for l in jax.tree.leaves(t))
-        return {"params_bytes": nb(self.params) + nb(self.factors),
-                "grads_bytes": nb(self.factors),
-                "opt_state_bytes": self.adam.state_bytes(self.opt_state),
-                "mask_bytes": 0, "probe_bytes": 0,
-                "total_train_state": nb(self.factors)
-                + self.adam.state_bytes(self.opt_state)}
+        return self.core.memory_report(self.state)
+
+    @property
+    def params(self):
+        return self.state.arrays["params"]
+
+    @property
+    def factors(self):
+        return self.state.arrays["factors"]
+
+    @property
+    def opt_state(self):
+        return self.state.arrays["opt"]
+
+    @property
+    def step(self) -> int:
+        return int(self.state.meta["step"])
+
+    @property
+    def loss_history(self) -> list:
+        return self.state.meta["loss_history"]

@@ -13,9 +13,11 @@ Fault-tolerance contract:
 - ``restore`` device_puts each leaf with the *target* sharding, so a
   checkpoint written on one mesh restores onto any other (elastic
   rescale) — leaves are saved as full (unsharded) host arrays.
-- BlockLLM host state (norm dict, visit counts, plan indices, loss
-  history) rides in the manifest's ``meta`` — a restart resumes selection
-  exactly.
+- trainer host state rides in the manifest's ``meta``: the generic
+  train loop stores every ``TrainerCore``'s JSON host meta there (for
+  BlockLLM: norm dict, visit counts, plan indices, loss history) — a
+  restart resumes selection exactly, with no trainer-specific
+  serializers anywhere.
 """
 from __future__ import annotations
 
@@ -131,6 +133,14 @@ def _committed_steps(ckpt_dir: Path):
 def _gc(ckpt_dir: Path, keep: int):
     for p in sorted(_committed_steps(ckpt_dir))[:-keep]:
         shutil.rmtree(p)
+
+
+def read_meta(ckpt_dir, step: int) -> dict:
+    """Manifest ``meta`` alone, without loading the array payload —
+    lets callers validate a checkpoint (trainer name, format) before
+    paying for the npz read or tripping shape asserts."""
+    path = Path(ckpt_dir) / f"step_{step:08d}"
+    return json.loads((path / "manifest.json").read_text()).get("meta", {})
 
 
 def latest_step(ckpt_dir) -> Optional[int]:

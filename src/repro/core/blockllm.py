@@ -1,9 +1,12 @@
-"""BlockLLM trainer (paper Algorithm 1).
+"""BlockLLM device math (paper Algorithm 1) + deprecated trainer shims.
 
-Orchestrates: block selection (Algorithm 2, ``core.selection``), the
-masked-Adam update over the *active* parameter subset, rotating gradient
-probes that maintain the layer-norm dictionary, and the loss-patience
-re-selection trigger.
+``build_step_fn`` is the jitted masked-Adam step over the *active*
+parameter subset — the single source of truth compiled by BOTH the
+single-host path and the distributed launcher.  The orchestration
+(selection, probe rotation, loss-patience trigger) lives in
+``repro.trainers.blockllm.BlockLLMCore`` on the functional
+init/step/state protocol; ``BlockLLMTrainer`` here is a deprecation shim
+over that core.
 
 Memory model (the paper's contribution): gradients, Adam moments and masks
 exist ONLY for the active subset.  The jitted step differentiates w.r.t.
@@ -20,7 +23,6 @@ points).
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional
 
@@ -28,11 +30,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import selection as sel_lib
 from repro.core import units as units_lib
 from repro.core.selection import NormTracker, SelectorConfig, VisitTracker
 from repro.core.units import Plan, PlanStructure, UnitIndex
-from repro.models import model as model_lib
 from repro.optim.adam import Adam, AdamState
 
 Pytree = Any
@@ -166,200 +166,113 @@ def build_step_fn(cfg, index: UnitIndex, adam: Adam, bcfg: BlockLLMConfig,
     return step
 
 
+# ---------------------------------------------------------------------- #
+# DEPRECATED shims — the trainer logic now lives in ``repro.trainers``
+# (the functional TrainerCore protocol).  These classes keep the historic
+# imperative surface (attributes, train_step, _select) for existing
+# callers; new code should use ``trainers.make(name, cfg)`` +
+# ``core.init/step`` or a ``TrainerHandle``.
+# ---------------------------------------------------------------------- #
+
+
 class BlockLLMTrainer:
-    """Drives BlockLLM training for a model from ``repro.models.model``."""
+    """Deprecated: thin shim over ``repro.trainers.blockllm.BlockLLMCore``.
+
+    Holds one ``(core, state)`` pair and maps the legacy attribute
+    surface (``params``/``active``/``opt_state``/``masks``/``plan``/
+    ``norms``/…) onto the functional state.  Prefer
+    ``trainers.make("blockllm", cfg)``.
+    """
+
+    _CORE_CLS: Any = None  # resolved lazily (import cycle)
 
     def __init__(self, cfg, params, *, bcfg: Optional[BlockLLMConfig] = None,
                  adam: Optional[Adam] = None,
                  loss_fn: Optional[Callable] = None,
-                 attn_impl: str = "full"):
+                 attn_impl: str = "full", _core=None):
+        if _core is None:
+            from repro.trainers.blockllm import BlockLLMCore
+            _core = BlockLLMCore(cfg, bcfg=bcfg, adam=adam,
+                                 loss_fn=loss_fn, attn_impl=attn_impl)
+        self.core = _core
         self.cfg = cfg
-        self.bcfg = bcfg or BlockLLMConfig()
-        self.adam = adam or Adam(lr=1e-3)
-        self.params = params
-        self.index = units_lib.build_unit_index(cfg, params)
-        self.norms = NormTracker()
-        self.visits = VisitTracker()
-        self.loss_history: list = []
-        self.step = 0
-        self.reselections = 0
-        self.recompiles = 0
-        self._loss_fn = loss_fn or (
-            lambda p, batch, overlay=None: model_lib.loss_fn(
-                p, cfg, batch, attn_impl=attn_impl, overlay=overlay))
-        self._step_fns: Dict = {}
-        self._needs_mask_refresh = False
-        self._select(initial=True)
+        self.bcfg = self.core.bcfg
+        self.adam = self.core.adam
+        self.state = self.core.init(jax.random.PRNGKey(0), params)
 
-    # ------------------------------------------------------------------ #
-    # selection plumbing
-    # ------------------------------------------------------------------ #
-
-    def _select(self, initial=False):
-        if not initial:
-            # fold trained rows back into the frozen tree
-            self.params = units_lib.write_back(
-                self.params, self.index, self.plan, self.active)
-        plan, q = sel_lib.select(self.index, self.norms, self.visits,
-                                 self.bcfg.selector,
-                                 cursor=getattr(self, "reselections", 0))
-        old_state = getattr(self, "opt_state", None)
-        old_plan = getattr(self, "plan", None)
-        self.plan, self.q = plan, q
-        self.visits.record(plan.selected_labels())
-        self.active = units_lib.extract_active(self.params, self.index, plan)
-        self.opt_state = self.adam.init(self.active["sel"])
-        if (self.bcfg.carry_surviving and old_state is not None
-                and old_plan is not None
-                and old_plan.structure == plan.structure):
-            self.opt_state = self._carry_state(old_plan, old_state)
-        use_masks = (self.bcfg.selector.mask_updates
-                     and self.bcfg.mask_refresh != "never")
-        # masks are always materialized (all-ones until the refresh step)
-        # so the train-state pytree structure is checkpoint-stable
-        self.masks = _zero_masks_like(self.active["sel"]) if use_masks \
-            else None
-        self._needs_mask_refresh = use_masks
-        self.reselections += 1
-        self.loss_history = []
-
-    def _carry_state(self, old_plan: Plan, old_state: AdamState) -> AdamState:
-        """Carry Adam moments for rows selected in both rounds."""
-        new_mu = jax.tree.map(jnp.copy, self.opt_state.mu)
-        # host-side row matching per stack
-        for sid, new_idx in self.plan.stack_idx.items():
-            old_idx = np.asarray(old_plan.stack_idx.get(
-                sid, jnp.zeros((0,), jnp.int32)))
-            new_np = np.asarray(new_idx)
-            common = [(int(np.where(old_idx == g)[0][0]), j)
-                      for j, g in enumerate(new_np) if g in old_idx]
-            if not common:
-                continue
-            src = np.asarray([c[0] for c in common])
-            dst = np.asarray([c[1] for c in common])
-
-            def carry(new, old):
-                return new.at[dst].set(old[src])
-
-            new_mu["stacks"][sid] = jax.tree.map(
-                carry, new_mu["stacks"][sid], old_state.mu["stacks"][sid])
-        return AdamState(old_state.count, new_mu, self.opt_state.nu)
-
-    # ------------------------------------------------------------------ #
-    # jitted step factory
-    # ------------------------------------------------------------------ #
-
-    def _get_step_fn(self, structure: PlanStructure, refresh: bool,
-                     with_masks: bool):
-        key = (structure, refresh, with_masks)
-        if key in self._step_fns:
-            return self._step_fns[key]
-        self.recompiles += 1
-        step = build_step_fn(self.cfg, self.index, self.adam, self.bcfg,
-                             structure, refresh=refresh,
-                             with_masks=with_masks, loss_fn=self._loss_fn)
-        fn = jax.jit(step, donate_argnums=(1, 5, 6))
-        self._step_fns[key] = fn
-        return fn
-
-    # ------------------------------------------------------------------ #
-    # public API
-    # ------------------------------------------------------------------ #
+    # -- imperative API ------------------------------------------------ #
 
     def train_step(self, batch) -> Dict[str, float]:
-        refresh = self._needs_mask_refresh
-        with_masks = self.masks is not None
-        fn = self._get_step_fn(self.plan.structure, refresh, with_masks)
-        sel, opt_state, masks, loss, metrics, norm_out = fn(
-            self.params, self.active["sel"], self.active["probe"],
-            self.plan.stack_idx, self.plan.probe_idx, self.opt_state,
-            self.masks if self.masks is not None
-            else _zero_masks_like(self.active["sel"]),
-            batch, jnp.asarray(self.q, jnp.float32))
-        self.active = {"sel": sel, "probe": self.active["probe"]}
-        self.opt_state = opt_state
-        if with_masks:
-            # rebind every step: the jitted fn donates the mask buffers
-            self.masks = masks
-        self._needs_mask_refresh = False
-        self._ingest_norms(norm_out)
-        loss_f = float(loss)
-        self.loss_history.append(loss_f)
-        self.step += 1
-        every = self.bcfg.selector.reselect_every
-        if every and self.step % every == 0:
-            self._select()  # BAdam-style fixed-interval block switch
-        elif not every and sel_lib.should_reselect(
-                self.loss_history, self.bcfg.selector.patience):
-            self._select()
-        out = {"loss": loss_f, "step": self.step,
-               "reselections": self.reselections}
-        out.update({k: float(v) for k, v in metrics.items()})
-        return out
+        self.state, metrics = self.core.step(self.state, batch)
+        return metrics
 
-    def _ingest_norms(self, norm_out):
-        updates = {}
-        for sid, sq in norm_out["stacks"].items():
-            idx = np.asarray(self.plan.stack_idx[sid])
-            vals = np.sqrt(np.asarray(sq, np.float64))
-            for g, v in zip(idx, vals):
-                updates[f"{sid}/g{int(g)}"] = v
-        for name, sq in norm_out["leaves"].items():
-            updates[name] = float(np.sqrt(float(sq)))
-        for sid, sq in norm_out["probe"].items():
-            pidx = np.asarray(self.plan.probe_idx[sid])
-            vals = np.sqrt(np.asarray(sq, np.float64))
-            for g, v in zip(pidx, vals):
-                updates[f"{sid}/g{int(g)}"] = v
-        self.norms.update(updates, self.step)
-        # advance rotating probes host-side (stale-first order next round)
-        for sid in list(self.plan.probe_idx):
-            info = self.index.stack(sid)
-            excl = set(np.asarray(self.plan.stack_idx.get(
-                sid, np.zeros(0, np.int32))).tolist())
-            cands = [g for g in range(info.n_rows) if g not in excl]
-            if not cands:
-                continue
-            cands.sort(key=lambda g: self.norms.age.get(f"{sid}/g{g}", -1))
-            take = cands[:len(np.asarray(self.plan.probe_idx[sid]))]
-            self.plan.probe_idx[sid] = jnp.asarray(take, np.int32)
-            # refresh probe param rows to match the new indices
-            self.active["probe"][sid] = jax.tree.map(
-                lambda a: a[self.plan.probe_idx[sid]],
-                self.params["stages"][info.si][info.pos])
+    def _select(self, initial=False):
+        self.state = self.core.reselect(self.state)
 
     def merged_params(self) -> Pytree:
-        return units_lib.write_back(self.params, self.index, self.plan,
-                                    self.active)
+        return self.core.merged_params(self.state)
 
     def eval_loss(self, batch) -> float:
-        loss, _ = jax.jit(self._loss_fn)(self.merged_params(), batch)
-        return float(loss)
-
-    # ------------------------------------------------------------------ #
-    # memory accounting (paper Tables 1/7: optimizer+grad VRAM)
-    # ------------------------------------------------------------------ #
+        return self.core.eval_loss(self.state, batch)
 
     def memory_report(self) -> Dict[str, int]:
-        def nbytes(tree):
-            return sum(l.size * l.dtype.itemsize
-                       for l in jax.tree.leaves(tree))
+        return self.core.memory_report(self.state)
 
-        report = {
-            "params_bytes": nbytes(self.params),
-            "grads_bytes": nbytes(self.active["sel"]),
-            "opt_state_bytes": self.adam.state_bytes(self.opt_state),
-            "mask_bytes": (nbytes(self.masks) if self.masks is not None
-                           else 0),
-            "probe_bytes": nbytes(self.active["probe"]),
-        }
-        report["total_train_state"] = sum(
-            v for k, v in report.items() if k != "params_bytes")
-        return report
+    # -- legacy attribute views over the functional state -------------- #
 
+    @property
+    def params(self):
+        return self.state.arrays["params"]
 
-def _zero_masks_like(sel_tree):
-    return jax.tree.map(lambda a: jnp.ones(a.shape, jnp.bool_), sel_tree)
+    @property
+    def active(self):
+        return {"sel": self.state.arrays["sel"],
+                "probe": self.state.arrays["probe"]}
+
+    @property
+    def opt_state(self) -> AdamState:
+        return self.state.arrays["opt"]
+
+    @property
+    def masks(self):
+        return self.state.arrays["masks"]
+
+    @property
+    def plan(self) -> Plan:
+        return self.core.plan_of(self.state)
+
+    @property
+    def q(self) -> float:
+        return float(self.state.meta["q"])
+
+    @property
+    def norms(self) -> NormTracker:
+        # live view: legacy mutation (norm-dict seeding) reaches state
+        return self.core._trackers(self.state.meta, copy=False)[0]
+
+    @property
+    def visits(self) -> VisitTracker:
+        return self.core._trackers(self.state.meta, copy=False)[1]
+
+    @property
+    def index(self):
+        return self.core.index_for(self.state.arrays["params"])
+
+    @property
+    def step(self) -> int:
+        return int(self.state.meta["step"])
+
+    @property
+    def loss_history(self) -> list:
+        return self.state.meta["loss_history"]
+
+    @property
+    def reselections(self) -> int:
+        return int(self.state.meta["reselections"])
+
+    @property
+    def recompiles(self) -> int:
+        return self.core.recompiles
 
 
 # ---------------------------------------------------------------------- #
@@ -368,38 +281,39 @@ def _zero_masks_like(sel_tree):
 
 
 class FullAdamTrainer:
+    """Deprecated: thin shim over ``trainers.full_adam.FullAdamCore``."""
+
     def __init__(self, cfg, params, *, adam=None, loss_fn=None,
                  attn_impl="full"):
+        from repro.trainers.full_adam import FullAdamCore
+        self.core = FullAdamCore(cfg, adam=adam, loss_fn=loss_fn,
+                                 attn_impl=attn_impl)
         self.cfg = cfg
-        self.adam = adam or Adam(lr=1e-3)
-        self.params = params
-        self.opt_state = self.adam.init(params)
-        self.step = 0
-        self.loss_history: list = []
-        loss = loss_fn or (lambda p, b: model_lib.loss_fn(
-            p, cfg, b, attn_impl=attn_impl))
-
-        @jax.jit
-        def stepf(params, opt_state, batch):
-            (l, m), g = jax.value_and_grad(loss, has_aux=True)(params, batch)
-            new_p, new_s = self.adam.update(g, opt_state, params)
-            return new_p, new_s, l, m
-
-        self._stepf = stepf
+        self.adam = self.core.adam
+        self.state = self.core.init(jax.random.PRNGKey(0), params)
 
     def train_step(self, batch):
-        self.params, self.opt_state, l, m = self._stepf(
-            self.params, self.opt_state, batch)
-        self.step += 1
-        self.loss_history.append(float(l))
-        return {"loss": float(l), "step": self.step}
+        self.state, metrics = self.core.step(self.state, batch)
+        return metrics
 
     def memory_report(self):
-        nb = lambda t: sum(l.size * l.dtype.itemsize
-                           for l in jax.tree.leaves(t))
-        return {"params_bytes": nb(self.params),
-                "grads_bytes": nb(self.params),
-                "opt_state_bytes": self.adam.state_bytes(self.opt_state),
-                "mask_bytes": 0, "probe_bytes": 0,
-                "total_train_state": 2 * nb(self.params)
-                + self.adam.state_bytes(self.opt_state) - nb(self.params)}
+        return self.core.memory_report(self.state)
+
+    def merged_params(self):
+        return self.core.merged_params(self.state)
+
+    @property
+    def params(self):
+        return self.state.arrays["params"]
+
+    @property
+    def opt_state(self):
+        return self.state.arrays["opt"]
+
+    @property
+    def step(self) -> int:
+        return int(self.state.meta["step"])
+
+    @property
+    def loss_history(self) -> list:
+        return self.state.meta["loss_history"]

@@ -6,11 +6,18 @@ Each builder returns a ``StepSetup``: the step callable, abstract
 ``train.py``/``serve.py`` need to run for real (they materialize the same
 trees).
 
-The train step is the BlockLLM step (``core.blockllm.build_step_fn``) with
-the static selection policy: the paper's technique is a first-class part of
-the production training path, and its distributed consequence — gradient
-and optimizer sharding over only the active K-of-L blocks, DP all-reduce
-bytes scaled by K/L — is what §Perf measures.
+The train builder is **protocol-generic**: it resolves the trainer
+through the ``repro.trainers`` registry, asks the core for its abstract
+state (``init_abstract``) and its raw positional step (``lowerable`` —
+the SAME function the single-host path jits), and derives every
+in_sharding from the ``state_spec`` sharding roles (params/active trees
+get the logical param rules, optimizer moments additionally get the
+ZeRO data-axis extension, index vectors and scalars replicate).  The
+default trainer is BlockLLM with the static selection policy: the
+paper's technique is a first-class part of the production training
+path, and its distributed consequence — gradient and optimizer sharding
+over only the active K-of-L blocks, DP all-reduce bytes scaled by K/L —
+is what §Perf measures.
 """
 from __future__ import annotations
 
@@ -23,15 +30,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import trainers as trainers_lib
 from repro.configs.base import ModelConfig
 from repro.configs.shapes import ShapeConfig
-from repro.core import blockllm as bll
-from repro.core import selection as sel_lib
-from repro.core import units as units_lib
 from repro.launch import specs as specs_lib
 from repro.launch.mesh import dp_axes as mesh_dp_axes
 from repro.models import model as model_lib
-from repro.optim.adam import Adam
 from repro.runtime import shard_ctx, sharding
 
 Pytree = Any
@@ -103,64 +107,47 @@ def _zero_specs(cfg, tree, mesh, dp):
         base, tree)
 
 
+def _role_shardings(role: str, tree, cfg, mesh: Mesh, dp,
+                    shape_kind: str):
+    """state_spec sharding role -> NamedSharding pytree for ``tree``."""
+    if role == "batch":
+        return sharding.batch_specs(shape_kind, tree, mesh, dp)
+    if role in ("index", "scalar"):
+        return jax.tree.map(lambda _: _replicated(mesh), tree)
+    if role == "opt":
+        # param rules + ZeRO extension; scalar leaves (step counts)
+        # fall out replicated (_zero_extend is a no-op on 0-d shapes)
+        return _zero_specs(cfg, tree, mesh, dp)
+    # "params" / "active" / "masks": logical param rules
+    return sharding.param_specs(cfg, tree, mesh)
+
+
 def build_train_setup(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
-                      *, sparsity: float = 0.95, k_frac: float = 0.25,
-                      attn_impl: str = "chunked") -> StepSetup:
-    """BlockLLM distributed train step (static policy, abstract args)."""
+                      *, optimizer: str = "blockllm",
+                      sparsity: float = 0.95, k_frac: float = 0.25,
+                      attn_impl: str = "chunked", **hyper) -> StepSetup:
+    """Distributed train step for any registered trainer (abstract args).
+
+    The core's ``lowerable`` hands back the same raw step the
+    single-host path jits; shardings are derived per-argument from the
+    ``state_spec`` sharding roles.
+    """
     rules = _rules_for(mesh, cfg)
     dp = rules.dp_axes
     params = specs_lib.params_abstract(cfg, dtype=jnp.bfloat16)
-    index = units_lib.build_unit_index(cfg, params)
-    scfg = sel_lib.SelectorConfig(
-        sparsity=sparsity, policy="static", static_k_frac=k_frac,
-        probe_rows_per_stack=1)
-    plan, q = sel_lib.select(index, sel_lib.NormTracker(),
-                             sel_lib.VisitTracker(), scfg)
-    adam = Adam(lr=1e-3)
-    bcfg = bll.BlockLLMConfig(selector=scfg)
-
-    active = jax.eval_shape(
-        lambda p: units_lib.extract_active(p, index, plan), params)
-    opt_state = jax.eval_shape(adam.init, active["sel"])
-    masks = jax.eval_shape(
-        lambda s: jax.tree.map(lambda a: jnp.ones(a.shape, jnp.bool_), s),
-        active["sel"])
+    core = trainers_lib.make(
+        optimizer, cfg, sparsity=sparsity, k_frac=k_frac,
+        policy="static", attn_impl=attn_impl, **hyper)
+    state = core.init_abstract(params)
     batch = specs_lib.input_specs(cfg, shape)
-
-    raw_step = bll.build_step_fn(
-        cfg, index, adam, bcfg, plan.structure, refresh=False,
-        with_masks=True,
-        loss_fn=lambda p, b, overlay=None: model_lib.loss_fn(
-            p, cfg, b, attn_impl=attn_impl, overlay=overlay))
-
-    # shardings
-    p_specs = _tree_specs(cfg, params, mesh)
-    sel_specs = _tree_specs(cfg, active["sel"], mesh)
-    probe_specs = _tree_specs(cfg, active["probe"], mesh)
-    opt_specs = type(opt_state)(
-        _replicated(mesh), _zero_specs(cfg, opt_state.mu, mesh, dp),
-        _zero_specs(cfg, opt_state.nu, mesh, dp))
-    mask_specs = _tree_specs(cfg, masks, mesh)
-    idx_specs = jax.tree.map(lambda _: _replicated(mesh), plan.stack_idx)
-    pidx_specs = jax.tree.map(lambda _: _replicated(mesh), plan.probe_idx)
-    b_specs = sharding.batch_specs(shape.kind, batch, mesh, dp)
-
-    args = (params, active["sel"], active["probe"], plan.stack_idx,
-            plan.probe_idx, opt_state, masks, batch,
-            jnp.asarray(0.5, jnp.float32))
-    in_shardings = (p_specs, sel_specs, probe_specs, idx_specs, pidx_specs,
-                    opt_specs, mask_specs, b_specs, _replicated(mesh))
+    low = core.lowerable(state, batch)
+    in_shardings = tuple(
+        _role_shardings(role, arg, cfg, mesh, dp, shape.kind)
+        for role, arg in zip(low.roles, low.args))
     return StepSetup(
-        name=f"{cfg.name}:{shape.name}", fn=raw_step, args=args,
-        in_shardings=in_shardings, rules=rules, donate=(1, 5, 6),
-        meta={"kind": "train", "plan": plan, "q": q,
-              "active_fraction": _active_fraction(index, plan)})
-
-
-def _active_fraction(index, plan) -> float:
-    sizes = index.unit_sizes()
-    tot = sum(sizes[u] for u in plan.selected_labels() if u in sizes)
-    return tot / index.total_params
+        name=f"{cfg.name}:{shape.name}", fn=low.fn, args=low.args,
+        in_shardings=in_shardings, rules=rules, donate=low.donate,
+        meta={"kind": "train", "optimizer": optimizer, **low.meta})
 
 
 def build_prefill_setup(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,

@@ -4,6 +4,12 @@
         --arch llama-60m --steps 200 --batch 8 --seq 256 \
         --optimizer blockllm --sparsity 0.9 --ckpt-dir /tmp/ckpt
 
+``--optimizer`` is a ``repro.trainers`` registry lookup (blockllm,
+adam, galore, lora, badam — plus anything registered by downstream
+code): the launcher builds the named ``TrainerCore``, wraps its
+``TrainState`` in a ``TrainerHandle``, and hands it to the generic
+``runtime.train_loop`` — no per-trainer branches anywhere.
+
 Any registered arch runs; use --reduce to scale an assigned production
 arch down for CPU (divides layers/width, shrinks vocab).  XLA latency-
 hiding-scheduler flags for real TPU fleets are appended via --tpu-flags.
@@ -57,8 +63,14 @@ def reduce_config(cfg, factor=4):
 
 
 def make_trainer(cfg, args, params=None):
+    """Registry lookup: ``--optimizer`` -> TrainerCore -> TrainerHandle.
+
+    Every factory takes the union of launcher hyperparameters and picks
+    what it needs (blockllm: sparsity/patience/policy/k_frac; galore:
+    rank/lr; lora: rank/adam; badam: switch_every; adam: adam).
+    """
     import jax
-    import jax.numpy as jnp
+    from repro import trainers
     from repro.models import model as model_lib
     from repro.optim.adam import Adam
     from repro.optim import schedule
@@ -67,30 +79,13 @@ def make_trainer(cfg, args, params=None):
         params = model_lib.init_params(jax.random.PRNGKey(args.seed), cfg)
     lr = schedule.cosine(args.lr, args.steps) if args.cosine else args.lr
     adam = Adam(lr=lr, weight_decay=args.weight_decay)
-
-    if args.optimizer == "blockllm":
-        from repro.core.blockllm import BlockLLMConfig, BlockLLMTrainer
-        from repro.core.selection import SelectorConfig
-        return BlockLLMTrainer(
-            cfg, params, adam=adam,
-            bcfg=BlockLLMConfig(selector=SelectorConfig(
-                sparsity=args.sparsity, patience=args.patience,
-                policy=args.policy, static_k_frac=args.k_frac)))
-    if args.optimizer == "adam":
-        from repro.core.blockllm import FullAdamTrainer
-        return FullAdamTrainer(cfg, params, adam=adam)
-    if args.optimizer == "galore":
-        from repro.baselines.galore import GaLore, GaLoreTrainer
-        return GaLoreTrainer(cfg, params, galore=GaLore(
-            rank=args.rank, lr=args.lr))
-    if args.optimizer == "lora":
-        from repro.baselines.lora import LoRATrainer
-        return LoRATrainer(cfg, params, rank=args.rank, adam=adam)
-    if args.optimizer == "badam":
-        from repro.baselines.badam import BAdamTrainer
-        return BAdamTrainer(cfg, params, switch_every=args.patience,
-                            adam=adam)
-    raise ValueError(args.optimizer)
+    core = trainers.make(
+        args.optimizer, cfg, adam=adam, lr=args.lr,
+        sparsity=args.sparsity, patience=args.patience,
+        policy=args.policy, k_frac=args.k_frac, rank=args.rank,
+        switch_every=args.patience)
+    return trainers.TrainerHandle(
+        core, core.init(jax.random.PRNGKey(args.seed), params))
 
 
 def main(argv=None):

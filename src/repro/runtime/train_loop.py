@@ -1,29 +1,34 @@
-"""Fault-tolerant training driver.
+"""Fault-tolerant training driver, generic over the TrainerCore protocol.
 
-Wires together: data pipeline (step-indexed, restart-safe), a trainer
-(BlockLLM / any baseline exposing ``train_step``/``memory_report``),
+Wires together: data pipeline (step-indexed, restart-safe), any trainer
+speaking the ``repro.trainers`` protocol (a ``TrainerHandle`` or one of
+the legacy shim classes — anything carrying a ``(core, state)`` pair),
 atomic checkpointing with auto-resume, straggler monitoring, and crash
 recovery (a simulated-failure test rides on this loop).
 
-BlockLLM state that must survive restart — the norm dictionary, visit
-counts, loss history, current plan indices, step — is serialized into the
-checkpoint meta; arrays (params, active rows, Adam moments, masks) go in
-the array payload.
+There is exactly ONE checkpoint/restore path for every trainer: the
+state's **array pytree** (``TrainState.arrays`` — params, moments, active
+rows, masks, factors…) goes in the npz payload; the state's **host
+meta** (``TrainState.meta`` — for BlockLLM the norm dictionary, visit
+counts, plan indices, loss history) rides JSON-serialized in the
+checkpoint manifest.  No trainer-specific serializers, no isinstance
+branches: what a trainer needs to resume is whatever its core declared
+in its ``state_spec``.
+
+Migration note (the pre-protocol API): ``run(BlockLLMTrainer(...), …)``
+still works — the legacy classes are shims holding ``core``/``state`` —
+but new code should pass ``TrainerHandle(trainers.make(name, cfg), state)``.
 """
 from __future__ import annotations
 
 import dataclasses
-import json
-import time
 from dataclasses import dataclass
+from pathlib import Path
 from typing import Any, Callable, Dict, Optional
 
-import jax
-import numpy as np
-
 from repro.checkpoint import checkpointer as ckpt_lib
-from repro.core.blockllm import BlockLLMTrainer
 from repro.runtime.straggler import StragglerConfig, StragglerMonitor
+from repro.trainers.api import TrainState, jsonable
 
 
 @dataclass
@@ -42,61 +47,60 @@ class TrainLoopConfig:
     adapter_id: str = "adapter"
 
 
-def _blockllm_meta(tr: BlockLLMTrainer) -> dict:
-    return {
-        "norms": tr.norms.norms,
-        "norm_age": tr.norms.age,
-        "visit_counts": tr.visits.counts,
-        "visit_rounds": tr.visits.total_rounds,
-        "loss_history": tr.loss_history[-256:],
-        "step": tr.step,
-        "reselections": tr.reselections,
-        "q": tr.q,
-        "stack_idx": {k: np.asarray(v).tolist()
-                      for k, v in tr.plan.stack_idx.items()},
-        "probe_idx": {k: np.asarray(v).tolist()
-                      for k, v in tr.plan.probe_idx.items()},
-    }
+def _protocol_state(trainer) -> Optional[TrainState]:
+    """The trainer's functional state, if it speaks the protocol."""
+    st = getattr(trainer, "state", None)
+    return st if isinstance(st, TrainState) else None
 
 
-def _restore_blockllm_meta(tr: BlockLLMTrainer, meta: dict):
-    import jax.numpy as jnp
-    tr.norms.norms = {k: float(v) for k, v in meta["norms"].items()}
-    tr.norms.age = {k: int(v) for k, v in meta["norm_age"].items()}
-    tr.visits.counts = {k: int(v) for k, v in meta["visit_counts"].items()}
-    tr.visits.total_rounds = int(meta["visit_rounds"])
-    tr.loss_history = list(meta["loss_history"])
-    tr.step = int(meta["step"])
-    tr.reselections = int(meta["reselections"])
-    tr.q = float(meta["q"])
-    tr.plan.stack_idx = {k: jnp.asarray(v, jnp.int32)
-                         for k, v in meta["stack_idx"].items()}
-    tr.plan.probe_idx = {k: jnp.asarray(v, jnp.int32)
-                         for k, v in meta["probe_idx"].items()}
+def _save_ckpt(trainer, cfg: TrainLoopConfig, step: int):
+    st = _protocol_state(trainer)
+    if st is None:  # pre-protocol object: params(+opt) only, no host meta
+        tree = {"params": trainer.params,
+                "opt": getattr(trainer, "opt_state",
+                               getattr(trainer, "state", None))}
+        ckpt_lib.save(cfg.ckpt_dir, step, tree, meta={},
+                      keep=cfg.keep_ckpts)
+        return
+    meta = {"trainer": getattr(trainer.core, "name", "?"),
+            "host": jsonable(st.meta)}
+    ckpt_lib.save(cfg.ckpt_dir, step, st.arrays, meta=meta,
+                  keep=cfg.keep_ckpts)
 
 
-def _train_state(tr) -> Any:
-    if isinstance(tr, BlockLLMTrainer):
-        return {"params": tr.params, "sel": tr.active["sel"],
-                "probe": tr.active["probe"],
-                "opt": tr.opt_state, "masks": tr.masks}
-    return {"params": tr.params,
-            "opt": getattr(tr, "opt_state", getattr(tr, "state", None))}
-
-
-def _load_train_state(tr, state):
-    if isinstance(tr, BlockLLMTrainer):
-        tr.params = state["params"]
-        tr.active = {"sel": state["sel"], "probe": state["probe"]}
-        tr.opt_state = state["opt"]
-        tr.masks = state["masks"]
-        tr._needs_mask_refresh = False  # saved masks are current
-    else:
-        tr.params = state["params"]
-        if hasattr(tr, "opt_state"):
-            tr.opt_state = state["opt"]
-        else:
-            tr.state = state["opt"]
+def _restore_ckpt(trainer, cfg: TrainLoopConfig, step: int):
+    st = _protocol_state(trainer)
+    if st is None:
+        like = {"params": trainer.params,
+                "opt": getattr(trainer, "opt_state",
+                               getattr(trainer, "state", None))}
+        tree, _ = ckpt_lib.restore(cfg.ckpt_dir, step, like)
+        trainer.params = tree["params"]
+        if tree.get("opt") is not None:
+            if hasattr(trainer, "opt_state"):
+                trainer.opt_state = tree["opt"]
+            else:
+                trainer.state = tree["opt"]
+        if hasattr(trainer, "step"):
+            trainer.step = step
+        return
+    # validate the manifest BEFORE loading arrays: a wrong-trainer or
+    # pre-protocol checkpoint should fail with a clear message, not a
+    # leaf-shape assert deep in restore
+    meta = ckpt_lib.read_meta(cfg.ckpt_dir, step)
+    if "host" not in meta:
+        raise ValueError(
+            f"checkpoint step {step} in {cfg.ckpt_dir} has no 'host' "
+            "meta — it predates the TrainerCore checkpoint format and "
+            "cannot be resumed by this loop")
+    saved = meta.get("trainer")
+    name = getattr(trainer.core, "name", "?")
+    if saved is not None and saved != name:
+        raise ValueError(
+            f"checkpoint step {step} was written by trainer "
+            f"{saved!r} but the active trainer is {name!r}")
+    arrays, _ = ckpt_lib.restore(cfg.ckpt_dir, step, st.arrays)
+    trainer.state = TrainState(arrays, dict(meta["host"]))
 
 
 def run(trainer, batch_fn: Callable[[int], dict], cfg: TrainLoopConfig,
@@ -111,13 +115,8 @@ def run(trainer, batch_fn: Callable[[int], dict], cfg: TrainLoopConfig,
     if cfg.ckpt_dir:
         latest = ckpt_lib.latest_step(cfg.ckpt_dir)
         if latest is not None:
-            state, meta = ckpt_lib.restore(
-                cfg.ckpt_dir, latest, _train_state(trainer))
-            _load_train_state(trainer, state)
-            if isinstance(trainer, BlockLLMTrainer) and "blockllm" in meta:
-                _restore_blockllm_meta(trainer, meta["blockllm"])
+            _restore_ckpt(trainer, cfg, latest)
             start_step = latest
-            trainer.step = start_step
 
     export = _AdapterExporter.maybe(trainer, cfg, start_step)
     mon = StragglerMonitor(cfg.straggler)
@@ -134,11 +133,7 @@ def run(trainer, batch_fn: Callable[[int], dict], cfg: TrainLoopConfig,
         if cfg.log_every and (step + 1) % cfg.log_every == 0:
             print(f"step {step + 1}: loss={metrics['loss']:.4f}", flush=True)
         if cfg.ckpt_dir and (step + 1) % cfg.ckpt_every == 0:
-            meta = {}
-            if isinstance(trainer, BlockLLMTrainer):
-                meta["blockllm"] = _blockllm_meta(trainer)
-            ckpt_lib.save(cfg.ckpt_dir, step + 1, _train_state(trainer),
-                          meta=meta, keep=cfg.keep_ckpts)
+            _save_ckpt(trainer, cfg, step + 1)
             if export:
                 export.emit(trainer, step + 1)
         if crash_at is not None and step + 1 == crash_at:
@@ -148,9 +143,20 @@ def run(trainer, batch_fn: Callable[[int], dict], cfg: TrainLoopConfig,
     return {"losses": history, "final_step": cfg.total_steps}
 
 
+def _merged(trainer):
+    return (trainer.merged_params()
+            if hasattr(trainer, "merged_params") else trainer.params)
+
+
 class _AdapterExporter:
     """Publishes the trainer's row-sparse delta vs. the pre-finetune base
-    to an adapter registry at checkpoint boundaries (export hook)."""
+    to an adapter registry at checkpoint boundaries (export hook).
+
+    The pre-finetune base snapshot is persisted (checkpointer payload
+    format) under ``<adapter_dir>/_base/<adapter_id>`` on the first run,
+    and reloaded from there on resume — so a crash/restart keeps
+    exporting correct deltas instead of bailing out.
+    """
 
     def __init__(self, registry, base, adapter_id: str):
         self.registry = registry
@@ -159,23 +165,33 @@ class _AdapterExporter:
         self.last_step = -1
 
     @staticmethod
+    def _snapshot_dir(cfg: "TrainLoopConfig") -> Path:
+        # under "_base/": never listed by AdapterRegistry.list_adapters
+        # (the dir itself carries no DONE marker)
+        return Path(cfg.adapter_dir) / "_base" / cfg.adapter_id
+
+    @staticmethod
     def maybe(trainer, cfg: "TrainLoopConfig", start_step: int):
         if not cfg.adapter_dir:
             return None
-        if start_step != 0:
-            # resumed runs have lost the pre-finetune base; a correct
-            # delta needs the base snapshot from step 0
-            print("adapter export skipped: resume without a base snapshot",
-                  flush=True)
-            return None
         from repro.adapters import AdapterRegistry, copy_tree
-        base = (trainer.merged_params()
-                if hasattr(trainer, "merged_params") else trainer.params)
-        # deep copy: merged trees can alias buffers the jitted train step
-        # donates (e.g. BlockLLM active leaves) — the snapshot must outlive
-        # the whole run
-        return _AdapterExporter(AdapterRegistry(cfg.adapter_dir),
-                                copy_tree(base), cfg.adapter_id)
+        snap = _AdapterExporter._snapshot_dir(cfg)
+        if start_step == 0:
+            # deep copy: merged trees can alias buffers the jitted train
+            # step donates (e.g. BlockLLM active leaves) — the snapshot
+            # must outlive the whole run
+            base = copy_tree(_merged(trainer))
+            ckpt_lib.save(snap, 0, base,
+                          meta={"kind": "adapter-base-snapshot",
+                                "adapter_id": cfg.adapter_id}, keep=1)
+        else:
+            if ckpt_lib.latest_step(snap) is None:
+                print("adapter export skipped: resume without a base "
+                      "snapshot", flush=True)
+                return None
+            base, _ = ckpt_lib.restore(snap, 0, _merged(trainer))
+        return _AdapterExporter(AdapterRegistry(cfg.adapter_dir), base,
+                                cfg.adapter_id)
 
     def emit(self, trainer, step: int):
         if step == self.last_step:

@@ -1,0 +1,33 @@
+"""Functional trainer protocol + registry (``TrainerCore``).
+
+Every trainer in the repo — BlockLLM and all baselines — implements one
+optax-style contract (``init``/``step``/``memory_report`` over an
+explicit ``TrainState`` with a declared array/host-meta split); the
+train loop, launcher and distributed step builder are generic over it.
+
+    from repro import trainers
+    core = trainers.make("blockllm", cfg, sparsity=0.95)
+    state = core.init(jax.random.PRNGKey(0), params)
+    state, metrics = core.step(state, batch)
+
+Registered names: ``blockllm``, ``adam``, ``galore``, ``lora``,
+``badam``.  The legacy classes (``core.blockllm.BlockLLMTrainer``,
+``baselines.*``) remain as deprecation shims over these cores.
+"""
+from repro.trainers.api import (Lowerable, StateSpec, TrainerCore,
+                                TrainerHandle, TrainState, check_state,
+                                jsonable, nbytes)
+from repro.trainers.registry import get, make, names, register
+
+# importing the implementation modules populates the registry
+from repro.trainers import badam as _badam            # noqa: F401,E402
+from repro.trainers import blockllm as _blockllm      # noqa: F401,E402
+from repro.trainers import full_adam as _full_adam    # noqa: F401,E402
+from repro.trainers import galore as _galore          # noqa: F401,E402
+from repro.trainers import lora as _lora              # noqa: F401,E402
+
+__all__ = [
+    "Lowerable", "StateSpec", "TrainerCore", "TrainerHandle", "TrainState",
+    "check_state", "get", "jsonable", "make", "names", "nbytes",
+    "register",
+]

@@ -1,0 +1,64 @@
+"""Full-Adam reference trainer as a ``TrainerCore`` (the paper's
+"Adam exceeds 80GB" baseline: dense gradients + dense moments)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.models import model as model_lib
+from repro.optim.adam import Adam
+from repro.trainers.api import StateSpec, TrainerCore, TrainState, nbytes
+from repro.trainers.registry import register
+
+Pytree = Any
+
+
+class FullAdamCore(TrainerCore):
+    name = "adam"
+    state_spec = StateSpec(
+        arrays=("params", "opt"),
+        meta=("step", "loss_history"),
+        donate=("params", "opt"),
+        roles=(("params", "params"), ("opt", "opt")),
+    )
+
+    def __init__(self, cfg, *, adam: Optional[Adam] = None, loss_fn=None,
+                 attn_impl: str = "full"):
+        self.cfg = cfg
+        self.adam = adam or Adam(lr=1e-3)
+        self._loss_fn = loss_fn or (lambda p, b: model_lib.loss_fn(
+            p, cfg, b, attn_impl=attn_impl))
+        self._jit_step = jax.jit(self._raw_step)
+
+    def _init_arrays(self, rng, params: Pytree) -> Dict[str, Pytree]:
+        return {"params": params, "opt": self.adam.init(params)}
+
+    def init(self, rng, params: Optional[Pytree] = None) -> TrainState:
+        if params is None:
+            params = model_lib.init_params(rng, self.cfg)
+        return TrainState(self._init_arrays(rng, params), self._init_meta())
+
+    def _raw_step(self, arrays, batch):
+        (loss, metrics), g = jax.value_and_grad(
+            self._loss_fn, has_aux=True)(arrays["params"], batch)
+        new_p, new_s = self.adam.update(g, arrays["opt"], arrays["params"])
+        return {"params": new_p, "opt": new_s}, loss, metrics
+
+    def memory_report(self, state: TrainState) -> Dict[str, int]:
+        report = {
+            "params_bytes": nbytes(state.arrays["params"]),
+            "grads_bytes": nbytes(state.arrays["params"]),
+            "opt_state_bytes": self.adam.state_bytes(state.arrays["opt"]),
+            "mask_bytes": 0, "probe_bytes": 0,
+        }
+        report["total_train_state"] = sum(
+            v for k, v in report.items() if k != "params_bytes")
+        return report
+
+
+@register("adam")
+def make_full_adam(cfg, *, adam=None, loss_fn=None, attn_impl="full",
+                   **_) -> FullAdamCore:
+    return FullAdamCore(cfg, adam=adam, loss_fn=loss_fn,
+                        attn_impl=attn_impl)

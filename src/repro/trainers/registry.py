@@ -1,0 +1,39 @@
+"""Name -> TrainerCore factory registry.
+
+``launch.train --optimizer X`` and ``launch.steps`` resolve trainers
+here instead of hard-coding classes.  A factory takes ``(cfg,
+**hyperparams)`` and returns a ``TrainerCore``; factories accept (and
+ignore) the union of launcher hyperparameters so the launcher needs no
+per-trainer argument plumbing.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+from repro.trainers.api import TrainerCore
+
+_REGISTRY: Dict[str, Callable[..., TrainerCore]] = {}
+
+
+def register(name: str):
+    """Decorator: ``@register("galore")`` over a factory ``(cfg, **kw)``."""
+    def deco(factory):
+        _REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def get(name: str) -> Callable[..., TrainerCore]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown trainer {name!r}; registered: {names()}") \
+            from None
+
+
+def names() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def make(name: str, cfg, **kw) -> TrainerCore:
+    return get(name)(cfg, **kw)

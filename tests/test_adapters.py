@@ -247,6 +247,50 @@ def test_train_loop_exports_adapter(tmp_path, tiny_cfg):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_train_loop_exports_adapter_across_resume(tmp_path, tiny_cfg):
+    """Resumed runs keep exporting deltas: the pre-finetune base snapshot
+    is persisted under adapter_dir at step 0 and reloaded on restart."""
+    from repro.core.blockllm import BlockLLMConfig, BlockLLMTrainer
+    from repro.core.selection import SelectorConfig
+    from repro.optim.adam import Adam
+    from repro.runtime.train_loop import TrainLoopConfig, run
+
+    params = model.init_params(K(0), tiny_cfg)
+    base = jax.tree.map(lambda a: a.copy(), params)
+    toks = jnp.arange(32)[None, :].repeat(2, 0) % tiny_cfg.vocab_size
+
+    def mk():
+        return BlockLLMTrainer(
+            tiny_cfg, jax.tree.map(lambda a: a.copy(), params),
+            adam=Adam(lr=3e-3),
+            bcfg=BlockLLMConfig(selector=SelectorConfig(
+                sparsity=0.9, policy="static", static_k_frac=0.5,
+                patience=1000)))
+
+    loop_cfg = TrainLoopConfig(
+        total_steps=6, ckpt_every=2, ckpt_dir=str(tmp_path / "ckpt"),
+        log_every=0, adapter_dir=str(tmp_path / "adapters"),
+        adapter_id="taskR")
+    with pytest.raises(RuntimeError, match="simulated node failure"):
+        run(mk(), lambda s: {"tokens": (toks + s) % tiny_cfg.vocab_size},
+            loop_cfg, crash_at=4)
+    tr = mk()
+    run(tr, lambda s: {"tokens": (toks + s) % tiny_cfg.vocab_size},
+        loop_cfg)
+
+    reg = AdapterRegistry(tmp_path / "adapters")
+    # the base snapshot dir must stay invisible to adapter listings
+    assert reg.list_adapters() == ["taskR"]
+    d = reg.get("taskR")
+    assert d.meta["step"] == 6
+    # the delta is against the ORIGINAL pre-finetune base, not the
+    # resumed checkpoint: applying it to base reproduces merged params
+    applied, _ = apply_delta(base, d)
+    for a, b in zip(jax.tree.leaves(applied),
+                    jax.tree.leaves(tr.merged_params())):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 # --------------------------------------------------------------------- #
 # multi-tenant serving equivalence
 # --------------------------------------------------------------------- #

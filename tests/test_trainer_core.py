@@ -1,0 +1,206 @@
+"""TrainerCore protocol conformance, parameterized over every registered
+trainer: state_spec honesty, step determinism, memory-report shape, and
+bit-identical mid-run checkpoint resume through the ONE generic
+train-loop checkpoint path (no trainer-specific serializers)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import trainers
+from repro.models import model
+from repro.optim.adam import Adam
+from repro.runtime.train_loop import TrainLoopConfig, run
+from repro.trainers.api import TrainerHandle, check_state
+
+K = jax.random.PRNGKey
+
+NAMES = ["blockllm", "adam", "galore", "lora", "badam"]
+
+MEMORY_KEYS = {"params_bytes", "grads_bytes", "opt_state_bytes",
+               "mask_bytes", "probe_bytes", "total_train_state"}
+
+
+def _core(name, cfg):
+    return trainers.make(
+        name, cfg, adam=Adam(lr=3e-3), lr=3e-3, sparsity=0.9,
+        patience=1000, policy="static", k_frac=0.5, rank=4,
+        switch_every=50, update_proj_gap=10)
+
+
+def _batch(cfg, step=0):
+    toks = jnp.arange(32)[None, :].repeat(2, 0) % cfg.vocab_size
+    return {"tokens": (toks + step) % cfg.vocab_size}
+
+
+def test_registry_has_all_trainers():
+    for name in NAMES:
+        assert name in trainers.names()
+    with pytest.raises(KeyError, match="unknown trainer"):
+        trainers.get("sixth-snowflake")
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_state_spec_honored(name, tiny_cfg):
+    """init and step both produce exactly the declared array/meta split,
+    with JSON-able meta and array-only leaves in ``arrays``."""
+    core = _core(name, tiny_cfg)
+    state = core.init(K(0), model.init_params(K(0), tiny_cfg))
+    check_state(core, state)
+    state2, metrics = core.step(state, _batch(tiny_cfg))
+    check_state(core, state2)
+    assert np.isfinite(metrics["loss"])
+    assert int(state2.meta["step"]) == 1
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_step_determinism(name, tiny_cfg):
+    """Two independent (core, state) pairs from the same seed walk the
+    same loss trajectory and end at identical parameters."""
+    runs = []
+    for _ in range(2):
+        core = _core(name, tiny_cfg)
+        state = core.init(K(0), model.init_params(K(0), tiny_cfg))
+        losses = []
+        for i in range(3):
+            state, m = core.step(state, _batch(tiny_cfg, i))
+            losses.append(m["loss"])
+        runs.append((losses, core.merged_params(state)))
+    assert runs[0][0] == runs[1][0]
+    for a, b in zip(jax.tree.leaves(runs[0][1]), jax.tree.leaves(runs[1][1])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_memory_report_shape(name, tiny_cfg):
+    core = _core(name, tiny_cfg)
+    state = core.init(K(0), model.init_params(K(0), tiny_cfg))
+    state, _ = core.step(state, _batch(tiny_cfg))
+    rep = core.memory_report(state)
+    assert set(rep) == MEMORY_KEYS
+    assert all(v >= 0 for v in rep.values())
+    assert rep["total_train_state"] == sum(
+        v for k, v in rep.items()
+        if k not in ("params_bytes", "total_train_state"))
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_checkpoint_roundtrip_resumes_bit_identical(name, tmp_path,
+                                                    tiny_cfg):
+    """6 straight steps == 3 steps + crash + generic restore + 3 steps,
+    for EVERY trainer through the one protocol checkpoint path —
+    including BlockLLM's host meta (norm dict, plan indices)."""
+    def handle():
+        core = _core(name, tiny_cfg)
+        return TrainerHandle(core,
+                             core.init(K(0), model.init_params(K(0),
+                                                               tiny_cfg)))
+
+    def batch_fn(step):
+        return _batch(tiny_cfg, step)
+
+    hA = handle()
+    outA = run(hA, batch_fn, TrainLoopConfig(total_steps=6, ckpt_every=3,
+                                             ckpt_dir=None, log_every=0))
+
+    hB = handle()
+    with pytest.raises(RuntimeError, match="simulated node failure"):
+        run(hB, batch_fn, TrainLoopConfig(
+            total_steps=6, ckpt_every=3, ckpt_dir=str(tmp_path),
+            log_every=0), crash_at=3)
+    hB2 = handle()
+    outB = run(hB2, batch_fn, TrainLoopConfig(
+        total_steps=6, ckpt_every=3, ckpt_dir=str(tmp_path), log_every=0))
+
+    assert hB2.step == 6
+    np.testing.assert_array_equal(np.asarray(outA["losses"][3:]),
+                                  np.asarray(outB["losses"]))
+    for a, b in zip(jax.tree.leaves(hA.merged_params()),
+                    jax.tree.leaves(hB2.merged_params())):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_blockllm_host_meta_survives_roundtrip(tmp_path, tiny_cfg):
+    """The norm dictionary / visit counts / plan indices ride the generic
+    manifest meta and come back equal."""
+    core = _core("blockllm", tiny_cfg)
+    h = TrainerHandle(core, core.init(K(0),
+                                      model.init_params(K(0), tiny_cfg)))
+    run(h, lambda s: _batch(tiny_cfg, s),
+        TrainLoopConfig(total_steps=4, ckpt_every=2,
+                        ckpt_dir=str(tmp_path), log_every=0))
+    saved_meta = h.state.meta
+    core2 = _core("blockllm", tiny_cfg)
+    h2 = TrainerHandle(core2, core2.init(K(0),
+                                         model.init_params(K(0), tiny_cfg)))
+    run(h2, lambda s: _batch(tiny_cfg, s),
+        TrainLoopConfig(total_steps=4, ckpt_every=2,
+                        ckpt_dir=str(tmp_path), log_every=0))  # resume noop
+    assert h2.state.meta["norms"] == saved_meta["norms"]
+    assert h2.state.meta["visit_counts"] == saved_meta["visit_counts"]
+    assert h2.state.meta["stack_idx"] == saved_meta["stack_idx"]
+    assert h2.state.meta["step"] == 4
+
+
+def test_resume_rejects_wrong_trainer(tmp_path, tiny_cfg):
+    """A checkpoint written by one trainer must fail fast (clear
+    ValueError from the manifest, before any array load) when resumed
+    under a different --optimizer."""
+    core = _core("blockllm", tiny_cfg)
+    h = TrainerHandle(core, core.init(K(0),
+                                      model.init_params(K(0), tiny_cfg)))
+    run(h, lambda s: _batch(tiny_cfg, s),
+        TrainLoopConfig(total_steps=2, ckpt_every=2,
+                        ckpt_dir=str(tmp_path), log_every=0))
+    core2 = _core("adam", tiny_cfg)
+    h2 = TrainerHandle(core2, core2.init(K(0),
+                                         model.init_params(K(0),
+                                                           tiny_cfg)))
+    with pytest.raises(ValueError, match="written by trainer 'blockllm'"):
+        run(h2, lambda s: _batch(tiny_cfg, s),
+            TrainLoopConfig(total_steps=4, ckpt_every=2,
+                            ckpt_dir=str(tmp_path), log_every=0))
+
+
+def test_carry_surviving_carries_both_moments(tiny_cfg):
+    """Satellite fix: re-selection with ``carry_surviving`` must carry
+    nu for the same matched rows as mu (not reset it to zeros)."""
+    from repro.core.blockllm import BlockLLMConfig
+    from repro.core.selection import SelectorConfig
+    from repro.trainers.blockllm import BlockLLMCore
+
+    # k_frac=1.0: every row re-selected => guaranteed survivors (the
+    # optimistic-init ranking otherwise prefers never-visited rows)
+    core = BlockLLMCore(
+        tiny_cfg,
+        bcfg=BlockLLMConfig(
+            selector=SelectorConfig(sparsity=0.9, policy="static",
+                                    static_k_frac=1.0, patience=1000),
+            carry_surviving=True),
+        adam=Adam(lr=3e-3))
+    state = core.init(K(0), model.init_params(K(0), tiny_cfg))
+    for i in range(2):
+        state, _ = core.step(state, _batch(tiny_cfg, i))
+    old_idx = {k: list(v) for k, v in state.meta["stack_idx"].items()}
+    old_mu = jax.tree.map(np.asarray, state.arrays["opt"].mu)
+    old_nu = jax.tree.map(np.asarray, state.arrays["opt"].nu)
+    state2 = core.reselect(state)
+    carried_any = False
+    for sid, new_list in state2.meta["stack_idx"].items():
+        common = [g for g in new_list if g in old_idx.get(sid, [])]
+        if not common:
+            continue
+        carried_any = True
+        for g in common:
+            src = old_idx[sid].index(g)
+            dst = new_list.index(g)
+            for leaf_old_mu, leaf_old_nu, leaf_mu, leaf_nu in zip(
+                    jax.tree.leaves(old_mu["stacks"][sid]),
+                    jax.tree.leaves(old_nu["stacks"][sid]),
+                    jax.tree.leaves(state2.arrays["opt"].mu["stacks"][sid]),
+                    jax.tree.leaves(state2.arrays["opt"].nu["stacks"][sid])):
+                np.testing.assert_array_equal(
+                    np.asarray(leaf_mu)[dst], leaf_old_mu[src])
+                np.testing.assert_array_equal(
+                    np.asarray(leaf_nu)[dst], leaf_old_nu[src])
+    assert carried_any, "static re-selection kept no surviving rows"
