@@ -10,8 +10,11 @@ Reported (CSV name,us_per_call,derived):
   adapter_swap_xla       apply+revert via donated XLA scatter
   adapter_swap_kernel    apply+revert via the Pallas scatter-swap kernel
                          (interpret mode off-TPU)
+  adapter_swap_q8        apply+revert of the int8-quantized payload
+                         (transparent dequant on apply)
   full_reload            host->device copy of every parameter
   swap_bytes_ratio       delta bytes moved / full reload bytes  (<10%)
+  q8_payload_ratio       quantized / fp32 delta payload bytes   (~0.26)
 
     PYTHONPATH=src python -m benchmarks.bench_adapter_swap [--quick]
 """
@@ -24,7 +27,8 @@ import jax
 import numpy as np
 
 from benchmarks import common
-from repro.adapters import apply_delta, delta_from_trainer, revert_delta
+from repro.adapters import (apply_delta, delta_from_trainer,
+                            quantize_delta, revert_delta)
 from repro.core.blockllm import BlockLLMConfig, BlockLLMTrainer
 from repro.core.selection import SelectorConfig
 from repro.optim.adam import Adam
@@ -107,9 +111,17 @@ def run(quick: bool = False):
         "pallas" if __import__("jax").default_backend() == "tpu"
         else "interpret", iters)
     common.emit("adapter_swap_kernel", us_kernel, "apply+revert")
+    # quantized payload: int8 rows + block scales move over the
+    # registry/PCIe; apply dequantizes on device before the swap
+    qdelta = quantize_delta(delta)
+    q_ratio = qdelta.nbytes / delta.nbytes
+    us_q8 = _time_swap(base, qdelta, "xla", iters)
+    common.emit("adapter_swap_q8", us_q8,
+                f"bytes={qdelta.nbytes};apply+revert")
     us_reload = _time_full_reload(base, iters)
     common.emit("full_reload", us_reload, f"bytes={param_bytes}")
     common.emit("swap_bytes_ratio", 0.0, f"{ratio:.4f}")
+    common.emit("q8_payload_ratio", 0.0, f"{q_ratio:.4f}")
 
     print(f"\nmodel: {cfg.param_count() / 1e6:.1f}M params "
           f"({param_bytes / 2 ** 20:.1f} MiB)")
@@ -119,12 +131,18 @@ def run(quick: bool = False):
     print(f"tenant flip moves {swap_bytes / 2 ** 20:.2f} MiB "
           f"({ratio:.1%} of a full reload) — "
           f"{'OK' if ratio < 0.10 else 'OVER'} the <10% budget")
+    print(f"q8 payload: {qdelta.nbytes / 2 ** 20:.2f} MiB "
+          f"({q_ratio:.1%} of the fp32 delta)")
     print(f"swap (xla)     : {us_xla / 1e3:8.2f} ms")
     print(f"swap (kernel)  : {us_kernel / 1e3:8.2f} ms")
+    print(f"swap (q8)      : {us_q8 / 1e3:8.2f} ms")
     print(f"full reload    : {us_reload / 1e3:8.2f} ms")
     assert ratio < 0.10, (
         f"swap bytes {swap_bytes} not < 10% of reload {param_bytes}")
-    return {"ratio": ratio, "swap_us": us_xla, "reload_us": us_reload}
+    assert q_ratio < 0.35, (
+        f"quantized payload {qdelta.nbytes} not < 35% of {delta.nbytes}")
+    return {"ratio": ratio, "swap_us": us_xla, "reload_us": us_reload,
+            "q8_payload_ratio": q_ratio}
 
 
 if __name__ == "__main__":

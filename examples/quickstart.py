@@ -22,6 +22,10 @@ params = model.init_params(jax.random.PRNGKey(0), cfg)
 #    BlockLLM: only ~10% of parameters get gradients + Adam state; blocks
 #    re-selected by gradient norm / visit frequency when the loss
 #    plateaus (paper Algorithm 1+2).
+#    Add quantize_state=True (or use the "blockllm+q8" registry name /
+#    `launch.train --quantize-state`) for Q8State: Adam moments stored
+#    int8 + per-block scales at ~25% of the fp32 bytes, same protocol,
+#    bit-exact crash-resume.
 core = trainers.make("blockllm", cfg, adam=Adam(lr=1e-3),
                      sparsity=0.9, patience=20, policy="static",
                      k_frac=0.25)

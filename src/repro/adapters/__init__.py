@@ -47,11 +47,12 @@ back on load, so the round trip is exact.
 from repro.adapters.delta import (DeltaEntry, SparseDelta, apply_delta,
                                   copy_tree, delta_from_trainer,
                                   extract_delta, fingerprint, load_delta,
-                                  revert_delta, save_delta)
+                                  quantize_delta, revert_delta, save_delta)
 from repro.adapters.registry import AdapterRegistry, InMemoryRegistry
 
 __all__ = [
     "DeltaEntry", "SparseDelta", "apply_delta", "copy_tree",
     "delta_from_trainer", "extract_delta", "fingerprint", "load_delta",
-    "revert_delta", "save_delta", "AdapterRegistry", "InMemoryRegistry",
+    "quantize_delta", "revert_delta", "save_delta", "AdapterRegistry",
+    "InMemoryRegistry",
 ]

@@ -149,14 +149,27 @@ def build_step_fn(cfg, index: UnitIndex, adam: Adam, bcfg: BlockLLMConfig,
             # fused masked-Adam Pallas kernel: one VMEM pass per tile
             # (5 reads + 3 writes vs ~12 HBM round-trips unfused)
             from repro.kernels import ops as kernel_ops
+            from repro.optim.q8adam import Q8Adam, Q8AdamState
             lr = adam.lr(opt_state.count) if callable(adam.lr) else adam.lr
-            new_sel, mu2, nu2 = kernel_ops.masked_adam_tree(
-                sel, g_sel, opt_state.mu, opt_state.nu,
-                new_masks if (with_masks or refresh) else None,
-                lr=lr, b1=adam.b1, b2=adam.b2, eps=adam.eps,
-                weight_decay=adam.weight_decay, count=opt_state.count,
-                interpret=(bcfg.fused_update == "interpret"))
-            new_opt = AdamState(opt_state.count + 1, mu2, nu2)
+            mask_arg = new_masks if (with_masks or refresh) else None
+            if isinstance(adam, Q8Adam):
+                # Q8State: moments stream through VMEM as int8+scale —
+                # dequant/requant fused, no fp32 moment HBM round-trip
+                new_sel, mq2, ms2, nq2, ns2 = kernel_ops.masked_adam_q8_tree(
+                    sel, g_sel, opt_state.mu_q, opt_state.mu_scale,
+                    opt_state.nu_q, opt_state.nu_scale, mask_arg,
+                    lr=lr, b1=adam.b1, b2=adam.b2, eps=adam.eps,
+                    weight_decay=adam.weight_decay, count=opt_state.count,
+                    interpret=(bcfg.fused_update == "interpret"))
+                new_opt = Q8AdamState(opt_state.count + 1, mq2, ms2,
+                                      nq2, ns2)
+            else:
+                new_sel, mu2, nu2 = kernel_ops.masked_adam_tree(
+                    sel, g_sel, opt_state.mu, opt_state.nu, mask_arg,
+                    lr=lr, b1=adam.b1, b2=adam.b2, eps=adam.eps,
+                    weight_decay=adam.weight_decay, count=opt_state.count,
+                    interpret=(bcfg.fused_update == "interpret"))
+                new_opt = AdamState(opt_state.count + 1, mu2, nu2)
         else:
             new_sel, new_opt = adam.update(
                 g_sel, opt_state, sel,

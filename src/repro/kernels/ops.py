@@ -108,6 +108,60 @@ def masked_adam_tree(params: Pytree, grads: Pytree, mu: Pytree, nu: Pytree,
             td.unflatten([o[2] for o in out]))
 
 
+def _to_q8_view(a):
+    """Flatten/pad a leaf into the [NB, BLOCK] codec view the quantized
+    moments are stored in (same block walk as runtime/compression.py)."""
+    from repro.runtime.compression import BLOCK
+    flat = a.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    return jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+
+
+def masked_adam_q8_tree(params: Pytree, grads: Pytree, mu_q: Pytree,
+                        mu_scale: Pytree, nu_q: Pytree, nu_scale: Pytree,
+                        masks: Pytree, *, lr, b1=0.9, b2=0.999, eps=1e-8,
+                        weight_decay=0.0, count=0, tau=0.0, use_tau=False,
+                        interpret=False):
+    """Fused dequant->masked-Adam->requant across every leaf.
+
+    Moments stay in their quantized storage layout (int8 [NB, BLOCK] +
+    f32 [NB] scales, mirroring the param treedef) — no fp32 moment tree
+    is ever materialized.  Returns
+    ``(params', mu_q', mu_scale', nu_q', nu_scale')``.
+    """
+    cf = jnp.asarray(count, jnp.float32) + 1.0
+    scal = jnp.stack([
+        jnp.asarray(lr, jnp.float32), jnp.asarray(b1, jnp.float32),
+        jnp.asarray(b2, jnp.float32), jnp.asarray(eps, jnp.float32),
+        jnp.asarray(weight_decay, jnp.float32),
+        1.0 - b1 ** cf, 1.0 - b2 ** cf, jnp.asarray(tau, jnp.float32)])
+
+    def one(p, mq, ms, nq, ns, g, msk):
+        shape = p.shape
+        pv = _to_q8_view(p)
+        gv = _to_q8_view(g)
+        mv = _to_q8_view(msk if msk is not None
+                         else jnp.ones(shape, jnp.bool_))
+        p2, mq2, ms2, nq2, ns2 = ma.masked_adam_q8_2d(
+            pv, gv, mq, ms.reshape(-1, 1), nq, ns.reshape(-1, 1), mv,
+            scal, use_tau=use_tau, interpret=interpret)
+        return (p2.reshape(-1)[:p.size].reshape(shape), mq2,
+                ms2.reshape(-1), nq2, ns2.reshape(-1))
+
+    flat_p, td = jax.tree.flatten(params)
+    out = [one(p, mq, ms, nq, ns, g, msk) for p, mq, ms, nq, ns, g, msk
+           in zip(flat_p, td.flatten_up_to(mu_q),
+                  td.flatten_up_to(mu_scale), td.flatten_up_to(nu_q),
+                  td.flatten_up_to(nu_scale), td.flatten_up_to(grads),
+                  td.flatten_up_to(masks) if masks is not None
+                  else [None] * len(flat_p))]
+    return (td.unflatten([o[0] for o in out]),
+            td.unflatten([o[1] for o in out]),
+            td.unflatten([o[2] for o in out]),
+            td.unflatten([o[3] for o in out]),
+            td.unflatten([o[4] for o in out]))
+
+
 # --------------------------------------------------------------------- #
 # adapter row scatter-swap
 # --------------------------------------------------------------------- #

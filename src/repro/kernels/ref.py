@@ -21,6 +21,29 @@ def masked_adam_ref(p, g, m, v, mask, scalars, *, use_tau=False):
     return (p32 - lr * u).astype(p.dtype), m2, v2
 
 
+def masked_adam_q8_ref(p, g, mq, ms, vq, vs, mask, scalars, *,
+                       use_tau=False):
+    """Oracle for kernels.masked_adam.masked_adam_q8_2d.
+
+    p/g/mask [NB, 256] codec views; mq/vq int8 [NB, 256]; ms/vs f32
+    [NB, 1].  Dequant -> masked_adam_ref math -> requant with the
+    runtime/compression.py block-quantization formula.
+    """
+    m = mq.astype(jnp.float32) * ms
+    v = vq.astype(jnp.float32) * vs
+    p2, m2, v2 = masked_adam_ref(p, g, m, v, mask, scalars,
+                                 use_tau=use_tau)
+
+    def requant(x):
+        s = jnp.maximum(jnp.max(jnp.abs(x), axis=1, keepdims=True) / 127.0,
+                        1e-12)
+        return jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8), s
+
+    mq2, ms2 = requant(m2)
+    vq2, vs2 = requant(v2)
+    return p2, mq2, ms2, vq2, vs2
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
     """Oracle for kernels.flash_attention (GQA-aware full attention).
 

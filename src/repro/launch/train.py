@@ -5,8 +5,9 @@
         --optimizer blockllm --sparsity 0.9 --ckpt-dir /tmp/ckpt
 
 ``--optimizer`` is a ``repro.trainers`` registry lookup (blockllm,
-adam, galore, lora, badam — plus anything registered by downstream
-code): the launcher builds the named ``TrainerCore``, wraps its
+adam, galore, lora, badam, and the Q8State variants blockllm+q8 /
+adam+q8 / badam+q8 — plus anything registered by downstream code): the
+launcher builds the named ``TrainerCore``, wraps its
 ``TrainState`` in a ``TrainerHandle``, and hands it to the generic
 ``runtime.train_loop`` — no per-trainer branches anywhere.
 
@@ -83,7 +84,8 @@ def make_trainer(cfg, args, params=None):
         args.optimizer, cfg, adam=adam, lr=args.lr,
         sparsity=args.sparsity, patience=args.patience,
         policy=args.policy, k_frac=args.k_frac, rank=args.rank,
-        switch_every=args.patience)
+        switch_every=args.patience,
+        quantize_state=args.quantize_state)
     return trainers.TrainerHandle(
         core, core.init(jax.random.PRNGKey(args.seed), params))
 
@@ -95,7 +97,13 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--optimizer", default="blockllm",
-                    choices=["blockllm", "adam", "galore", "lora", "badam"])
+                    choices=["blockllm", "adam", "galore", "lora", "badam",
+                             "blockllm+q8", "adam+q8", "badam+q8"])
+    ap.add_argument("--quantize-state", action="store_true",
+                    help="Q8State: store Adam moments int8 + per-block "
+                         "f32 scales (~4x smaller optimizer state; "
+                         "blockllm/adam/badam — equivalent to the +q8 "
+                         "registry names)")
     ap.add_argument("--sparsity", type=float, default=0.95)
     ap.add_argument("--patience", type=int, default=100)
     ap.add_argument("--policy", default="static",
@@ -113,6 +121,12 @@ def main(argv=None):
     ap.add_argument("--tpu-flags", action="store_true",
                     help="append latency-hiding XLA flags (set BEFORE jax)")
     args = ap.parse_args(argv)
+
+    if args.quantize_state and args.optimizer.split("+")[0] not in (
+            "blockllm", "adam", "badam"):
+        ap.error(f"--quantize-state is not supported by "
+                 f"--optimizer {args.optimizer} (Q8State cores: "
+                 f"blockllm, adam, badam)")
 
     if args.tpu_flags:
         os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") + " "

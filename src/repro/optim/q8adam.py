@@ -1,0 +1,143 @@
+"""Q8State: block-quantized (int8 + per-block f32 scale) Adam moments.
+
+BlockLLM already shrinks the optimizer by keeping Adam state only for the
+active coordinate blocks; the remaining fp32 moments are the dominant
+optimizer-state cost.  ``Q8Adam`` stores both moments as int8 values with
+one f32 scale per 256-element block — the exact codec
+``runtime/compression.py`` uses for gradient all-reduce — cutting moment
+bytes to ~25.4% of fp32 (1 byte + 4/256 per element).
+
+Semantics: the quantized state is the ONLY persistent optimizer state.
+Every ``update`` dequantizes the stored moments, runs the unmodified
+Adam math (``optim.adam.Adam``), and requantizes the results — so a step
+is a deterministic function of (int8 state, grads, params), and the
+generic checkpoint path (int8/f32 leaves in the ``state_spec`` array
+pytree -> npz) resumes bit-exactly with zero serializer changes.
+
+The fused Pallas path (``kernels/masked_adam.masked_adam_q8_2d``)
+computes the same transition without materializing fp32 moment tensors
+in HBM; parity with this host-side reference is covered by
+``tests/test_q8state.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adam import Adam, AdamState
+from repro.runtime.compression import (BLOCK, dequantize_int8,
+                                       quantize_int8)
+
+Pytree = Any
+
+
+class Q8AdamState(NamedTuple):
+    """Quantized twin of ``AdamState``: per moment, a pytree of int8
+    value blocks ``[NB, 256]`` and a pytree of f32 scales ``[NB]``
+    (NB = ceil(leaf.size / 256); both mirror the param treedef)."""
+    count: jnp.ndarray   # int32 scalar
+    mu_q: Pytree         # int8 [NB, BLOCK] per leaf
+    mu_scale: Pytree     # f32 [NB] per leaf
+    nu_q: Pytree
+    nu_scale: Pytree
+
+
+def quantize_tree(tree: Pytree) -> Tuple[Pytree, Pytree]:
+    """Leaf-wise ``quantize_int8``: tree -> (int8-blocks tree, scales tree)."""
+    flat, td = jax.tree.flatten(tree)
+    qs = [quantize_int8(l) for l in flat]
+    return (td.unflatten([q for q, _ in qs]),
+            td.unflatten([s for _, s in qs]))
+
+
+def dequantize_tree(q_tree: Pytree, scale_tree: Pytree, like: Pytree,
+                    dtype=jnp.float32) -> Pytree:
+    """Inverse of ``quantize_tree``; ``like`` supplies the leaf shapes."""
+    flat_like, td = jax.tree.flatten(like)
+    qs = td.flatten_up_to(q_tree)
+    ss = td.flatten_up_to(scale_tree)
+    return td.unflatten([dequantize_int8(q, s, l.shape, dtype)
+                         for q, s, l in zip(qs, ss, flat_like)])
+
+
+def to_adam_state(state: Q8AdamState, like: Pytree) -> AdamState:
+    """Materialize the fp32 ``AdamState`` view (``like``: param-shaped
+    tree, e.g. the active selection the moments track)."""
+    return AdamState(state.count,
+                     dequantize_tree(state.mu_q, state.mu_scale, like),
+                     dequantize_tree(state.nu_q, state.nu_scale, like))
+
+
+def from_adam_state(state: AdamState) -> Q8AdamState:
+    mq, ms = quantize_tree(state.mu)
+    nq, ns = quantize_tree(state.nu)
+    return Q8AdamState(state.count, mq, ms, nq, ns)
+
+
+@dataclass(frozen=True)
+class Q8Adam:
+    """Drop-in for ``Adam`` with int8 block-quantized persistent moments.
+
+    Same surface the trainers consume (``init`` / ``update`` /
+    ``processed_grad`` / ``state_bytes``), same hyperparameters (held by
+    the wrapped ``base`` Adam); only the state representation differs.
+    """
+    base: Adam
+
+    # hyperparameter views (build_step_fn reads these off the optimizer)
+    @property
+    def lr(self):
+        return self.base.lr
+
+    @property
+    def b1(self) -> float:
+        return self.base.b1
+
+    @property
+    def b2(self) -> float:
+        return self.base.b2
+
+    @property
+    def eps(self) -> float:
+        return self.base.eps
+
+    @property
+    def weight_decay(self) -> float:
+        return self.base.weight_decay
+
+    @property
+    def clip_norm(self) -> float:
+        return self.base.clip_norm
+
+    def init(self, params: Pytree) -> Q8AdamState:
+        return from_adam_state(self.base.init(params))
+
+    def processed_grad(self, grads: Pytree, state: Q8AdamState):
+        upds, new = self.base.processed_grad(
+            grads, to_adam_state(state, grads))
+        return upds, from_adam_state(new)
+
+    def update(self, grads: Pytree, state: Q8AdamState, params: Pytree,
+               *, update_mask: Optional[Pytree] = None):
+        new_p, new = self.base.update(
+            grads, to_adam_state(state, params), params,
+            update_mask=update_mask)
+        return new_p, from_adam_state(new)
+
+    def state_bytes(self, state: Q8AdamState) -> int:
+        return sum(a.size * a.dtype.itemsize
+                   for a in jax.tree.leaves((state.mu_q, state.mu_scale,
+                                             state.nu_q, state.nu_scale)))
+
+
+def is_quantized(adam) -> bool:
+    """True when an optimizer stores Q8 (int8+scale) moment state."""
+    return isinstance(adam, Q8Adam)
+
+
+__all__ = ["BLOCK", "Q8Adam", "Q8AdamState", "quantize_tree",
+           "dequantize_tree", "to_adam_state", "from_adam_state",
+           "is_quantized"]

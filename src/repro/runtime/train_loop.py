@@ -45,6 +45,9 @@ class TrainLoopConfig:
     # the row-sparse delta to an adapter registry (repro.adapters).
     adapter_dir: Optional[str] = None
     adapter_id: str = "adapter"
+    # int8-quantize exported delta payloads (rows -> int8 codec blocks +
+    # f32 scales; ~4x smaller registry entries, dequantized on apply)
+    quantize_deltas: bool = False
 
 
 def _protocol_state(trainer) -> Optional[TrainState]:
@@ -158,10 +161,12 @@ class _AdapterExporter:
     exporting correct deltas instead of bailing out.
     """
 
-    def __init__(self, registry, base, adapter_id: str):
+    def __init__(self, registry, base, adapter_id: str,
+                 quantize: bool = False):
         self.registry = registry
         self.base = base
         self.adapter_id = adapter_id
+        self.quantize = quantize
         self.last_step = -1
 
     @staticmethod
@@ -191,14 +196,17 @@ class _AdapterExporter:
                 return None
             base, _ = ckpt_lib.restore(snap, 0, _merged(trainer))
         return _AdapterExporter(AdapterRegistry(cfg.adapter_dir), base,
-                                cfg.adapter_id)
+                                cfg.adapter_id,
+                                quantize=cfg.quantize_deltas)
 
     def emit(self, trainer, step: int):
         if step == self.last_step:
             return  # final step coincides with a checkpoint boundary
-        from repro.adapters import delta_from_trainer
+        from repro.adapters import delta_from_trainer, quantize_delta
         d = delta_from_trainer(trainer, self.base,
                                meta={"step": step,
                                      "adapter_id": self.adapter_id})
+        if self.quantize:
+            d = quantize_delta(d)
         self.registry.put(self.adapter_id, d)
         self.last_step = step

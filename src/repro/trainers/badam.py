@@ -39,19 +39,27 @@ class BAdamCore(BlockLLMCore):
 
     def __init__(self, cfg, *, switch_every=100, block_rows=1,
                  train_embeddings=False, adam=None, loss_fn=None,
-                 attn_impl="full", bcfg=None):
+                 attn_impl="full", bcfg=None, quantize_state=False):
         super().__init__(
             cfg,
             bcfg=bcfg or badam_config(switch_every, block_rows,
                                       train_embeddings),
             adam=adam or Adam(lr=1e-3), loss_fn=loss_fn,
-            attn_impl=attn_impl)
+            attn_impl=attn_impl, quantize_state=quantize_state)
 
 
 @register("badam")
 def make_badam(cfg, *, switch_every=100, block_rows=1,
                train_embeddings=False, adam=None, loss_fn=None,
-               attn_impl="full", **_) -> BAdamCore:
+               attn_impl="full", quantize_state=False, **_) -> BAdamCore:
     return BAdamCore(cfg, switch_every=switch_every, block_rows=block_rows,
                      train_embeddings=train_embeddings, adam=adam,
-                     loss_fn=loss_fn, attn_impl=attn_impl)
+                     loss_fn=loss_fn, attn_impl=attn_impl,
+                     quantize_state=quantize_state)
+
+
+@register("badam+q8")
+def make_badam_q8(cfg, **kw) -> BAdamCore:
+    """BAdam with Q8State moments (int8 + block scales)."""
+    kw["quantize_state"] = True
+    return make_badam(cfg, **kw)

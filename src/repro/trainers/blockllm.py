@@ -88,11 +88,19 @@ class BlockLLMCore(TrainerCore):
     )
 
     def __init__(self, cfg, *, bcfg=None, adam: Optional[Adam] = None,
-                 loss_fn=None, attn_impl: str = "full"):
+                 loss_fn=None, attn_impl: str = "full",
+                 quantize_state: bool = False):
         from repro.core.blockllm import BlockLLMConfig
+        from repro.optim.q8adam import Q8Adam
         self.cfg = cfg
         self.bcfg = bcfg or BlockLLMConfig()
         self.adam = adam or Adam(lr=1e-3)
+        # Q8State: persistent Adam moments stored int8 + block scales
+        # (~25% of fp32 moment bytes); the int8/scale leaves live in the
+        # ordinary ``opt`` array group, so checkpointing is unchanged
+        if quantize_state and not isinstance(self.adam, Q8Adam):
+            self.adam = Q8Adam(self.adam)
+        self.quantize_state = quantize_state
         self._loss_fn = loss_fn or (
             lambda p, batch, overlay=None: model_lib.loss_fn(
                 p, cfg, batch, attn_impl=attn_impl, overlay=overlay))
@@ -287,10 +295,28 @@ class BlockLLMCore(TrainerCore):
                                  cursor=int(state.meta["reselections"]))
         visits.record(plan.selected_labels())
         active = units_lib.extract_active(params, index, plan)
-        opt = self.adam.init(active["sel"])
-        if (self.bcfg.carry_surviving
-                and old_plan.structure == plan.structure):
-            opt = _carry_moments(plan, old_plan, opt, state.arrays["opt"])
+        carry = (self.bcfg.carry_surviving
+                 and old_plan.structure == plan.structure)
+        if not carry:
+            opt = self.adam.init(active["sel"])
+        else:
+            from repro.optim.q8adam import (Q8Adam, from_adam_state,
+                                            to_adam_state)
+            if isinstance(self.adam, Q8Adam):
+                # carry in fp32 view: codec blocks of the flattened
+                # moment tree do not align with selection rows, so
+                # dequantize the old state, row-carry into a fresh fp32
+                # zero state (base.init — quantizing zeros only to
+                # dequantize them back would be wasted codec passes),
+                # requantize once
+                opt = from_adam_state(_carry_moments(
+                    plan, old_plan, self.adam.base.init(active["sel"]),
+                    to_adam_state(state.arrays["opt"],
+                                  state.arrays["sel"])))
+            else:
+                opt = _carry_moments(plan, old_plan,
+                                     self.adam.init(active["sel"]),
+                                     state.arrays["opt"])
         use_masks = self._use_masks()
         # masks are always materialized (all-ones until the refresh step)
         # so the train-state pytree structure is checkpoint-stable
@@ -387,11 +413,28 @@ class BlockLLMCore(TrainerCore):
 def make_blockllm(cfg, *, adam=None, bcfg=None, loss_fn=None,
                   attn_impl="full", sparsity=0.95, patience=100,
                   policy="static", k_frac=0.25, probe_rows=1,
-                  **_) -> BlockLLMCore:
+                  quantize_state=False, **_) -> BlockLLMCore:
     if bcfg is None:
         from repro.core.blockllm import BlockLLMConfig
+        # quantized state on TPU defaults to the fused dequant->Adam->
+        # requant kernel: the host codec path materializes fp32 moment
+        # temporaries inside the step, so only the fused kernel delivers
+        # the step-time HBM win on real hardware (an explicit bcfg
+        # always takes precedence)
+        fused = "off"
+        if quantize_state:
+            from repro.kernels.ops import pallas_available
+            fused = "pallas" if pallas_available() else "off"
         bcfg = BlockLLMConfig(selector=SelectorConfig(
             sparsity=sparsity, patience=patience, policy=policy,
-            static_k_frac=k_frac, probe_rows_per_stack=probe_rows))
+            static_k_frac=k_frac, probe_rows_per_stack=probe_rows),
+            fused_update=fused)
     return BlockLLMCore(cfg, bcfg=bcfg, adam=adam, loss_fn=loss_fn,
-                        attn_impl=attn_impl)
+                        attn_impl=attn_impl, quantize_state=quantize_state)
+
+
+@register("blockllm+q8")
+def make_blockllm_q8(cfg, **kw) -> BlockLLMCore:
+    """BlockLLM with Q8State moments (int8 + block scales)."""
+    kw["quantize_state"] = True
+    return make_blockllm(cfg, **kw)

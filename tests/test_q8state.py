@@ -1,0 +1,376 @@
+"""Q8State: int8 optimizer moments + quantized delta payloads.
+
+Covers the ISSUE 3 acceptance criteria: codec round-trip error bounds
+(property tests), int8-vs-fp32 masked-Adam parity (fused kernel vs
+oracle, fused vs host codec path bit-identical state), quantized-core
+training within 5% of fp32 loss at ~25% of the moment bytes, and
+quantized SparseDelta payloads (transparent dequant on apply, bit-exact
+revert, registry round trip).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests._hyp import given, settings, st
+
+from repro.kernels import masked_adam as ma
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref
+from repro.optim.adam import Adam, AdamState
+from repro.optim.q8adam import (Q8Adam, dequantize_tree, from_adam_state,
+                                quantize_tree, to_adam_state)
+from repro.runtime.compression import BLOCK, dequantize_int8, quantize_int8
+
+K = jax.random.PRNGKey
+
+
+# --------------------------------------------------------------------- #
+# codec round-trip error bounds (property tests)
+# --------------------------------------------------------------------- #
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 1000),
+       st.floats(1e-6, 1e4))
+def test_quantize_roundtrip_error_bound(seed, n, amp):
+    """|x - deq(q(x))| <= scale/2 per element, scale = blockmax/127:
+    the codec's worst-case rounding error, for any size (incl. padding
+    tails) and any magnitude."""
+    x = (np.random.default_rng(seed).normal(size=n)
+         * amp).astype(np.float32)
+    q, s = quantize_int8(jnp.asarray(x))
+    deq = np.asarray(dequantize_int8(q, s, x.shape))
+    # per-element bound via each element's block scale (small relative
+    # slack: f32 arithmetic on exact-half rounding boundaries)
+    scales = np.repeat(np.asarray(s), BLOCK)[:n]
+    assert np.all(np.abs(deq - x) <= scales * (0.5 + 1e-5) + 1e-12)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_quantize_tree_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    tree = {"a": jnp.asarray(rng.normal(size=(13, 7)), jnp.float32),
+            "b": [jnp.asarray(rng.normal(size=(300,)), jnp.float32),
+                  jnp.asarray(rng.normal(size=()) , jnp.float32)]}
+    q, s = quantize_tree(tree)
+    deq = dequantize_tree(q, s, tree)
+    for orig, back in zip(jax.tree.leaves(tree), jax.tree.leaves(deq)):
+        orig = np.asarray(orig)
+        # relative-to-block-max bound: scale/2 = blockmax/254
+        bound = max(np.abs(orig).max() / 254.0, 1e-12) + 1e-12
+        assert np.max(np.abs(orig - np.asarray(back))) <= bound
+
+
+def test_quantized_zeros_stay_exact_zero():
+    tree = {"w": jnp.zeros((5, 300), jnp.float32)}
+    q, s = quantize_tree(tree)
+    deq = dequantize_tree(q, s, tree)
+    np.testing.assert_array_equal(np.asarray(deq["w"]), 0.0)
+
+
+# --------------------------------------------------------------------- #
+# int8 masked-Adam kernel parity
+# --------------------------------------------------------------------- #
+
+
+def _q8_operands(seed=0, nb=16):
+    rng = np.random.default_rng(seed)
+    p = jnp.asarray(rng.normal(size=(nb, BLOCK)), jnp.float32)
+    g = jnp.asarray(rng.normal(size=(nb, BLOCK)), jnp.float32)
+    mq = jnp.asarray(rng.integers(-127, 128, size=(nb, BLOCK)), jnp.int8)
+    vq = jnp.asarray(rng.integers(0, 128, size=(nb, BLOCK)), jnp.int8)
+    ms = jnp.asarray(np.abs(rng.normal(size=(nb, 1))) * 1e-2, jnp.float32)
+    vs = jnp.asarray(np.abs(rng.normal(size=(nb, 1))) * 1e-3, jnp.float32)
+    mask = jnp.asarray(rng.integers(0, 2, size=(nb, BLOCK)), jnp.bool_)
+    scal = jnp.asarray([1e-3, 0.9, 0.999, 1e-8, 0.01, 0.1, 0.001, 0.0],
+                       jnp.float32)
+    return p, g, mq, ms, vq, vs, mask, scal
+
+
+@pytest.mark.parametrize("use_tau", [False, True])
+def test_q8_kernel_matches_ref(use_tau):
+    """Fused dequant->Adam->requant kernel == pure-jnp oracle."""
+    ops = _q8_operands()
+    out_k = ma.masked_adam_q8_2d(*ops, use_tau=use_tau, interpret=True)
+    out_r = ref.masked_adam_q8_ref(*ops, use_tau=use_tau)
+    for a, b, name in zip(out_k, out_r, ["p", "mq", "ms", "vq", "vs"]):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=1e-6, atol=1e-6, err_msg=name)
+
+
+def test_q8_kernel_int8_vs_fp32_within_quantization_error():
+    """The q8 update == the fp32 masked-Adam update run on the
+    dequantized moments, with outputs equal up to one requant step."""
+    p, g, mq, ms, vq, vs, mask, scal = _q8_operands(seed=3)
+    m = mq.astype(jnp.float32) * ms
+    v = vq.astype(jnp.float32) * vs
+    p_f, m_f, v_f = ref.masked_adam_ref(p, g, m, v, mask, scal)
+    p_q, mq2, ms2, vq2, vs2 = ma.masked_adam_q8_2d(
+        p, g, mq, ms, vq, vs, mask, scal, interpret=True)
+    # params: identical (the param write is pre-requant in both)
+    np.testing.assert_allclose(np.asarray(p_q), np.asarray(p_f),
+                               rtol=1e-6, atol=1e-7)
+    # moments: within the codec's scale/2 rounding bound (relative
+    # slack for f32 arithmetic on exact-half boundaries)
+    m_q = np.asarray(mq2, np.float32) * np.asarray(ms2)
+    v_q = np.asarray(vq2, np.float32) * np.asarray(vs2)
+    assert np.all(np.abs(m_q - np.asarray(m_f))
+                  <= np.asarray(ms2) * (0.5 + 1e-5) + 1e-9)
+    assert np.all(np.abs(v_q - np.asarray(v_f))
+                  <= np.asarray(vs2) * (0.5 + 1e-5) + 1e-9)
+
+
+def test_q8_tree_wrapper_matches_host_codec_path():
+    """kernels.ops.masked_adam_q8_tree stores bit-identical quantized
+    moments to the Q8Adam host (dequant -> Adam -> requant) path."""
+    rng = np.random.default_rng(7)
+    params = {"a": jnp.asarray(rng.normal(size=(7, 33)), jnp.float32),
+              "b": jnp.asarray(rng.normal(size=(300,)), jnp.float32)}
+    grads = jax.tree.map(lambda x: x * 0.1, params)
+    masks = jax.tree.map(lambda x: jnp.ones(x.shape, jnp.bool_), params)
+    q8 = Q8Adam(Adam(lr=1e-3))
+    st0 = q8.init(params)
+    p_host, st_host = q8.update(grads, st0, params)
+    p_k, mq2, ms2, nq2, ns2 = kernel_ops.masked_adam_q8_tree(
+        params, grads, st0.mu_q, st0.mu_scale, st0.nu_q, st0.nu_scale,
+        masks, lr=1e-3, count=st0.count, interpret=True)
+    for a, b in zip(jax.tree.leaves(p_host), jax.tree.leaves(p_k)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-7)
+    # identical codec both paths; a 1-ulp f32 difference between the
+    # interpret-mode kernel and jitted host ops can move a block max
+    # (hence its scale) by one ulp and a stored int8 by one quantum
+    for host, kern in [(st_host.mu_q, mq2), (st_host.nu_q, nq2)]:
+        for a, b in zip(jax.tree.leaves(host), jax.tree.leaves(kern)):
+            assert np.max(np.abs(np.asarray(a, np.int32)
+                                 - np.asarray(b, np.int32))) <= 1
+    for host, kern in [(st_host.mu_scale, ms2), (st_host.nu_scale, ns2)]:
+        for a, b in zip(jax.tree.leaves(host), jax.tree.leaves(kern)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4)
+
+
+# --------------------------------------------------------------------- #
+# Q8Adam state surface
+# --------------------------------------------------------------------- #
+
+
+def test_q8adam_state_bytes_under_30_percent():
+    params = {"w": jnp.zeros((64, 256), jnp.float32),
+              "b": jnp.zeros((100,), jnp.float32)}
+    fp = Adam(lr=1e-3)
+    q8 = Q8Adam(fp)
+    fp_bytes = fp.state_bytes(fp.init(params))
+    q8_bytes = q8.state_bytes(q8.init(params))
+    assert q8_bytes <= 0.30 * fp_bytes
+
+
+def test_q8adam_roundtrip_adam_state_views():
+    rng = np.random.default_rng(0)
+    like = {"w": jnp.asarray(rng.normal(size=(4, 300)), jnp.float32)}
+    st0 = AdamState(jnp.asarray(3, jnp.int32),
+                    {"w": jnp.asarray(rng.normal(size=(4, 300)),
+                                      jnp.float32)},
+                    {"w": jnp.asarray(np.abs(rng.normal(size=(4, 300))),
+                                      jnp.float32)})
+    back = to_adam_state(from_adam_state(st0), like)
+    assert int(back.count) == 3
+    for orig, b in zip(jax.tree.leaves((st0.mu, st0.nu)),
+                       jax.tree.leaves((back.mu, back.nu))):
+        orig = np.asarray(orig)
+        bound = np.abs(orig).max() / 254.0 + 1e-12
+        assert np.max(np.abs(orig - np.asarray(b))) <= bound
+
+
+# --------------------------------------------------------------------- #
+# quantized cores: memory + loss acceptance
+# --------------------------------------------------------------------- #
+
+
+def _batch(cfg, step=0):
+    toks = jnp.arange(32)[None, :].repeat(2, 0) % cfg.vocab_size
+    return {"tokens": (toks + step) % cfg.vocab_size}
+
+
+def _train3(name, cfg, params):
+    from repro import trainers
+    core = trainers.make(name, cfg, adam=Adam(lr=3e-3), sparsity=0.9,
+                         patience=1000, policy="static", k_frac=0.5)
+    state = core.init(K(0), params)
+    loss = None
+    for i in range(3):
+        state, m = core.step(state, _batch(cfg, i))
+        loss = m["loss"]
+    return loss, core.memory_report(state)
+
+
+@pytest.mark.parametrize("name", ["blockllm", "adam"])
+def test_q8_core_memory_and_loss_vs_fp32(name, tiny_cfg, tiny_params):
+    """ISSUE acceptance: opt bytes <= 30% of fp32, 3-step loss within
+    5% of the fp32 run, for blockllm and adam."""
+    loss_fp, rep_fp = _train3(name, tiny_cfg, tiny_params)
+    loss_q8, rep_q8 = _train3(name + "+q8", tiny_cfg, tiny_params)
+    assert rep_q8["opt_state_bytes"] <= 0.30 * rep_fp["opt_state_bytes"]
+    assert abs(loss_q8 - loss_fp) <= 0.05 * abs(loss_fp)
+
+
+def test_q8_fused_kernel_step_matches_unfused(tiny_cfg, tiny_params):
+    """BlockLLM with fused_update='interpret' and quantize_state walks
+    the same trajectory as the unfused Q8 path (same codec both ways)."""
+    from repro.core.blockllm import BlockLLMConfig
+    from repro.core.selection import SelectorConfig
+    from repro.trainers.blockllm import BlockLLMCore
+
+    def run(fused):
+        core = BlockLLMCore(
+            tiny_cfg,
+            bcfg=BlockLLMConfig(
+                selector=SelectorConfig(sparsity=0.9, policy="static",
+                                        static_k_frac=0.5, patience=1000),
+                fused_update="interpret" if fused else "off"),
+            adam=Adam(lr=3e-3), quantize_state=True)
+        state = core.init(K(0), tiny_params)
+        losses = []
+        for i in range(3):
+            state, m = core.step(state, _batch(tiny_cfg, i))
+            losses.append(m["loss"])
+        return losses, state
+
+    losses_f, state_f = run(True)
+    losses_u, state_u = run(False)
+    np.testing.assert_allclose(losses_f, losses_u, rtol=2e-5)
+    for a, b in zip(jax.tree.leaves(state_f.arrays["opt"]),
+                    jax.tree.leaves(state_u.arrays["opt"])):
+        a, b = np.asarray(a), np.asarray(b)
+        if a.dtype == np.int8:
+            # identical codec both paths; jit-vs-interpret f32 rounding
+            # differences compound to a few quanta over 3 steps
+            assert np.max(np.abs(a.astype(np.int32)
+                                 - b.astype(np.int32))) <= 4
+
+
+def test_q8_reselect_carries_moments_through_fp32_view(tiny_cfg,
+                                                       tiny_params):
+    """carry_surviving with quantize_state: surviving rows' moments
+    survive reselection up to one requant step (codec blocks don't
+    align with selection rows, so the carry runs dequant->carry->requant)."""
+    from repro.core.blockllm import BlockLLMConfig
+    from repro.core.selection import SelectorConfig
+    from repro.optim.q8adam import to_adam_state
+    from repro.trainers.blockllm import BlockLLMCore
+
+    core = BlockLLMCore(
+        tiny_cfg,
+        bcfg=BlockLLMConfig(
+            selector=SelectorConfig(sparsity=0.9, policy="static",
+                                    static_k_frac=1.0, patience=1000),
+            carry_surviving=True),
+        adam=Adam(lr=3e-3), quantize_state=True)
+    state = core.init(K(0), tiny_params)
+    for i in range(2):
+        state, _ = core.step(state, _batch(tiny_cfg, i))
+    old = to_adam_state(state.arrays["opt"], state.arrays["sel"])
+    state2 = core.reselect(state)
+    new = to_adam_state(state2.arrays["opt"], state2.arrays["sel"])
+    # k_frac=1.0 => every row re-selected in the same order: carried
+    # moments equal the old ones up to one extra quantize round trip
+    carried = False
+    for sid, new_list in state2.meta["stack_idx"].items():
+        if list(new_list) != list(state.meta["stack_idx"][sid]):
+            continue
+        carried = True
+        for o, n in zip(jax.tree.leaves(old.mu["stacks"][sid]),
+                        jax.tree.leaves(new.mu["stacks"][sid])):
+            o = np.asarray(o)
+            bound = np.abs(o).max() / 120.0 + 1e-9   # ~one quantum
+            assert np.max(np.abs(o - np.asarray(n))) <= bound
+    assert carried, "static full re-selection kept no surviving stacks"
+
+
+# --------------------------------------------------------------------- #
+# quantized SparseDelta payloads
+# --------------------------------------------------------------------- #
+
+
+def _delta_fixture():
+    from repro.adapters import extract_delta
+    k = K(0)
+    base = {"w": jax.random.normal(k, (32, 64, 32)),
+            "norm": jax.random.normal(K(1), (16,))}
+    tuned = {"w": base["w"].at[3].add(0.1).at[7].add(-0.2),
+             "norm": base["norm"] + 1.0}
+    return base, tuned, extract_delta(base, tuned)
+
+
+def test_quantize_delta_shrinks_payload_and_applies():
+    from repro.adapters import apply_delta, quantize_delta, revert_delta
+    base, tuned, d = _delta_fixture()
+    qd = quantize_delta(d)
+    assert qd.quantized and qd.meta["quantized"]
+    assert qd.nbytes < 0.35 * d.nbytes  # large rows dominate
+    assert qd.num_rows() == d.num_rows()
+
+    applied, disp = apply_delta(base, qd)
+    # applied values approximate the tuned ones (codec bound: the edit
+    # rows' blockmax/254), untouched rows are untouched
+    for name in base:
+        a, t = np.asarray(applied[name]), np.asarray(tuned[name])
+        assert np.max(np.abs(a - t)) <= np.abs(t).max() / 200.0
+    # revert is BIT-exact even for a quantized apply (displaced rows
+    # hold the exact resident values)
+    back = revert_delta(applied, disp)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(base)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_quantize_delta_keeps_tiny_entries_fp():
+    """256-block padding can inflate tiny edits — those stay fp."""
+    from repro.adapters import quantize_delta
+    base, tuned, d = _delta_fixture()
+    qd = quantize_delta(d)
+    assert not qd.entries["norm"].quantized    # 16 floats < 1 block
+    assert qd.entries["w"].quantized
+    for name in qd.entries:
+        assert qd.entries[name].nbytes <= d.entries[name].nbytes
+
+
+def test_quantized_delta_registry_roundtrip(tmp_path):
+    from repro.adapters import (AdapterRegistry, apply_delta,
+                                quantize_delta)
+    base, tuned, d = _delta_fixture()
+    qd = quantize_delta(d)
+    reg = AdapterRegistry(str(tmp_path))
+    reg.put("q8", qd)
+    loaded = reg.get("q8")
+    assert loaded.quantized
+    a1, _ = apply_delta(base, qd)
+    a2, _ = apply_delta(base, loaded)
+    for x, y in zip(jax.tree.leaves(a1), jax.tree.leaves(a2)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_train_loop_quantized_export(tmp_path, tiny_cfg):
+    """TrainLoopConfig.quantize_deltas publishes int8 payloads through
+    the generic export hook."""
+    from repro import trainers
+    from repro.adapters import AdapterRegistry
+    from repro.models import model
+    from repro.runtime.train_loop import TrainLoopConfig, run
+    from repro.trainers.api import TrainerHandle
+
+    core = trainers.make("blockllm", tiny_cfg, adam=Adam(lr=3e-3),
+                         sparsity=0.9, patience=1000, policy="static",
+                         k_frac=0.5)
+    h = TrainerHandle(core, core.init(K(0),
+                                      model.init_params(K(0), tiny_cfg)))
+    run(h, lambda s: _batch(tiny_cfg, s),
+        TrainLoopConfig(total_steps=2, ckpt_every=2,
+                        ckpt_dir=str(tmp_path / "ckpt"), log_every=0,
+                        adapter_dir=str(tmp_path / "adapters"),
+                        adapter_id="tq8", quantize_deltas=True))
+    loaded = AdapterRegistry(str(tmp_path / "adapters")).get("tq8")
+    assert loaded.meta.get("quantized") is True
+    assert any(e.quantized for e in loaded.entries.values())

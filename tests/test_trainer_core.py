@@ -15,7 +15,11 @@ from repro.trainers.api import TrainerHandle, check_state
 
 K = jax.random.PRNGKey
 
-NAMES = ["blockllm", "adam", "galore", "lora", "badam"]
+# +q8 variants are full conformance citizens: same state_spec split,
+# bit-identical crash-resume through the generic checkpoint path (int8
+# moment leaves + f32 scales ride the ordinary npz payload)
+NAMES = ["blockllm", "adam", "galore", "lora", "badam",
+         "blockllm+q8", "adam+q8", "badam+q8"]
 
 MEMORY_KEYS = {"params_bytes", "grads_bytes", "opt_state_bytes",
                "mask_bytes", "probe_bytes", "total_train_state"}

@@ -1,0 +1,139 @@
+#!/usr/bin/env python
+"""CI memory-regression gate: memory_report vs committed baselines.
+
+The paper's contribution IS a memory number — this gate keeps it from
+silently regressing.  For every registered trainer core (including the
+Q8State ``+q8`` variants) it inits the core on one fixed small arch,
+takes ``memory_report``, and compares every byte-count against
+``benchmarks/memory_baselines.json``:
+
+- any value growing by more than ``--tolerance`` (default 2%) FAILS;
+- a shrink beyond tolerance also fails, with a message telling you to
+  re-baseline — improvements should be locked in, not drift back;
+- a core missing from the baselines fails (add it deliberately).
+
+Reports are pure functions of array shapes/dtypes (init is
+deterministic: fixed seed, fixed arch, static selection), so the gate is
+exact and fast — no training steps, no flakiness.
+
+Intentional re-baseline (e.g. a new state group, a smaller codec):
+
+    PYTHONPATH=src python tools/check_memory.py --update
+    git add benchmarks/memory_baselines.json   # review the diff!
+
+Usage:  PYTHONPATH=src python tools/check_memory.py [--update]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+BASELINES = Path(__file__).resolve().parent.parent / "benchmarks" \
+    / "memory_baselines.json"
+
+# fixed gate arch: big enough that selection/quantization effects show in
+# the byte counts, small enough to init in seconds on a CI runner
+GATE_ARCH = dict(name="memgate", family="dense", num_layers=8, d_model=64,
+                 num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=512,
+                 remat=False)
+# fixed hyperparameters — part of the baseline contract; changing them
+# requires a deliberate --update
+GATE_HYPER = dict(sparsity=0.9, patience=1000, policy="static",
+                  k_frac=0.25, rank=8, switch_every=100)
+
+
+def collect_reports() -> dict:
+    import jax
+    from repro import trainers
+    from repro.configs.base import ModelConfig
+    from repro.models import model
+
+    cfg = ModelConfig(**GATE_ARCH)
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    reports = {}
+    for name in trainers.names():
+        core = trainers.make(name, cfg, **GATE_HYPER)
+        state = core.init(jax.random.PRNGKey(0), params)
+        reports[name] = {k: int(v)
+                         for k, v in core.memory_report(state).items()}
+    return reports
+
+
+def compare(reports: dict, baselines: dict, tolerance: float) -> list:
+    problems = []
+    for name, rep in sorted(reports.items()):
+        base = baselines.get(name)
+        if base is None:
+            problems.append(f"{name}: no committed baseline — run "
+                            f"--update and commit the diff")
+            continue
+        for key, val in sorted(rep.items()):
+            ref = base.get(key)
+            if ref is None:
+                problems.append(f"{name}.{key}: new report key — "
+                                f"re-baseline with --update")
+                continue
+            if ref == 0:
+                if val != 0:
+                    problems.append(f"{name}.{key}: {val} bytes vs "
+                                    f"baseline 0")
+                continue
+            drift = (val - ref) / ref
+            if drift > tolerance:
+                problems.append(
+                    f"{name}.{key}: {val} bytes is {drift:+.1%} vs "
+                    f"baseline {ref} (> {tolerance:.0%} growth)")
+            elif drift < -tolerance:
+                problems.append(
+                    f"{name}.{key}: {val} bytes is {drift:+.1%} vs "
+                    f"baseline {ref} — improvement; lock it in with "
+                    f"--update")
+    for name in sorted(set(baselines) - set(reports)):
+        problems.append(f"{name}: baselined core is no longer registered "
+                        f"— remove it with --update")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the committed baselines from the "
+                         "current reports")
+    ap.add_argument("--tolerance", type=float, default=0.02,
+                    help="max allowed relative growth per value")
+    ap.add_argument("--baselines", default=str(BASELINES))
+    args = ap.parse_args(argv)
+
+    reports = collect_reports()
+    path = Path(args.baselines)
+    if args.update:
+        path.write_text(json.dumps(reports, indent=1, sort_keys=True)
+                        + "\n")
+        print(f"wrote {path} ({len(reports)} cores)")
+        return 0
+
+    if not path.exists():
+        print(f"FAIL: no baselines at {path}; run --update and commit")
+        return 1
+    baselines = json.loads(path.read_text())
+    problems = compare(reports, baselines, args.tolerance)
+    for name, rep in sorted(reports.items()):
+        print(f"{name:14s} opt={rep['opt_state_bytes']:>10d}  "
+              f"total={rep['total_train_state']:>10d}")
+    if problems:
+        print(f"\nFAIL: {len(problems)} memory regression(s):")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print(f"\nOK: {len(reports)} cores within {args.tolerance:.0%} of "
+          f"baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

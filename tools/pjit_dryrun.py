@@ -1,0 +1,59 @@
+#!/usr/bin/env python
+"""CI pjit dry-run smoke: lower + compile one distributed train step.
+
+Closes the ROADMAP "per-core lowerable coverage" follow-up: the full
+``launch/dryrun.py`` matrix exercises production archs/meshes with
+BlockLLM only, while every other core's distributed path (the generic
+``TrainerCore.lowerable`` default — galore, lora, and the Q8State
+variants) was never compiled anywhere.  This tool builds the pjit train
+setup for ONE registered optimizer on a tiny arch over an 8-device host
+mesh and compiles it — seconds per core on a CPU runner, so CI can
+afford a matrix leg per optimizer.
+
+Usage:  PYTHONPATH=src python tools/pjit_dryrun.py --optimizer galore
+"""
+import os
+
+# must precede any jax import: the host platform device count is locked
+# at first initialization (same contract as launch/dryrun.py)
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--optimizer", default="blockllm")
+    ap.add_argument("--mesh", default="4x2",
+                    help="data x model axis sizes, e.g. 4x2 or 8x1")
+    args = ap.parse_args(argv)
+
+    from repro.configs.base import ModelConfig
+    from repro.configs.shapes import ShapeConfig
+    from repro.launch import steps as steps_lib
+    from repro.launch.mesh import make_mesh_compat
+
+    cfg = ModelConfig(name="ci-dryrun", family="dense", num_layers=4,
+                      d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+                      vocab_size=256, remat=False, dtype="float32")
+    shape = ShapeConfig("ci", seq_len=32, global_batch=8, kind="train")
+    d, m = (int(x) for x in args.mesh.split("x"))
+    mesh = make_mesh_compat((d, m), ("data", "model"))
+
+    setup = steps_lib.build_train_setup(
+        cfg, shape, mesh, optimizer=args.optimizer, sparsity=0.8,
+        k_frac=0.5, attn_impl="full")
+    lowered = setup.lower()
+    compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    print(f"{args.optimizer}: compiled {setup.name} on {args.mesh} — "
+          f"args={ma.argument_size_in_bytes / 2**20:.1f}MiB "
+          f"temp={ma.temp_size_in_bytes / 2**20:.1f}MiB")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
