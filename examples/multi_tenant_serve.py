@@ -6,12 +6,18 @@ End-to-end BlockLLM serving story:
    loop's export hook publishes each run's row-sparse delta to an
    adapter registry,
 3. serve interleaved requests for {base, taskB, taskC} from ONE
-   resident model: the scheduler groups decode slots by adapter and
-   hot-swaps delta rows between micro-batches,
+   resident model: the adapter-aware scheduler groups decode slots by
+   adapter and hot-swaps delta rows between micro-batches,
 4. verify per-request outputs are IDENTICAL to offline single-tenant
-   serving (apply each delta to the base, run it alone).
+   serving (apply each delta to the base, run it alone),
+5. re-serve with the HBM-resident AdapterCache (device-to-device
+   flips) and with int8-quantized delta payloads — token streams must
+   stay bit-identical leg over leg (dequant-once promotion changes no
+   bits vs per-flip dequant).
 
-    PYTHONPATH=src python examples/multi_tenant_serve.py
+    PYTHONPATH=src python examples/multi_tenant_serve.py [--quick]
+
+(--quick is the CI serve-smoke configuration.)
 """
 import argparse
 import tempfile
@@ -19,7 +25,8 @@ import tempfile
 import jax
 import numpy as np
 
-from repro.adapters import AdapterRegistry, apply_delta
+from repro.adapters import (AdapterRegistry, InMemoryRegistry,
+                            apply_delta, quantize_delta)
 from repro.configs.base import ModelConfig
 from repro.core.blockllm import BlockLLMConfig, BlockLLMTrainer, \
     FullAdamTrainer
@@ -35,7 +42,14 @@ ap.add_argument("--pretrain-steps", type=int, default=20)
 ap.add_argument("--finetune-steps", type=int, default=15)
 ap.add_argument("--requests", type=int, default=9)
 ap.add_argument("--new-tokens", type=int, default=8)
+ap.add_argument("--quick", action="store_true",
+                help="CI smoke sizing (fewer steps/requests)")
 args = ap.parse_args()
+if args.quick:
+    args.pretrain_steps = min(args.pretrain_steps, 8)
+    args.finetune_steps = min(args.finetune_steps, 6)
+    args.requests = min(args.requests, 6)
+    args.new_tokens = min(args.new_tokens, 6)
 
 cfg = ModelConfig(name="mt-demo", family="dense", num_layers=8, d_model=32,
                   num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=128,
@@ -91,16 +105,26 @@ tenants = [None, "taskB", "taskC"]
 rng = np.random.default_rng(0)
 prompts = [rng.integers(0, cfg.vocab_size, 3 + i % 4)
            for i in range(args.requests)]
-reqs = [Request(rid=i, prompt=p, max_new_tokens=args.new_tokens,
-                adapter_id=tenants[i % len(tenants)])
-        for i, p in enumerate(prompts)]
 
-srv = DecodeServer(cfg, base, batch_slots=3, max_seq=96,
-                   registry=registry, steps_per_turn=4)
-for r in reqs:
-    srv.submit(r)
-srv.run_until_drained()
-assert all(r.done for r in reqs)
+
+def fresh_requests():
+    return [Request(rid=i, prompt=p, max_new_tokens=args.new_tokens,
+                    adapter_id=tenants[i % len(tenants)])
+            for i, p in enumerate(prompts)]
+
+
+def serve_leg(reg, **server_kw):
+    reqs = fresh_requests()
+    srv = DecodeServer(cfg, base, batch_slots=3, max_seq=96,
+                       registry=reg, steps_per_turn=4, **server_kw)
+    for r in reqs:
+        srv.submit(r)
+    srv.run_until_drained()
+    assert all(r.done for r in reqs)
+    return srv, reqs, {r.rid: tuple(r.out) for r in reqs}
+
+
+srv, reqs, outs = serve_leg(registry)
 s = srv.stats()
 print(f"\nserved {len(reqs)} requests across {len(tenants)} tenants: "
       f"{s['swaps']} hot swaps, {s['swap_bytes'] / 2 ** 20:.2f} MiB moved "
@@ -130,3 +154,24 @@ for tenant in tenants:
               f"{'== offline' if ok else f'!= offline {by_rid[r.rid]}'}")
 assert mismatches == 0, f"{mismatches} requests diverged from offline"
 print("\nall multi-tenant outputs identical to offline single-tenant runs")
+
+# --- 5. cached + q8 legs: same tokens, fewer host bytes --------------
+srv_c, _, outs_cached = serve_leg(registry, cache_bytes=32 * 2 ** 20)
+assert outs_cached == outs, "AdapterCache changed served tokens"
+c = srv_c.cache.stats()
+print(f"cached leg: identical tokens; hit rate {c['hit_rate']:.0%}, "
+      f"h2d {c['h2d_bytes'] / 2 ** 10:.1f} KiB vs "
+      f"d2d {c['d2d_bytes'] / 2 ** 10:.1f} KiB")
+
+q8_reg = InMemoryRegistry({aid: quantize_delta(registry.get(aid))
+                           for aid in registry.list_adapters()})
+_, _, outs_q8 = serve_leg(q8_reg)
+_, _, outs_q8_cached = serve_leg(q8_reg, cache_bytes=32 * 2 ** 20)
+assert outs_q8_cached == outs_q8, \
+    "q8 cached tokens diverged from q8 uncached (dequant-once broke)"
+q8_bytes = sum(q8_reg.get(a).nbytes for a in registry.list_adapters())
+fp_bytes = sum(registry.get(a).nbytes for a in registry.list_adapters())
+print(f"q8 leg: cached == uncached; payload {q8_bytes / 2 ** 10:.1f} KiB "
+      f"vs fp32 {fp_bytes / 2 ** 10:.1f} KiB "
+      f"({q8_bytes / fp_bytes:.1%})")
+print("\nmulti-tenant parity holds across uncached / cached / q8 legs")

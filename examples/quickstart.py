@@ -44,3 +44,12 @@ print(f"train state : {rep['total_train_state'] / 2**20:.2f} MiB "
       f"(grads+opt+masks, vs params {rep['params_bytes'] / 2**20:.2f} MiB)")
 print(f"re-selections: {state.meta['reselections']}, "
       f"recompiles: {core.recompiles} (static policy: stays at 2)")
+
+# 4. serving: a finetune exports as a row-sparse SparseDelta
+#    (TrainLoopConfig.adapter_dir) and `launch.serve --adapters <dir>`
+#    multiplexes many such tenants over ONE resident base model.
+#    `--cache-bytes` keeps hot deltas HBM-resident (device-to-device
+#    flips), `--slo-ms` sets per-request deadlines for the
+#    adapter-aware scheduler; see examples/multi_tenant_serve.py for
+#    the end-to-end proof.  Serving perf is CI-gated: re-baseline
+#    deliberately with `python tools/check_serving.py --update`.

@@ -20,6 +20,10 @@ Components
   tenants indefinitely.
 - ``registry``  — on-disk adapter store + in-memory LRU cache with
   ref-counting for concurrent serving.
+- ``device_cache`` — HBM-resident LRU of hot adapters' delta rows
+  (``AdapterCache``): tenant flips become device-to-device
+  scatter-swaps; the registry's host LRU is the second tier, disk the
+  third.  Q8 payloads dequantize once on promotion.
 
 On-disk delta format (``blockdelta.v1``)
 ----------------------------------------
@@ -48,11 +52,12 @@ from repro.adapters.delta import (DeltaEntry, SparseDelta, apply_delta,
                                   copy_tree, delta_from_trainer,
                                   extract_delta, fingerprint, load_delta,
                                   quantize_delta, revert_delta, save_delta)
+from repro.adapters.device_cache import AdapterCache
 from repro.adapters.registry import AdapterRegistry, InMemoryRegistry
 
 __all__ = [
-    "DeltaEntry", "SparseDelta", "apply_delta", "copy_tree",
-    "delta_from_trainer", "extract_delta", "fingerprint", "load_delta",
-    "quantize_delta", "revert_delta", "save_delta", "AdapterRegistry",
-    "InMemoryRegistry",
+    "AdapterCache", "DeltaEntry", "SparseDelta", "apply_delta",
+    "copy_tree", "delta_from_trainer", "extract_delta", "fingerprint",
+    "load_delta", "quantize_delta", "revert_delta", "save_delta",
+    "AdapterRegistry", "InMemoryRegistry",
 ]

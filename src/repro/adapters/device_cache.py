@@ -1,0 +1,198 @@
+"""AdapterCache: device-resident (HBM) LRU of hot adapters' delta rows.
+
+Three-tier adapter storage for multi-tenant serving:
+
+1. **HBM (this module)** — delta rows of hot adapters kept resident on
+   device inside a configurable byte budget.  A tenant flip whose delta
+   is cached is a pure device-to-device scatter-swap: zero host->device
+   transfer bytes.
+2. **Host RAM** — the registry's LRU (``adapters/registry.py``) of
+   deserialized host deltas.
+3. **Disk** — the atomic ``blockdelta.v1`` payload directories.
+
+Promotion (miss path) pays the host->device upload once: quantized (q8)
+payloads travel as int8 rows + f32 block scales and are **dequantized
+once on promotion** (``DeltaEntry.materialize_rows``, the shared
+``runtime/compression.py`` codec) — every later flip reuses the same
+device buffers, so the applied values are identical whether they came
+from a hit, a fresh promotion, or the uncached path (dequantization is
+deterministic).  Cached scheduling therefore produces bit-identical
+token streams to uncached scheduling.
+
+Capture (free-population path): when the serving loop reverts an
+adapter, the displaced rows of the revert ARE that adapter's exact
+resident row values, already on device.  ``put_back`` admits them
+without any transfer — after the first application of a tenant, its
+delta never crosses the host boundary again while it stays hot.
+
+Eviction is LRU over whole adapters and only ever drops *cache copies*:
+the displaced base rows that make revert bit-exact are owned by the
+serving loop for the currently-applied adapter (never by this cache),
+so eviction cannot break the bit-exact-revert invariant — a victim that
+comes back later is simply re-promoted from the host tier.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict
+
+import numpy as np
+
+from repro.adapters.delta import DeltaEntry, SparseDelta
+
+
+def _device_nbytes(delta: SparseDelta) -> int:
+    return delta.nbytes
+
+
+class AdapterCache:
+    """LRU of device-resident SparseDeltas under a byte budget.
+
+    ``registry`` is the host tier (anything ``get``-shaped:
+    ``AdapterRegistry`` or ``InMemoryRegistry``).  ``cache_bytes`` bounds
+    the summed device bytes of cached deltas; a single delta larger than
+    the whole budget is served but not retained (``bypasses``).
+    """
+
+    def __init__(self, registry, *, cache_bytes: int = 64 * 2 ** 20):
+        assert cache_bytes > 0, "use cache=None to disable caching"
+        self.registry = registry
+        self.cache_bytes = int(cache_bytes)
+        self._slots: "OrderedDict[str, SparseDelta]" = OrderedDict()
+        self._nbytes: Dict[str, int] = {}
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.captures = 0          # put_back admissions (no h2d paid)
+        self.bypasses = 0          # deltas too large to retain
+        self.stale_drops = 0       # re-published adapters invalidated
+        self.h2d_bytes = 0         # host->device promotion traffic
+        self.d2d_bytes = 0         # flip bytes served from HBM
+
+    def _registry_version(self, adapter_id: str) -> int:
+        ver = getattr(self.registry, "version", None)
+        return 0 if ver is None else ver(adapter_id)
+
+    # ------------------------------------------------------------------ #
+    # promotion
+    # ------------------------------------------------------------------ #
+
+    @staticmethod
+    def _promote(host: SparseDelta) -> SparseDelta:
+        """Device-resident copy of a host delta: rows uploaded (and q8
+        payloads dequantized exactly once); row indices stay host-side
+        numpy — they are tiny and ``apply_delta`` converts per swap."""
+        entries: Dict[str, DeltaEntry] = {}
+        for name, e in host.entries.items():
+            rows = e.materialize_rows()            # device, dequantized
+            idx = None if e.idx is None else np.asarray(e.idx)
+            entries[name] = DeltaEntry(idx=idx, rows=rows)
+        meta = dict(host.meta)
+        meta["hbm_resident"] = True
+        return SparseDelta(entries, meta)
+
+    def _admit(self, adapter_id: str, delta: SparseDelta) -> bool:
+        nb = _device_nbytes(delta)
+        if nb > self.cache_bytes:
+            self.bypasses += 1
+            return False
+        self._slots[adapter_id] = delta
+        self._nbytes[adapter_id] = nb
+        self._slots.move_to_end(adapter_id)
+        while self.resident_bytes() > self.cache_bytes:
+            victim, _ = next(iter(self._slots.items()))
+            del self._slots[victim]
+            del self._nbytes[victim]
+            self.evictions += 1
+        return True
+
+    # ------------------------------------------------------------------ #
+    # serving API
+    # ------------------------------------------------------------------ #
+
+    def get(self, adapter_id: str) -> SparseDelta:
+        """Device delta for ``adapter_id`` — from HBM on a hit, promoted
+        through the host tier (registry LRU -> disk) on a miss.  A hit
+        whose registry publish counter moved (the adapter was re-``put``
+        since promotion) is dropped and re-promoted — the HBM tier
+        invalidates on re-publish just like the registry's host LRU."""
+        if adapter_id in self._slots:
+            d = self._slots[adapter_id]
+            if (d.meta.get("registry_version", 0)
+                    == self._registry_version(adapter_id)):
+                self.hits += 1
+                self._slots.move_to_end(adapter_id)
+                self.d2d_bytes += self._nbytes[adapter_id]
+                return d
+            self.drop(adapter_id)
+            self.stale_drops += 1
+        self.misses += 1
+        version = self._registry_version(adapter_id)
+        host = self.registry.get(adapter_id)
+        self.h2d_bytes += host.nbytes      # q8 payloads upload quantized
+        dev = self._promote(host)
+        dev.meta["registry_version"] = version
+        self._admit(adapter_id, dev)
+        return dev
+
+    def put_back(self, adapter_id: str, displaced_of_revert: SparseDelta):
+        """Capture an adapter's rows as they leave the live model.
+
+        ``displaced_of_revert`` is the displaced-rows delta returned by
+        re-applying the base rows (a revert): its row values are exactly
+        the adapter's resident device values, so admitting them costs no
+        host->device transfer.  For an already-cached adapter this is
+        just an LRU touch (the values are identical by determinism of
+        promotion).  A capture whose rows predate a re-``put`` of the
+        adapter (version moved while it was applied) is skipped — the
+        next ``get`` must promote the fresh payload."""
+        if adapter_id in self._slots:
+            self._slots.move_to_end(adapter_id)
+            return
+        # meta chains through apply->revert, so the promotion's version
+        # stamp (if any) describes these captured rows
+        version = displaced_of_revert.meta.get("registry_version", 0)
+        if version != self._registry_version(adapter_id):
+            return
+        entries = {
+            name: DeltaEntry(idx=None if e.idx is None
+                             else np.asarray(e.idx), rows=e.rows)
+            for name, e in displaced_of_revert.entries.items()}
+        meta = {"adapter_id": adapter_id, "hbm_resident": True,
+                "captured": True, "registry_version": version}
+        if self._admit(adapter_id, SparseDelta(entries, meta)):
+            self.captures += 1
+
+    # ------------------------------------------------------------------ #
+    # introspection
+    # ------------------------------------------------------------------ #
+
+    def __contains__(self, adapter_id: str) -> bool:
+        return adapter_id in self._slots
+
+    def cached_ids(self):
+        return list(self._slots)
+
+    def resident_bytes(self) -> int:
+        return sum(self._nbytes.values())
+
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    def drop(self, adapter_id: str):
+        """Explicitly release one adapter's device rows."""
+        if self._slots.pop(adapter_id, None) is not None:
+            del self._nbytes[adapter_id]
+
+    def stats(self) -> Dict[str, float]:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "captures": self.captures,
+                "bypasses": self.bypasses,
+                "stale_drops": self.stale_drops,
+                "resident": len(self._slots),
+                "resident_bytes": self.resident_bytes(),
+                "cache_bytes": self.cache_bytes,
+                "h2d_bytes": self.h2d_bytes,
+                "d2d_bytes": self.d2d_bytes,
+                "hit_rate": self.hit_rate()}

@@ -40,6 +40,7 @@ class AdapterRegistry:
         self._lock = threading.RLock()
         self._cache: "OrderedDict[str, SparseDelta]" = OrderedDict()
         self._refs: Dict[str, int] = {}
+        self._versions: Dict[str, int] = {}
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -66,7 +67,17 @@ class AdapterRegistry:
                                    SparseDelta(delta.entries, meta))
         with self._lock:
             self._cache.pop(adapter_id, None)  # invalidate stale copy
+            self._versions[adapter_id] = \
+                self._versions.get(adapter_id, 0) + 1
         return out
+
+    def version(self, adapter_id: str) -> int:
+        """Monotonic in-process publish counter — bumped by every
+        ``put``.  Device caches (``AdapterCache``) compare it to drop
+        HBM copies of re-published adapters, the same way ``put``
+        invalidates this registry's own host LRU."""
+        with self._lock:
+            return self._versions.get(adapter_id, 0)
 
     def exists(self, adapter_id: str) -> bool:
         return (self.path(adapter_id) / "DONE").exists()
@@ -158,9 +169,14 @@ class InMemoryRegistry:
     def __init__(self, deltas: Optional[Dict[str, SparseDelta]] = None):
         self._deltas = dict(deltas or {})
         self._refs: Dict[str, int] = {}
+        self._versions: Dict[str, int] = {}
 
     def put(self, adapter_id: str, d: SparseDelta):
         self._deltas[adapter_id] = d
+        self._versions[adapter_id] = self._versions.get(adapter_id, 0) + 1
+
+    def version(self, adapter_id: str) -> int:
+        return self._versions.get(adapter_id, 0)
 
     def exists(self, adapter_id: str) -> bool:
         return adapter_id in self._deltas

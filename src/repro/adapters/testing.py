@@ -1,0 +1,37 @@
+"""Shared test/benchmark helper: synthesize a row-sparse finetune.
+
+Bumps ``rows`` of every per-layer parameter stack (and optionally one
+whole top-level leaf) — the exact shape of a BlockLLM finetune, without
+paying for a real train run.  Used by the adapter/serving tests and
+``benchmarks/bench_serve_sched.py``; keeping ONE copy means a change to
+the stacked-param layout cannot silently desynchronize what they
+perturb.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def perturb_rows(params, *, rows=(1, 3), scale=0.5, seed=0, leaf=None):
+    """Return a tuned copy of ``params`` with ``rows`` of every layer
+    stack perturbed by gaussian noise of ``scale`` (deterministic in
+    ``seed``); ``leaf`` names an optional whole top-level leaf to shift
+    (exercises whole-leaf delta entries)."""
+    rng = np.random.RandomState(seed)
+    out = dict(jax.tree.map(lambda a: a, params))
+    stages = []
+    for stage in params["stages"]:
+        st = {}
+        for pos, sub in stage.items():
+            st[pos] = jax.tree.map(
+                lambda a: a.at[np.asarray(rows)].add(
+                    scale * jnp.asarray(rng.randn(len(rows),
+                                                  *a.shape[1:]),
+                                        a.dtype)), sub)
+        stages.append(st)
+    out["stages"] = stages
+    if leaf is not None:
+        out[leaf] = jax.tree.map(lambda a: a + scale, out[leaf])
+    return out

@@ -5,9 +5,20 @@
 Multi-tenant: point ``--adapters`` at a BlockDelta registry directory
 (see repro.adapters) and requests are spread across the base model and
 every stored adapter — one resident base, deltas hot-swapped between
-decode micro-batches:
+decode micro-batches.  The scheduler is adapter-aware by default: free
+slots are filled with the resident adapter's queued requests before
+rotating, turn lengths scale per adapter with queue depth and
+``--slo-ms`` deadlines, and an aging bound prevents starvation
+(``--round-robin`` restores the PR-1 rotation for A/B comparison):
 
     PYTHONPATH=src python -m repro.launch.serve --adapters /path/to/reg
+
+``--cache-bytes`` keeps hot adapters' delta rows resident in HBM
+(``repro.adapters.AdapterCache``): tenant flips whose delta is cached
+are device-to-device scatter-swaps with zero host->device transfer.
+Serving-side regressions are gated in CI by ``tools/check_serving.py``
+against ``benchmarks/serve_baselines.json`` (re-baseline deliberately
+with ``--update``).
 """
 from __future__ import annotations
 
@@ -30,7 +41,23 @@ def main(argv=None):
                     help="comma-separated adapter ids to serve "
                          "(default: all in the registry)")
     ap.add_argument("--steps-per-turn", type=int, default=8,
-                    help="decode steps per adapter group before rotating")
+                    help="base decode steps per adapter group before "
+                         "rotating (per-adapter budgets scale from "
+                         "this)")
+    ap.add_argument("--cache-bytes", type=int, default=0,
+                    help="HBM byte budget for the AdapterCache "
+                         "(delta rows kept device-resident; 0 = "
+                         "uncached, every flip re-uploads host rows)")
+    ap.add_argument("--slo-ms", type=float, default=0,
+                    help="per-request deadline budget (0 = none); "
+                         "groups whose slack runs low preempt the "
+                         "rotation order")
+    ap.add_argument("--aging-steps", type=int, default=0,
+                    help="anti-starvation bound in decode steps "
+                         "(0 = 3x steps-per-turn)")
+    ap.add_argument("--round-robin", action="store_true",
+                    help="disable adapter-aware admission (PR-1 "
+                         "rotation baseline)")
     args = ap.parse_args(argv)
 
     import jax
@@ -61,12 +88,16 @@ def main(argv=None):
 
     srv = DecodeServer(cfg, params, batch_slots=args.slots,
                        max_seq=args.max_seq, registry=registry,
-                       steps_per_turn=args.steps_per_turn)
+                       steps_per_turn=args.steps_per_turn,
+                       adapter_aware=not args.round_robin,
+                       aging_steps=args.aging_steps or None,
+                       cache_bytes=args.cache_bytes)
     rng = np.random.default_rng(args.seed)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size, 4 + i % 4),
                     max_new_tokens=args.new_tokens,
-                    adapter_id=tenants[i % len(tenants)])
+                    adapter_id=tenants[i % len(tenants)],
+                    slo_ms=args.slo_ms or None)
             for i in range(args.requests)]
     for r in reqs:
         srv.submit(r)
@@ -79,9 +110,18 @@ def main(argv=None):
           f"({tok / dt:.1f} tok/s, {srv.steps} decode steps)")
     if registry is not None:
         s = srv.stats()
-        print(f"adapter swaps: {s['swaps']}, "
+        print(f"adapter swaps: {s['swaps']} "
+              f"({s['swap_rate']:.3f}/step), "
               f"{s['swap_bytes'] / 2 ** 20:.2f} MiB moved; "
               f"registry: {registry.stats()}")
+        if srv.cache is not None:
+            c = srv.cache.stats()
+            print(f"adapter cache: {c['resident']} resident "
+                  f"({c['resident_bytes'] / 2 ** 20:.2f} / "
+                  f"{c['cache_bytes'] / 2 ** 20:.2f} MiB), "
+                  f"hit rate {c['hit_rate']:.0%}, "
+                  f"h2d {c['h2d_bytes'] / 2 ** 20:.2f} MiB vs "
+                  f"d2d {c['d2d_bytes'] / 2 ** 20:.2f} MiB")
     for r in reqs[:3]:
         tag = f" [{r.adapter_id or 'base'}]"
         print(f"  req {r.rid}{tag}: {list(r.prompt)} -> {r.out}")

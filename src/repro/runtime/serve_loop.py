@@ -14,18 +14,45 @@ scheme of production LLM servers reduced to its JAX essentials:
 Multi-tenant (BlockDelta) serving: requests may carry an ``adapter_id``
 resolved against an adapter registry (``repro.adapters``).  One base
 model stays resident; the scheduler groups slots by adapter and runs
-each group for a micro-batch of ``steps_per_turn`` decode steps, hot-
-swapping the delta rows between turns (row scatter-swap — O(delta)
-bytes, not O(params)).  Because inactive slots are masked out of both
-the cache blend and token emission, a slot only ever decodes under its
-own adapter's weights: per-request outputs are identical to a single-
-tenant server running that adapter alone.
+each group for a micro-batch of decode steps, hot-swapping the delta
+rows between turns (row scatter-swap — O(delta) bytes, not O(params)).
+Because inactive slots are masked out of both the cache blend and token
+emission, a slot only ever decodes under its own adapter's weights:
+per-request outputs are identical to a single-tenant server running
+that adapter alone — regardless of scheduling policy or caching tier.
+
+**Adapter-aware scheduling** (default).  Rotating round-robin pays a
+swap pair at every turn boundary even when the resident adapter still
+has queued work.  The aware scheduler instead:
+
+- prefers filling free slots with queued requests of the *resident*
+  adapter (zero-swap turn renewal) before rotating;
+- sizes each turn per adapter — ``steps_per_turn`` scaled by the
+  group's share of pending requests (deep queues amortize their swap
+  over a longer micro-batch), clamped to ``[1, 4*steps_per_turn]`` and
+  truncated when another group's SLO deadline would expire inside it;
+- honors per-request deadlines: ``Request.slo_ms`` (converted to decode
+  steps via ``ms_per_step``) pulls a group to the front of rotation
+  when its slack runs low;
+- bounds starvation with an aging rule: any runnable group that has
+  waited ``aging_steps`` decode steps preempts residency at the next
+  turn boundary, so the worst-case wait is
+  ``aging_steps + 4*steps_per_turn`` regardless of skew.
+
+**AdapterCache** (``adapters/device_cache.py``): pass ``cache_bytes >
+0`` and hot adapters' delta rows stay resident in HBM — a tenant flip
+whose delta is cached is a device-to-device scatter-swap with zero
+host->device transfer (the registry's host LRU is the second tier,
+disk the third).  Reverted adapters are captured into the cache from
+the revert's displaced rows, so a tenant's delta crosses the host
+boundary at most once while it stays hot.
 """
 from __future__ import annotations
 
-import dataclasses
+import functools
+import math
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -42,15 +69,41 @@ class Request:
     prompt: np.ndarray          # [P] int32
     max_new_tokens: int = 16
     adapter_id: Optional[str] = BASE   # None => base model
+    slo_ms: Optional[float] = None     # per-request deadline budget
     out: List[int] = field(default_factory=list)
     done: bool = False
+    submit_step: int = -1       # decode-step clock at submit()
+    finish_step: int = -1       # decode-step clock at completion
+
+
+@functools.lru_cache(maxsize=None)
+def _decode_fn(cfg, attn_impl):
+    """Shared jitted decode step per (cfg, attn_impl) — every server on
+    the same architecture reuses one compilation (``ModelConfig`` is
+    frozen/hashable)."""
+
+    def _decode(params, cache, token, pos_vec, active_mask):
+        logits, new_cache = model_lib.decode_step(
+            params, cfg, cache, token, pos_vec, attn_impl=attn_impl)
+
+        def blend(n, o):
+            m = active_mask.reshape((1, -1) + (1,) * (n.ndim - 2)) \
+                if n.ndim >= 2 else active_mask
+            return jnp.where(m, n, o)
+
+        return logits, jax.tree.map(blend, new_cache, cache)
+
+    return jax.jit(_decode, donate_argnums=(1,))
 
 
 class DecodeServer:
     def __init__(self, cfg, params, *, batch_slots: int = 4,
                  max_seq: int = 256, attn_impl: str = "full",
                  registry=None, steps_per_turn: int = 8,
-                 swap_mode: str = "auto"):
+                 swap_mode: str = "auto", adapter_aware: bool = True,
+                 aging_steps: Optional[int] = None,
+                 ms_per_step: float = 1.0, cache_bytes: int = 0,
+                 cache=None):
         self.cfg = cfg
         if registry is not None:
             # the server owns its resident weights: hot swaps donate the
@@ -63,10 +116,20 @@ class DecodeServer:
         self.registry = registry
         self.steps_per_turn = max(1, steps_per_turn)
         self.swap_mode = swap_mode
+        self.adapter_aware = adapter_aware
+        self.aging_steps = (3 * self.steps_per_turn if aging_steps is None
+                            else max(1, aging_steps))
+        self.ms_per_step = ms_per_step
+        self.cache = cache
+        if self.cache is None and cache_bytes > 0:
+            if registry is None:
+                raise ValueError("cache_bytes needs an adapter registry")
+            from repro.adapters.device_cache import AdapterCache
+            self.cache = AdapterCache(registry, cache_bytes=cache_bytes)
         self.queue: List[Request] = []
         self.active: List[Optional[Request]] = [None] * batch_slots
         self.pos = np.zeros(batch_slots, np.int32)  # next write index
-        self.cache = model_lib.init_cache(cfg, batch_slots, max_seq)
+        self.cache_state = model_lib.init_cache(cfg, batch_slots, max_seq)
         self.tokens = np.zeros((batch_slots, 1), np.int32)
         self.steps = 0
         # adapter swap state
@@ -74,21 +137,10 @@ class DecodeServer:
         self._displaced = None          # SparseDelta restoring the base
         self._turn_group: Optional[str] = BASE
         self._turn_left = 0
+        self._last_served: Dict[Optional[str], int] = {}
         self.swaps = 0
         self.swap_bytes = 0
-
-        def _decode(params, cache, token, pos_vec, active_mask):
-            logits, new_cache = model_lib.decode_step(
-                params, cfg, cache, token, pos_vec, attn_impl=attn_impl)
-
-            def blend(n, o):
-                m = active_mask.reshape((1, -1) + (1,) * (n.ndim - 2)) \
-                    if n.ndim >= 2 else active_mask
-                return jnp.where(m, n, o)
-
-            return logits, jax.tree.map(blend, new_cache, cache)
-
-        self._decode = jax.jit(_decode, donate_argnums=(1,))
+        self._decode = _decode_fn(cfg, attn_impl)
 
     def submit(self, req: Request):
         if req.adapter_id is not BASE:
@@ -101,6 +153,7 @@ class DecodeServer:
             if not self.registry.exists(req.adapter_id):
                 raise ValueError(f"request {req.rid}: adapter "
                                  f"{req.adapter_id!r} not in registry")
+        req.submit_step = self.steps
         self.queue.append(req)
 
     # ------------------------------------------------------------------ #
@@ -110,27 +163,39 @@ class DecodeServer:
     def _ensure_adapter(self, adapter_id: Optional[str]):
         """Make ``self.params`` carry ``adapter_id`` (lazy: no-op when it
         already does).  Swap = revert current delta rows, apply new ones;
-        both are exact row swaps so the base is never corrupted."""
+        both are exact row swaps so the base is never corrupted.  With an
+        AdapterCache the delta rows come from (and return to) HBM."""
         if adapter_id == self._applied:
             return
         from repro.adapters import delta as delta_lib
         if self._applied is not BASE:
             disp, self._displaced = self._displaced, None
-            self.params = delta_lib.revert_delta(
-                self.params, disp, mode=self.swap_mode, donate=True)
-            self.registry.release(self._applied)
+            # the revert's displaced rows are the leaving adapter's exact
+            # resident values — capture them into the device cache so the
+            # next flip to it pays no host->device transfer
+            self.params, back = delta_lib.apply_delta(
+                self.params, disp, mode=self.swap_mode, donate=True,
+                check_fingerprint=False)
+            if self.cache is not None:
+                self.cache.put_back(self._applied, back)
+            else:
+                self.registry.release(self._applied)
             # state committed per half-swap: if the apply below fails the
             # server is consistently back on the base model
             self._applied = BASE
             self.swap_bytes += disp.nbytes
             self.swaps += 1
         if adapter_id is not BASE:
-            d = self.registry.acquire(adapter_id)
+            if self.cache is not None:
+                d = self.cache.get(adapter_id)
+            else:
+                d = self.registry.acquire(adapter_id)
             try:
                 self.params, self._displaced = delta_lib.apply_delta(
                     self.params, d, mode=self.swap_mode, donate=True)
             except Exception:
-                self.registry.release(adapter_id)
+                if self.cache is None:
+                    self.registry.release(adapter_id)
                 raise
             self._applied = adapter_id
             self.swap_bytes += d.nbytes
@@ -162,30 +227,110 @@ class DecodeServer:
                 out.append(r.adapter_id)
         return out
 
+    def _group_reqs(self, g) -> List[Request]:
+        return [r for r in list(self.active) + self.queue
+                if r is not None and r.adapter_id == g]
+
     def _group_has_work(self, g) -> bool:
-        return any(r is not None and r.adapter_id == g
-                   for r in list(self.active) + self.queue)
+        return bool(self._group_reqs(g))
+
+    def _waited(self, g) -> int:
+        """Decode steps since ``g`` last made progress WHILE having
+        work: anchored at the later of its last served step and its
+        earliest pending submit, so a tenant that drained and returned
+        much later does not count the idle gap as starvation (and
+        trigger a spurious preemption for a request that just
+        arrived)."""
+        reqs = self._group_reqs(g)
+        if not reqs:
+            return 0
+        earliest = min(r.submit_step for r in reqs)
+        last = self._last_served.get(g)
+        return self.steps - (earliest if last is None
+                             else max(last, earliest))
+
+    def _min_slack(self, g) -> Optional[float]:
+        """Tightest remaining deadline (in decode steps) among ``g``'s
+        pending SLO-carrying requests; None when no request has one."""
+        slacks = [r.submit_step + r.slo_ms / self.ms_per_step - self.steps
+                  for r in self._group_reqs(g) if r.slo_ms is not None]
+        return min(slacks, default=None)
+
+    def _turn_budget(self, g, groups) -> int:
+        """Per-adapter SLO-aware turn length.  ``steps_per_turn`` scaled
+        up by the group's share of pending requests (deep queues
+        amortize their swap over more decode steps, capped at
+        ``4*steps_per_turn``), never below the base turn (a short visit
+        still pays a full swap pair), extended to drain a group that
+        fits entirely in the slots (finishing a small tenant in one
+        visit beats paying a second flip for its tail), and truncated
+        so no other runnable group's deadline expires inside the turn."""
+        if not self.adapter_aware:
+            return self.steps_per_turn
+        cap = 4 * self.steps_per_turn
+        depths = {h: max(1, len(self._group_reqs(h))) for h in groups}
+        mean = sum(depths.values()) / len(depths)
+        b = math.ceil(self.steps_per_turn * depths.get(g, 1) / mean)
+        b = max(self.steps_per_turn, min(b, cap))
+        reqs = self._group_reqs(g)
+        if 0 < len(reqs) <= self.slots:
+            need = max(r.max_new_tokens - len(r.out) for r in reqs)
+            b = max(b, min(need, cap))
+        for h in groups:
+            if h == g:
+                continue
+            slack = self._min_slack(h)
+            if slack is not None:
+                b = max(1, min(b, int(slack)))
+        return b
+
+    def _pick_next(self, groups) -> Optional[str]:
+        """Choose the group for a fresh turn.  Priority order: starved
+        groups past the aging bound, then tight SLO deadlines, then the
+        resident adapter (zero-swap), then round-robin."""
+        if not self.adapter_aware:
+            try:
+                i = groups.index(self._turn_group)
+                return groups[(i + 1) % len(groups)]
+            except ValueError:
+                return groups[0]
+        # 1. anti-starvation: longest wait past the aging bound wins
+        starved = [g for g in groups if self._waited(g) >= self.aging_steps]
+        if starved:
+            return min(starved,
+                       key=lambda g: (-self._waited(g), groups.index(g)))
+        # 2. deadline pressure: a group whose slack is about to run out
+        slacks = {g: self._min_slack(g) for g in groups}
+        urgent = [(slacks[g], i, g) for i, g in enumerate(groups)
+                  if slacks[g] is not None
+                  and slacks[g] <= self.steps_per_turn]
+        if urgent:
+            return min(urgent)[2]
+        # 3. stay resident: renewing the applied adapter costs no swap
+        if self._applied in groups:
+            return self._applied
+        # 4. round-robin fallback over the remaining groups
+        try:
+            i = groups.index(self._turn_group)
+            return groups[(i + 1) % len(groups)]
+        except ValueError:
+            return groups[0]
 
     def _schedule(self) -> Optional[str]:
         """Pick the adapter group for this decode micro-step: stay on the
-        current group for up to ``steps_per_turn`` steps, then rotate —
-        amortizing each hot swap over a micro-batch of decode steps."""
+        current group while its turn budget lasts, then hand the choice
+        to ``_pick_next``.  The budget is recomputed at EVERY turn
+        boundary — including renewals of the same group — so a group
+        that drained mid-turn can never leak a stale ``_turn_left`` into
+        the next group's turn."""
         groups = self._present_groups()
         if not groups:
             return self._turn_group
-        if (self._turn_left > 0 and self._turn_group in groups):
+        if self._turn_left > 0 and self._turn_group in groups:
             return self._turn_group
-        if self._turn_group in groups and len(groups) == 1:
-            self._turn_left = self.steps_per_turn
-            return self._turn_group
-        # rotate: next group after the current one in list order
-        try:
-            i = groups.index(self._turn_group)
-            nxt = groups[(i + 1) % len(groups)]
-        except ValueError:
-            nxt = groups[0]
+        nxt = self._pick_next(groups)
         self._turn_group = nxt
-        self._turn_left = self.steps_per_turn
+        self._turn_left = self._turn_budget(nxt, groups)
         return nxt
 
     def _mask(self, only: Optional[int] = None,
@@ -217,8 +362,8 @@ class DecodeServer:
                 toks[slot, 0] = int(tok)
                 pos = self.pos.copy()
                 pos[slot] = t
-                logits, self.cache = self._decode(
-                    self.params, self.cache, jnp.asarray(toks),
+                logits, self.cache_state = self._decode(
+                    self.params, self.cache_state, jnp.asarray(toks),
                     jnp.asarray(pos), jnp.asarray(self._mask(slot)))
             # final prime logits predict the first new token
             first = int(jnp.argmax(logits[slot]))
@@ -227,6 +372,7 @@ class DecodeServer:
             self.pos[slot] = len(req.prompt)
             if len(req.out) >= req.max_new_tokens:
                 req.done = True
+                req.finish_step = self.steps
                 self.active[slot] = None
 
     def step(self) -> int:
@@ -239,11 +385,14 @@ class DecodeServer:
         if not mask.any():
             self._turn_left = 0  # group drained during admission: rotate
             return 0
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(self.tokens),
+        logits, self.cache_state = self._decode(
+            self.params, self.cache_state, jnp.asarray(self.tokens),
             jnp.asarray(self.pos), jnp.asarray(mask))
         nxt = np.asarray(jnp.argmax(logits, -1))
         finished = 0
+        self.steps += 1
+        self._turn_left -= 1
+        self._last_served[group] = self.steps
         for slot, req in enumerate(self.active):
             if req is None or not mask[slot]:
                 continue
@@ -254,10 +403,9 @@ class DecodeServer:
             if (len(req.out) >= req.max_new_tokens
                     or self.pos[slot] >= self.max_seq - 1):
                 req.done = True
+                req.finish_step = self.steps
                 self.active[slot] = None
                 finished += 1
-        self.steps += 1
-        self._turn_left -= 1
         if not self._group_has_work(group):
             self._turn_left = 0
         return finished
@@ -271,6 +419,10 @@ class DecodeServer:
         return all_reqs
 
     def stats(self) -> Dict[str, float]:
-        return {"steps": self.steps, "swaps": self.swaps,
-                "swap_bytes": self.swap_bytes,
-                "applied": self._applied}
+        out = {"steps": self.steps, "swaps": self.swaps,
+               "swap_bytes": self.swap_bytes,
+               "swap_rate": self.swaps / self.steps if self.steps else 0.0,
+               "applied": self._applied}
+        if self.cache is not None:
+            out["cache"] = self.cache.stats()
+        return out

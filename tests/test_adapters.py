@@ -17,25 +17,10 @@ from repro.models import model
 K = jax.random.PRNGKey
 
 
-def _perturb(params, *, rows=(1, 3), leaf=None, scale=0.5, seed=0):
-    """Tuned tree: bump ``rows`` of every stack (and optionally one whole
-    leaf) — the shape of a BlockLLM finetune."""
-    rng = np.random.RandomState(seed)
-    out = dict(jax.tree.map(lambda a: a, params))
-    stages = []
-    for stage in params["stages"]:
-        st = {}
-        for pos, sub in stage.items():
-            st[pos] = jax.tree.map(
-                lambda a: a.at[np.asarray(rows)].add(
-                    scale * jnp.asarray(rng.randn(len(rows),
-                                                  *a.shape[1:]),
-                                        a.dtype)), sub)
-        stages.append(st)
-    out["stages"] = stages
-    if leaf is not None:
-        out[leaf] = jax.tree.map(lambda a: a + scale, out[leaf])
-    return out
+# tuned tree shaped like a BlockLLM finetune — one shared helper
+# (repro.adapters.testing) keeps tests and benchmarks perturbing the
+# same leaves
+from repro.adapters.testing import perturb_rows as _perturb
 
 
 # --------------------------------------------------------------------- #

@@ -1,0 +1,290 @@
+"""AdapterCache (HBM-resident delta tier) + adapter-aware scheduling:
+LRU byte-budget eviction, q8 dequant-once promotion, capture-on-revert,
+bit-identical cached vs uncached token streams, SLO turn budgets, the
+aging anti-starvation bound, and the drained-turn budget regression."""
+import jax
+import numpy as np
+import pytest
+
+from repro.adapters import (AdapterCache, DeltaEntry, InMemoryRegistry,
+                            SparseDelta, apply_delta, extract_delta,
+                            quantize_delta)
+from repro.runtime.serve_loop import DecodeServer, Request
+
+
+from repro.adapters.testing import perturb_rows as _tuned
+
+
+def _row_delta(i, rows=2, cols=64):
+    return SparseDelta(
+        {"w": DeltaEntry(idx=np.arange(rows, dtype=np.int32),
+                         rows=np.full((rows, cols), float(i),
+                                      np.float32))},
+        meta={"adapter_id": f"a{i}"})
+
+
+# --------------------------------------------------------------------- #
+# AdapterCache unit behavior
+# --------------------------------------------------------------------- #
+
+
+def test_cache_lru_eviction_respects_byte_budget():
+    deltas = {f"a{i}": _row_delta(i) for i in range(3)}
+    nb = deltas["a0"].nbytes
+    cache = AdapterCache(InMemoryRegistry(deltas), cache_bytes=2 * nb + 8)
+    cache.get("a0")
+    cache.get("a1")
+    assert cache.cached_ids() == ["a0", "a1"]
+    cache.get("a2")                      # over budget -> evict LRU (a0)
+    assert cache.cached_ids() == ["a1", "a2"]
+    assert cache.evictions == 1
+    assert cache.resident_bytes() <= cache.cache_bytes
+    cache.get("a1")                      # hit, LRU refresh
+    assert cache.hits == 1 and cache.misses == 3
+    cache.get("a0")                      # miss again -> evicts a2
+    assert cache.cached_ids() == ["a1", "a0"]
+    assert cache.stats()["h2d_bytes"] == 4 * nb  # every miss re-uploads
+
+
+def test_cache_bypasses_delta_larger_than_budget():
+    deltas = {"big": _row_delta(0, rows=16, cols=256)}
+    cache = AdapterCache(InMemoryRegistry(deltas), cache_bytes=64)
+    d = cache.get("big")
+    assert d.entries["w"].rows.shape == (16, 256)
+    assert cache.bypasses == 1 and cache.cached_ids() == []
+
+
+def test_cache_q8_promotion_dequantizes_once():
+    rng = np.random.RandomState(0)
+    fp = SparseDelta(
+        {"w": DeltaEntry(idx=np.asarray([1, 4], np.int32),
+                         rows=rng.randn(2, 300).astype(np.float32))},
+        meta={"adapter_id": "q"})
+    q8 = quantize_delta(fp)
+    assert q8.quantized
+    cache = AdapterCache(InMemoryRegistry({"q": q8}),
+                         cache_bytes=1 << 20)
+    dev = cache.get("q")
+    # promoted rows are the dequantized device values, not codec blocks
+    assert not dev.quantized
+    np.testing.assert_array_equal(
+        np.asarray(dev.entries["w"].rows),
+        np.asarray(q8.entries["w"].materialize_rows()))
+    # the upload paid the QUANTIZED payload bytes only
+    assert cache.stats()["h2d_bytes"] == q8.nbytes
+    assert q8.nbytes < fp.nbytes
+    dev2 = cache.get("q")                # hit: same buffers, no h2d
+    assert dev2.entries["w"].rows is dev.entries["w"].rows
+    assert cache.stats()["h2d_bytes"] == q8.nbytes
+
+
+def test_cache_invalidated_when_adapter_republished():
+    """Re-``put`` of an adapter bumps the registry's publish counter;
+    the HBM tier must drop its stale copy instead of serving the old
+    weights forever."""
+    reg = InMemoryRegistry({"a": _row_delta(1)})
+    cache = AdapterCache(reg, cache_bytes=1 << 20)
+    cache.get("a")
+    reg.put("a", _row_delta(7))
+    d = cache.get("a")                   # stale drop -> re-promotion
+    assert float(np.asarray(d.entries["w"].rows)[0, 0]) == 7.0
+    assert cache.stale_drops == 1 and cache.misses == 2
+    # a capture of the OLD rows (version moved while applied) is refused
+    stale = cache._promote(_row_delta(1))
+    stale.meta["registry_version"] = 0
+    cache.drop("a")
+    cache.put_back("a", stale)
+    assert "a" not in cache and cache.captures == 0
+
+
+def test_cache_put_back_captures_without_upload(tiny_params):
+    """Revert's displaced rows are the adapter's exact resident values:
+    put_back admits them with zero host->device traffic."""
+    tuned = _tuned(tiny_params, rows=(0, 2), scale=0.5, seed=1)
+    d = extract_delta(tiny_params, tuned, meta={"adapter_id": "A"})
+    applied, disp = apply_delta(tiny_params, d)
+    _, back = apply_delta(applied, disp, check_fingerprint=False)
+
+    cache = AdapterCache(InMemoryRegistry({"A": d}), cache_bytes=1 << 24)
+    cache.put_back("A", back)
+    assert cache.captures == 1 and cache.stats()["h2d_bytes"] == 0
+    dev = cache.get("A")                 # hit: no registry promotion
+    assert cache.hits == 1 and cache.misses == 0
+    for name, e in dev.entries.items():
+        np.testing.assert_array_equal(
+            np.asarray(e.rows),
+            np.asarray(d.entries[name].materialize_rows()))
+
+
+# --------------------------------------------------------------------- #
+# cached serving: parity + bit-exact revert
+# --------------------------------------------------------------------- #
+
+
+def _mixed_requests(cfg, tenancy, new_tokens=5, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size,
+                                               3 + i % 3),
+                    max_new_tokens=new_tokens, adapter_id=t)
+            for i, t in enumerate(tenancy)]
+
+
+def test_cached_serving_identical_and_revert_bit_exact(tiny_cfg,
+                                                       tiny_params):
+    tunedA = _tuned(tiny_params, rows=(0, 2), scale=0.8, seed=10)
+    tunedB = _tuned(tiny_params, rows=(1, 3), scale=-0.6, seed=20)
+    reg = InMemoryRegistry({
+        "A": extract_delta(tiny_params, tunedA, meta={"adapter_id": "A"}),
+        "B": extract_delta(tiny_params, tunedB, meta={"adapter_id": "B"}),
+    })
+    tenancy = ["A", "B", None, "B", "A", "B"]
+    outs = {}
+    for leg, kw in (("uncached", {}),
+                    # budget of ONE delta: forces eviction/capture churn
+                    ("cached", {"cache_bytes":
+                                reg.get("A").nbytes + 64})):
+        reqs = _mixed_requests(tiny_cfg, tenancy)
+        srv = DecodeServer(tiny_cfg, tiny_params, batch_slots=2,
+                           max_seq=64, registry=reg, steps_per_turn=2,
+                           **kw)
+        for r in reqs:
+            srv.submit(r)
+        srv.run_until_drained()
+        assert all(r.done for r in reqs)
+        outs[leg] = {r.rid: tuple(r.out) for r in reqs}
+        if leg == "cached":
+            assert srv.cache.misses >= 2    # both adapters promoted
+            assert srv.cache.evictions >= 1  # tiny budget churned
+            # eviction never breaks the bit-exact-revert invariant
+            srv.restore_base()
+            for a, b in zip(jax.tree.leaves(srv.params),
+                            jax.tree.leaves(tiny_params)):
+                np.testing.assert_array_equal(np.asarray(a),
+                                              np.asarray(b))
+    assert outs["cached"] == outs["uncached"]
+
+
+# --------------------------------------------------------------------- #
+# scheduler: turn budgets, SLO, aging, drain regression
+# --------------------------------------------------------------------- #
+
+
+def _two_group_server(tiny_cfg, tiny_params, **kw):
+    tunedA = _tuned(tiny_params, rows=(0, 2), scale=0.7, seed=30)
+    tunedM = _tuned(tiny_params, rows=(1, 3), scale=0.4, seed=40)
+    reg = InMemoryRegistry({
+        "A": extract_delta(tiny_params, tunedA, meta={"adapter_id": "A"}),
+        "M": extract_delta(tiny_params, tunedM, meta={"adapter_id": "M"}),
+    })
+    return DecodeServer(tiny_cfg, tiny_params, registry=reg, **kw)
+
+
+def test_turn_budget_scales_with_depth_and_slo(tiny_cfg, tiny_params):
+    srv = _two_group_server(tiny_cfg, tiny_params, batch_slots=2,
+                            max_seq=64, steps_per_turn=4)
+    rng = np.random.default_rng(0)
+    for i in range(8):       # deep majority queue
+        srv.submit(Request(rid=i, prompt=rng.integers(0, 8, 3),
+                           max_new_tokens=4, adapter_id="M"))
+    srv.submit(Request(rid=8, prompt=rng.integers(0, 8, 3),
+                       max_new_tokens=4, adapter_id="A"))
+    groups = ["M", "A"]
+    # deep queue amortizes its swap over a longer turn
+    assert srv._turn_budget("M", groups) > srv._turn_budget("A", groups)
+    # a tight deadline on the minority truncates the majority's turn
+    srv.submit(Request(rid=9, prompt=rng.integers(0, 8, 3),
+                       max_new_tokens=4, adapter_id="A", slo_ms=3.0))
+    assert srv._turn_budget("M", groups) == 3
+
+
+def test_slo_deadline_preempts_rotation_order(tiny_cfg, tiny_params):
+    """When slack runs low, the SLO-carrying group jumps the round-robin
+    order (the no-SLO group was submitted first and would otherwise
+    rotate in first)."""
+    srv = _two_group_server(tiny_cfg, tiny_params, batch_slots=2,
+                            max_seq=64, steps_per_turn=4)
+    rng = np.random.default_rng(1)
+    base = Request(rid=0, prompt=rng.integers(0, 8, 3),
+                   max_new_tokens=12)
+    slow = Request(rid=1, prompt=rng.integers(0, 8, 3),
+                   max_new_tokens=4, adapter_id="A")
+    urgent = Request(rid=2, prompt=rng.integers(0, 8, 3),
+                     max_new_tokens=4, adapter_id="M", slo_ms=5.0)
+    for r in (base, slow, urgent):
+        srv.submit(r)
+    srv.run_until_drained()
+    assert all(r.done for r in (base, slow, urgent))
+    assert urgent.finish_step < slow.finish_step
+
+
+def test_drained_turn_never_shortens_next_group(tiny_cfg, tiny_params):
+    """Regression: a group draining mid-turn must leave no stale
+    ``_turn_left`` behind — the next scheduled group gets its FULL
+    recomputed budget, not the drained group's leftover."""
+    srv = _two_group_server(tiny_cfg, tiny_params, batch_slots=1,
+                            max_seq=64, steps_per_turn=6)
+    rng = np.random.default_rng(2)
+    short = Request(rid=0, prompt=rng.integers(0, 8, 2),
+                    max_new_tokens=2, adapter_id="A")
+    srv.submit(short)
+    srv.step()                      # A admitted, emits prime + 1 token
+    assert short.done
+    # mid-turn drain: the countdown is cleared, not left to leak
+    assert srv._turn_left == 0
+    long = Request(rid=1, prompt=rng.integers(0, 8, 2),
+                   max_new_tokens=8)
+    srv.submit(long)
+    expected = srv._turn_budget(None, [None])
+    srv.step()
+    assert srv._turn_left == expected - 1
+
+
+def test_fairness_9to1_skew_no_starvation(tiny_cfg, tiny_params):
+    """9:1 skewed queue: the minority adapter still completes within the
+    aging bound, adapter-aware scheduling swaps less than round-robin,
+    and all three legs (rr / aware / aware+cache) emit identical token
+    streams."""
+    new_tokens, spt, aging = 6, 2, 6
+    tenancy = ["M"] * 9 + ["m"]
+    legs = {}
+    for leg, kw in (("rr", dict(adapter_aware=False)),
+                    ("aware", dict(adapter_aware=True)),
+                    ("cached", dict(adapter_aware=True,
+                                    cache_bytes=1 << 24))):
+        tunedM = _tuned(tiny_params, rows=(0, 2), scale=0.7, seed=50)
+        tunedm = _tuned(tiny_params, rows=(1, 3), scale=0.4, seed=60)
+        reg = InMemoryRegistry({
+            "M": extract_delta(tiny_params, tunedM,
+                               meta={"adapter_id": "M"}),
+            "m": extract_delta(tiny_params, tunedm,
+                               meta={"adapter_id": "m"}),
+        })
+        srv = DecodeServer(tiny_cfg, tiny_params, batch_slots=2,
+                           max_seq=64, registry=reg, steps_per_turn=spt,
+                           aging_steps=aging, **kw)
+        reqs = _mixed_requests(tiny_cfg, tenancy, new_tokens=new_tokens)
+        for r in reqs:
+            srv.submit(r)
+        srv.run_until_drained()
+        assert all(r.done for r in reqs)
+        legs[leg] = dict(srv=srv,
+                         outs={r.rid: tuple(r.out) for r in reqs},
+                         minority=[r for r in reqs
+                                   if r.adapter_id == "m"][0])
+    assert legs["aware"]["outs"] == legs["rr"]["outs"]
+    assert legs["cached"]["outs"] == legs["rr"]["outs"]
+    # worst-case wait is aging + the longest possible turn; add the
+    # minority's own service time and a small margin
+    bound = aging + 4 * spt + new_tokens + 2
+    m = legs["aware"]["minority"]
+    assert m.finish_step - m.submit_step <= bound, \
+        f"minority starved: {m.finish_step - m.submit_step} > {bound}"
+    assert legs["aware"]["srv"].swaps < legs["rr"]["srv"].swaps
+    cached = legs["cached"]["srv"]
+    assert cached.cache.misses <= 2      # each adapter uploaded once
+    assert cached.cache.hits >= 1        # revisits served from HBM
+
+
+def test_cache_requires_registry(tiny_cfg, tiny_params):
+    with pytest.raises(ValueError, match="registry"):
+        DecodeServer(tiny_cfg, tiny_params, cache_bytes=1 << 20)

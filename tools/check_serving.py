@@ -1,0 +1,147 @@
+#!/usr/bin/env python
+"""CI serving-regression gate: serving benchmarks vs committed baselines.
+
+BlockLLM's <5%-of-params deltas are what make multi-tenant serving
+cheap; this gate keeps the serving-side wins from silently regressing
+the same way ``check_memory.py`` locks in the training-memory story.
+It runs the two serving benchmarks in quick mode:
+
+- ``benchmarks/bench_adapter_swap.py``  -> swap_bytes_ratio (tenant
+  flip bytes / full reload) and q8_payload_ratio (int8 / fp32 payload),
+- ``benchmarks/bench_serve_sched.py``   -> swap_reduction (round-robin
+  swaps / adapter-aware+cached swaps), cache_hit_rate, swap_rate_cached,
+  h2d_frac (host->device share of flip bytes) and p50/p99 request
+  latency in decode steps,
+
+and compares every metric against ``benchmarks/serve_baselines.json``
+with a relative tolerance band.  Each metric has an orientation: moving
+the BAD way past tolerance fails; moving the GOOD way past tolerance
+also fails, with a message telling you to re-baseline — improvements
+get locked in, not left to drift back.  The scheduler counters are
+deterministic (fixed seeds, greedy decode), so the band only absorbs
+cross-version numeric drift in the tiny finetune behind
+bench_adapter_swap.
+
+Intentional re-baseline (e.g. a scheduler policy change):
+
+    PYTHONPATH=src python tools/check_serving.py --update
+    git add benchmarks/serve_baselines.json   # review the diff!
+
+Usage:  PYTHONPATH=src python tools/check_serving.py [--update]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+BASELINES = Path(__file__).resolve().parent.parent / "benchmarks" \
+    / "serve_baselines.json"
+
+# metric -> "lower" | "higher" (which direction is good)
+ORIENTATION = {
+    "swap_bytes_ratio": "lower",
+    "q8_payload_ratio": "lower",
+    "swap_reduction": "higher",
+    "cache_hit_rate": "higher",
+    "swap_rate_cached": "lower",
+    "h2d_frac": "lower",
+    "p50_latency_steps": "lower",
+    "p99_latency_steps": "lower",
+}
+
+
+def collect_metrics() -> dict:
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    from benchmarks import bench_adapter_swap, bench_serve_sched
+
+    swap = bench_adapter_swap.run(quick=True)
+    sched = bench_serve_sched.run(quick=True)
+    return {
+        "swap_bytes_ratio": float(swap["ratio"]),
+        "q8_payload_ratio": float(swap["q8_payload_ratio"]),
+        "swap_reduction": float(sched["swap_reduction"]),
+        "cache_hit_rate": float(sched["cache_hit_rate"]),
+        "swap_rate_cached": float(sched["swap_rate_cached"]),
+        "h2d_frac": float(sched["h2d_frac"]),
+        "p50_latency_steps": float(sched["p50_latency_steps"]),
+        "p99_latency_steps": float(sched["p99_latency_steps"]),
+    }
+
+
+def compare(metrics: dict, baselines: dict, tolerance: float) -> list:
+    problems = []
+    for key, val in sorted(metrics.items()):
+        ref = baselines.get(key)
+        if ref is None:
+            problems.append(f"{key}: new metric — re-baseline with "
+                            f"--update")
+            continue
+        if ref == 0:
+            if abs(val) > tolerance:
+                problems.append(f"{key}: {val:.4f} vs baseline 0")
+            continue
+        drift = (val - ref) / abs(ref)
+        worse = drift > tolerance if ORIENTATION[key] == "lower" \
+            else drift < -tolerance
+        better = drift < -tolerance if ORIENTATION[key] == "lower" \
+            else drift > tolerance
+        if worse:
+            problems.append(
+                f"{key}: {val:.4f} is {drift:+.1%} vs baseline "
+                f"{ref:.4f} (regression past {tolerance:.0%}, "
+                f"{ORIENTATION[key]} is better)")
+        elif better:
+            problems.append(
+                f"{key}: {val:.4f} is {drift:+.1%} vs baseline "
+                f"{ref:.4f} — improvement; lock it in with --update")
+    for key in sorted(set(baselines) - set(metrics)):
+        problems.append(f"{key}: baselined metric no longer reported — "
+                        f"remove it with --update")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the committed baselines from the "
+                         "current benchmark outputs")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="relative tolerance band per metric")
+    ap.add_argument("--baselines", default=str(BASELINES))
+    args = ap.parse_args(argv)
+
+    metrics = collect_metrics()
+    path = Path(args.baselines)
+    if args.update:
+        path.write_text(json.dumps(metrics, indent=1, sort_keys=True)
+                        + "\n")
+        print(f"wrote {path} ({len(metrics)} metrics)")
+        return 0
+
+    if not path.exists():
+        print(f"FAIL: no baselines at {path}; run --update and commit")
+        return 1
+    baselines = json.loads(path.read_text())
+    problems = compare(metrics, baselines, args.tolerance)
+    print()
+    for key, val in sorted(metrics.items()):
+        print(f"{key:22s} {val:10.4f}  (baseline "
+              f"{baselines.get(key, float('nan')):10.4f}, "
+              f"{ORIENTATION[key]} is better)")
+    if problems:
+        print(f"\nFAIL: {len(problems)} serving regression(s):")
+        for p in problems:
+            print(f"  - {p}")
+        return 1
+    print(f"\nOK: {len(metrics)} serving metrics within "
+          f"{args.tolerance:.0%} of baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
