@@ -50,6 +50,14 @@ print(f"re-selections: {state.meta['reselections']}, "
 #    multiplexes many such tenants over ONE resident base model.
 #    `--cache-bytes` keeps hot deltas HBM-resident (device-to-device
 #    flips), `--slo-ms` sets per-request deadlines for the
-#    adapter-aware scheduler; see examples/multi_tenant_serve.py for
-#    the end-to-end proof.  Serving perf is CI-gated: re-baseline
-#    deliberately with `python tools/check_serving.py --update`.
+#    adapter-aware scheduler (`--ms-per-step auto` calibrates the
+#    deadline clock from measured step time); see
+#    examples/multi_tenant_serve.py for the end-to-end proof.
+#    The decode hot path is FastDecode: prompts prime via chunked
+#    batched prefill (`--prefill-chunk`, ceil(P/chunk) dispatches per
+#    admitted group instead of P per request) and `--attn-impl pallas`
+#    selects the fused decode-attention kernel whose HBM reads scale
+#    with each slot's actual context instead of --max-seq
+#    (benchmarks/bench_decode_path.py measures both).  Serving perf is
+#    CI-gated: re-baseline deliberately with
+#    `python tools/check_serving.py --update`.

@@ -1,0 +1,208 @@
+"""Fused decode attention — Pallas/TPU, one query token vs a KV cache.
+
+The serving hot path calls this once per decode step per layer: q is a
+single token per slot ([B, 1, H, hd]), k/v are the slot-batched cache
+([B, C, KV, hd]) and ``pos`` is the per-slot index of the token just
+written.  The XLA fallback (``models.layers.attention_decode``) scores
+the FULL ``C = max_seq`` cache every step regardless of ``pos``; this
+kernel makes the HBM traffic scale with the actual context instead:
+
+- grid (B, KV, nk) with the k dimension innermost ("arbitrary"): the
+  f32 accumulator / running max / denominator live in VMEM scratch and
+  persist across the k sweep for one (slot, kv-head);
+- GQA in the q layout: the ``H // KV`` query heads of one kv group form
+  the rows of a single [G, hd] tile — repeated k/v heads are never
+  materialized (the same trick as flash_attention's index_map);
+- **pos-aware block skipping**: per-slot [lo, hi] block bounds ride in
+  scalar-prefetch SMEM.  The k/v index_map clamps the block index into
+  [lo_b, hi_b] — consecutive grid steps that map to the same block are
+  not re-fetched, so out-of-range blocks cost no HBM reads — and
+  ``pl.when`` skips their compute entirely.  A slot at position p reads
+  O(p) cache blocks, not O(max_seq);
+- ring (sliding-window cache) and windowed variants use the same valid
+  masks as the XLA path, so both layouts stay bit-compatible with the
+  decode writes in ``models.model``.
+
+``kernels/ref.py: decode_attention_ref`` is the pure-jnp oracle;
+``kernels/ops.decode_attention`` is the public wrapper (Pallas on TPU,
+grouped-einsum XLA elsewhere).  ``cache_read_bytes`` is the analytic
+HBM traffic model the decode-path benchmark gates on.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU grid spec; interpret mode supports it on CPU
+    from jax.experimental.pallas import tpu as pltpu
+except Exception:  # pragma: no cover
+    pltpu = None
+
+
+def _kernel(pos_ref, lo_ref, hi_ref, q_ref, k_ref, v_ref, o_ref,
+            acc, m_scr, l_scr, *, scale, window, ring, softcap,
+            block_k, nk, C):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    pos_b = pos_ref[b]
+    lo = lo_ref[b]
+    hi = hi_ref[b]
+
+    @pl.when(jnp.logical_and(ki >= lo, ki <= hi))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # [G, hd]
+        k = k_ref[0, 0].astype(jnp.float32)           # [bk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        idx = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        if ring:
+            # slot i holds absolute position p with p % C == i; every
+            # slot younger than the window is valid once written
+            age = (pos_b - idx) % C
+            ok = age < (window if window else C)
+            ok &= pos_b >= age                # not yet written early on
+        else:
+            ok = idx <= pos_b
+            if window:
+                ok &= idx > pos_b - window
+        ok &= idx < C                          # C % block_k padding guard
+        s = jnp.where(ok, s, -jnp.inf)
+
+        m_prev = m_scr[...]                    # [G, 1]
+        m_new = jnp.maximum(m_prev[:, 0], s.max(-1))[:, None]
+        m_safe = jnp.maximum(m_new, -1e30)     # fully-masked block guard
+        p = jnp.exp(s - m_safe)
+        corr = jnp.exp(jnp.maximum(m_prev, -1e30) - m_safe)
+        l_scr[...] = l_scr[...] * corr + p.sum(-1)[:, None]
+        acc[...] = acc[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc[...] / jnp.maximum(l_scr[...], 1e-30)).astype(
+            o_ref.dtype)
+
+
+def block_bounds(pos, *, seq_len, window=0, ring=False, block_k=128):
+    """Per-slot [lo, hi] k-block range a decode step must read.
+
+    Shared by the kernel launch and ``cache_read_bytes`` so the analytic
+    traffic model can never drift from what the kernel actually fetches.
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    bk = min(block_k, seq_len)
+    hi = jnp.minimum(pos, seq_len - 1) // bk
+    if window and not ring:
+        lo = jnp.maximum(pos - window + 1, 0) // bk
+    else:
+        # ring: early steps only fill slots [0, pos]; after wrap the
+        # whole C = min(window, max_seq) buffer IS the window
+        lo = jnp.zeros_like(hi)
+    return lo, hi
+
+
+def cache_read_bytes(pos, *, seq_len, kv_heads, head_dim, window=0,
+                     ring=False, block_k=128, dtype_bytes=2):
+    """Analytic K+V HBM bytes one fused decode step reads at ``pos``.
+
+    The full-``max_seq`` XLA baseline reads every row every step:
+    ``2 * seq_len * kv_heads * head_dim * dtype_bytes`` per slot.
+    """
+    lo, hi = block_bounds(pos, seq_len=seq_len, window=window, ring=ring,
+                          block_k=block_k)
+    bk = min(block_k, seq_len)
+    per_block = 2 * bk * kv_heads * head_dim * dtype_bytes  # k + v tiles
+    return int(jnp.sum(hi - lo + 1)) * per_block
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "ring", "softcap", "scale",
+                              "block_k", "interpret"))
+def decode_attention_fwd(q, k_cache, v_cache, pos, *, window=0, ring=False,
+                         softcap=0.0, scale=None, block_k=128,
+                         interpret=False):
+    """q [B, 1, H, hd]; k/v caches [B, C, KV, hd]; pos scalar or [B].
+
+    Returns o [B, 1, H, hd] — same contract as
+    ``models.layers.attention_decode``.
+    """
+    if pltpu is None:  # pragma: no cover
+        raise RuntimeError("pallas TPU support unavailable in this jax "
+                           "build — use the XLA decode path")
+    B, C, KV, hd = k_cache.shape
+    H = q.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    bk = min(block_k, C)
+    nk = pl.cdiv(C, bk)
+
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+    lo, hi = block_bounds(pos_b, seq_len=C, window=window, ring=ring,
+                          block_k=bk)
+
+    qt = q.reshape(B, KV, G, hd)       # head h = kv * G + g
+    kt = k_cache.swapaxes(1, 2)        # [B, KV, C, hd]
+    vt = v_cache.swapaxes(1, 2)
+
+    def kv_map(b, h, j, pos_ref, lo_ref, hi_ref):
+        # out-of-range grid steps re-visit the boundary block: Pallas
+        # elides the DMA when the mapped block index does not change, so
+        # skipped blocks cost no HBM traffic
+        return b, h, jnp.clip(j, lo_ref[b], hi_ref[b]), 0
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, KV, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, hd), kv_map),
+            pl.BlockSpec((1, 1, bk, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, j, *_: (b, h, 0, 0)),
+        scratch_shapes=[
+            _scratch((G, hd)),
+            _scratch((G, 1)),
+            _scratch((G, 1)),
+        ],
+    )
+    kernel = functools.partial(
+        _kernel, scale=scale, window=window, ring=ring, softcap=softcap,
+        block_k=bk, nk=nk, C=C)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )(pos_b, lo, hi, qt, kt, vt)
+    return out.reshape(B, 1, H, hd)
+
+
+def _scratch(shape):
+    try:
+        return pltpu.VMEM(shape, jnp.float32)
+    except Exception:  # pragma: no cover
+        return pl.MemorySpace.ANY(shape, jnp.float32)  # type: ignore
+
+
+def _compiler_params():
+    try:
+        return pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    except Exception:  # pragma: no cover
+        return None

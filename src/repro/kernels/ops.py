@@ -18,6 +18,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import decode_attention as da
 from repro.kernels import masked_adam as ma
 from repro.kernels import flash_attention as fa
 from repro.kernels import rglru_scan as rg
@@ -62,6 +63,33 @@ def _fa_bwd(causal, window, interpret, res, do):
 
 
 flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# --------------------------------------------------------------------- #
+# fused decode attention (serving hot path; no backward — inference only)
+# --------------------------------------------------------------------- #
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=0, ring=False,
+                     softcap=0.0, mode: str = "auto", block_k: int = 128):
+    """One-token attention against a slot-batched KV cache.
+
+    q [B, 1, H, hd]; caches [B, C, KV, hd]; pos scalar or [B].  ``mode``:
+    ``pallas`` | ``interpret`` | ``xla`` | ``auto`` (Pallas on TPU, the
+    grouped-einsum XLA path elsewhere).  The Pallas kernel's HBM reads
+    scale with ``pos`` (see kernels/decode_attention.py); the XLA path
+    scores the full cache but never materializes GQA-repeated heads.
+    """
+    if mode == "auto":
+        mode = "pallas" if pallas_available() else "xla"
+    if mode == "xla":
+        return layers.attention_decode(q, k_cache, v_cache, pos,
+                                       window=window, softcap=softcap,
+                                       ring=ring)
+    return da.decode_attention_fwd(q, k_cache, v_cache, pos, window=window,
+                                   ring=ring, softcap=softcap,
+                                   block_k=block_k,
+                                   interpret=(mode == "interpret"))
 
 
 # --------------------------------------------------------------------- #

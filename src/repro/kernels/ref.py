@@ -70,6 +70,41 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
                       v.astype(jnp.float32)).astype(q.dtype)
 
 
+def decode_attention_ref(q, k_cache, v_cache, pos, *, window=0,
+                         ring=False, softcap=0.0, scale=None):
+    """Oracle for kernels.decode_attention (GQA decode attention).
+
+    q [B, 1, H, hd]; caches [B, C, KV, hd]; pos scalar or [B] — index of
+    the NEW token (already written into the cache).  ``ring=True``
+    treats the cache as a ring buffer (slot i holds position p with
+    p % C == i); otherwise rows above ``pos`` (and outside ``window``)
+    are masked.  All arithmetic in f32.
+    """
+    B, C, KV, hd = k_cache.shape
+    H = q.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+    k = jnp.repeat(k_cache, H // KV, axis=2).astype(jnp.float32)
+    v = jnp.repeat(v_cache, H // KV, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    idx = jnp.arange(C)[None, :]
+    pb = pos_b[:, None]
+    if ring:
+        age = (pb - idx) % C
+        valid = age < (window if window else C)
+        valid &= pb >= age
+    else:
+        valid = idx <= pb
+        if window:
+            valid &= idx > pb - window
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isfinite(s).any(-1, keepdims=True), p, 0.0)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v).astype(q.dtype)
+
+
 def scatter_swap_ref(full, idx, rows):
     """Oracle for kernels.scatter_apply.scatter_swap_2d.
 

@@ -16,9 +16,21 @@ rotating, turn lengths scale per adapter with queue depth and
 ``--cache-bytes`` keeps hot adapters' delta rows resident in HBM
 (``repro.adapters.AdapterCache``): tenant flips whose delta is cached
 are device-to-device scatter-swaps with zero host->device transfer.
+
+FastDecode hot path: prompts are primed by **chunked batched prefill**
+(``--prefill-chunk``, 0 restores per-token priming) — one full-sequence
+dispatch per prompt chunk per admitted group instead of one decode
+dispatch per prompt token per request — and ``--attn-impl pallas``
+selects the fused Pallas decode-attention kernel whose HBM reads scale
+with each slot's actual context length instead of ``--max-seq``
+(``--attn-impl full`` is the grouped-einsum XLA fallback).
+``--ms-per-step auto`` calibrates SLO slack from a wall-clock EMA of
+the measured decode-step time.
+
 Serving-side regressions are gated in CI by ``tools/check_serving.py``
 against ``benchmarks/serve_baselines.json`` (re-baseline deliberately
-with ``--update``).
+with ``--update``); the decode hot path itself is covered by
+``benchmarks/bench_decode_path.py``.
 """
 from __future__ import annotations
 
@@ -58,6 +70,19 @@ def main(argv=None):
     ap.add_argument("--round-robin", action="store_true",
                     help="disable adapter-aware admission (PR-1 "
                          "rotation baseline)")
+    ap.add_argument("--attn-impl", default="full",
+                    choices=["full", "pallas", "pallas_interpret"],
+                    help="decode attention: 'pallas' = fused kernel "
+                         "(HBM reads scale with per-slot context), "
+                         "'full' = grouped-einsum XLA fallback, "
+                         "'pallas_interpret' = kernel in interpret "
+                         "mode (CPU debugging)")
+    ap.add_argument("--prefill-chunk", type=int, default=64,
+                    help="prompt positions per chunked-prefill "
+                         "dispatch (0 = legacy per-token priming)")
+    ap.add_argument("--ms-per-step", default="1.0",
+                    help="SLO conversion: decode-step time in ms, or "
+                         "'auto' to calibrate from a wall-clock EMA")
     args = ap.parse_args(argv)
 
     import jax
@@ -91,7 +116,11 @@ def main(argv=None):
                        steps_per_turn=args.steps_per_turn,
                        adapter_aware=not args.round_robin,
                        aging_steps=args.aging_steps or None,
-                       cache_bytes=args.cache_bytes)
+                       cache_bytes=args.cache_bytes,
+                       attn_impl=args.attn_impl,
+                       prefill_chunk=args.prefill_chunk,
+                       ms_per_step=("auto" if args.ms_per_step == "auto"
+                                    else float(args.ms_per_step)))
     rng = np.random.default_rng(args.seed)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size, 4 + i % 4),
@@ -108,6 +137,12 @@ def main(argv=None):
     tok = sum(len(r.out) for r in reqs)
     print(f"served {len(reqs)} requests, {tok} tokens in {dt:.2f}s "
           f"({tok / dt:.1f} tok/s, {srv.steps} decode steps)")
+    print(f"prefill: {srv.prefill_prompt_tokens} prompt tokens in "
+          f"{srv.prefill_dispatches} dispatches "
+          f"({'chunked' if srv._slot_prefill else 'per-token'}, "
+          f"chunk {srv.prefill_chunk})"
+          + (f"; ms/step EMA {srv.ms_per_step:.2f}"
+             if args.ms_per_step == "auto" else ""))
     if registry is not None:
         s = srv.stats()
         print(f"adapter swaps: {s['swaps']} "

@@ -221,15 +221,22 @@ def attention_decode(q, k_cache, v_cache, cur_pos, *, window=0, softcap=0.0,
     cache) — a scalar or a per-batch [B] vector (slot-batched serving).
     With ``ring=True`` the cache is a ring buffer of size ``window`` and
     every slot whose age < window is valid.
+
+    GQA runs as a grouped einsum (query heads reshaped ``H -> (KV,
+    group)``) so the repeated k/v heads are never materialized — the
+    cache leaves stream through at their stored [B, S, KV, hd] size.
+    The Pallas kernel (``kernels/decode_attention.py``) additionally
+    makes the HBM reads scale with ``cur_pos``.
     """
     B, S, KV, hd = k_cache.shape
     H = q.shape[2]
     cur_pos = jnp.asarray(cur_pos)
     pos_b = jnp.broadcast_to(cur_pos.reshape(-1, *([1] * 0))
                              if cur_pos.ndim else cur_pos, (B,))
-    k = _repeat_kv(k_cache, H // KV).astype(q.dtype)
-    v = _repeat_kv(v_cache, H // KV).astype(q.dtype)
-    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    k = k_cache.astype(q.dtype)
+    v = v_cache.astype(q.dtype)
+    qg = q.reshape(B, q.shape[1], KV, H // KV, hd)   # head h = kv*g + g'
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
     s *= 1.0 / math.sqrt(hd)
     if softcap:
         s = jnp.tanh(s / softcap) * softcap
@@ -244,9 +251,10 @@ def attention_decode(q, k_cache, v_cache, cur_pos, *, window=0, softcap=0.0,
         valid = idx <= pb
         if window:
             valid &= idx > pb - window
-    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
-    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+    return o.reshape(B, q.shape[1], H, hd)
 
 
 # ---------------------------------------------------------------------------

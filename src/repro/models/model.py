@@ -22,6 +22,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.configs.base import (
@@ -129,7 +130,8 @@ def _attn_cache_len(cfg, btype, seq_len):
 
 
 def _block_apply(cfg, btype, params, x, *, positions, mode, cache,
-                 enc_out=None, pos=None, attn_impl="chunked"):
+                 enc_out=None, pos=None, attn_impl="chunked",
+                 chunk_start=0):
     """Returns (y, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     if btype in ATTN_BLOCKS:
@@ -143,7 +145,7 @@ def _block_apply(cfg, btype, params, x, *, positions, mode, cache,
         q = (h @ params["attn"]["wq"].astype(h.dtype)).reshape(B, S, H, hd)
         k = (h @ params["attn"]["wk"].astype(h.dtype)).reshape(B, S, KV, hd)
         v = (h @ params["attn"]["wv"].astype(h.dtype)).reshape(B, S, KV, hd)
-        if mode != "decode":
+        if mode not in ("decode", "prefill_slots"):
             # Megatron-SP: attention runs head-sharded with full sequence
             # (one reshard per layer; pruned when heads don't divide)
             q = shard_ctx.constrain(q, "attn_heads")
@@ -162,9 +164,63 @@ def _block_apply(cfg, btype, params, x, *, positions, mode, cache,
                 k[:, 0].astype(cache["k"].dtype))
             cv = cache["v"].at[bidx, slot].set(
                 v[:, 0].astype(cache["v"].dtype))
-            o = layers.attention_decode(q, ck, cv, pos_b, window=window,
-                                        softcap=cfg.attn_softcap, ring=ring)
+            if attn_impl in ("pallas", "pallas_interpret"):
+                from repro.kernels import ops as kernel_ops
+                o = kernel_ops.decode_attention(
+                    q, ck, cv, pos_b, window=window,
+                    softcap=cfg.attn_softcap, ring=ring,
+                    mode=("interpret" if attn_impl == "pallas_interpret"
+                          else "pallas"))
+            else:
+                o = layers.attention_decode(q, ck, cv, pos_b, window=window,
+                                            softcap=cfg.attn_softcap,
+                                            ring=ring)
             new_cache = {"k": ck, "v": cv}
+        elif mode == "prefill_slots":
+            # chunked batched prefill: scatter this chunk's K/V rows into
+            # the slot-batched decode cache (positions are absolute,
+            # ``pos`` carries per-slot prompt LENGTHS — 0 for slots not
+            # being primed), then attend causally over the already
+            # written history plus the chunk.  One dispatch primes a
+            # whole admitted group for ``S`` positions — vs one decode
+            # dispatch per token per request on the legacy path.
+            ring = btype == BLOCK_LOCAL_ATTN
+            C = cache["k"].shape[1]
+            lengths = jnp.broadcast_to(jnp.asarray(pos), (B,))
+            last = jnp.minimum(lengths, chunk_start + S)[:, None]
+            valid = positions < last
+            if ring:
+                # only the last C valid rows land (ring layout
+                # slot(p) = p % C, matching decode writes); dropping the
+                # older ones also keeps scatter indices collision-free
+                valid &= positions + C >= last
+                slot = positions % C
+            else:
+                slot = positions
+            slot = jnp.where(valid, slot, C)   # OOB rows -> dropped
+            bidx = jnp.arange(B)[:, None]
+            ck = cache["k"].at[bidx, slot].set(
+                k.astype(cache["k"].dtype), mode="drop")
+            cv = cache["v"].at[bidx, slot].set(
+                v.astype(cache["v"].dtype), mode="drop")
+            new_cache = {"k": ck, "v": cv}
+            # attend over [written history, this chunk].  The chunk's
+            # own k/v go through the cache dtype round-trip so the
+            # scores match what the per-token path reads back.
+            hist = min(chunk_start, C)
+            hp = np.arange(chunk_start - hist, chunk_start)
+            hidx = jnp.asarray(hp % C if ring else hp, jnp.int32)
+            kh = jnp.take(cache["k"], hidx, axis=1).astype(q.dtype)
+            vh = jnp.take(cache["v"], hidx, axis=1).astype(q.dtype)
+            kc = k.astype(cache["k"].dtype).astype(q.dtype)
+            vc = v.astype(cache["v"].dtype).astype(q.dtype)
+            kp = jnp.broadcast_to(jnp.asarray(hp, jnp.int32)[None],
+                                  (B, hist))
+            o = layers.attention_full(
+                q, jnp.concatenate([kh, kc], axis=1),
+                jnp.concatenate([vh, vc], axis=1),
+                positions, jnp.concatenate([kp, positions], axis=1),
+                causal=True, window=window, softcap=cfg.attn_softcap)
         else:
             if attn_impl == "full" or S <= 2048:
                 o = layers.attention_full(
@@ -209,6 +265,12 @@ def _block_apply(cfg, btype, params, x, *, positions, mode, cache,
         else:
             y = jnp.zeros_like(h)
         return x + y, new_cache, aux
+
+    if mode == "prefill_slots":
+        # recurrent/SSM states would advance on the right-padding of
+        # shorter prompts — the server falls back to per-token priming
+        # for these families (see supports_slot_prefill)
+        raise ValueError(f"prefill_slots does not support {btype} blocks")
 
     if btype == BLOCK_RECURRENT:
         h = layers.rms_norm(params["ln1"], x, cfg.norm_eps)
@@ -320,7 +382,7 @@ def _resolve_overlay(gp, g, ov):
 
 def _stack_apply(cfg, stage_params, x, *, positions, mode, caches=None,
                  cross_kv=None, enc_present=False, attn_impl="chunked",
-                 pos=None, overlay=None):
+                 pos=None, overlay=None, chunk_start=0):
     """Scan the staged block stack.  Returns (x, new_caches, aux).
 
     ``overlay``: optional {sid: {"idx", "rows", "pidx", "probe"}} — the
@@ -353,7 +415,7 @@ def _stack_apply(cfg, stage_params, x, *, positions, mode, caches=None,
                 h, cj_new, a = _block_apply(
                     cfg, btype, bp, h, positions=positions,
                     mode=mode, cache=cj, enc_out=ex, pos=pos,
-                    attn_impl=attn_impl)
+                    attn_impl=attn_impl, chunk_start=chunk_start)
                 if cj_new is not None:
                     new_gc[f"pos{j}"] = cj_new
                 aux = aux + a
@@ -571,6 +633,53 @@ def prefill(params, cfg, batch, *, attn_impl="chunked"):
     logits, _, cache = forward(params, cfg, batch, mode="prefill",
                                attn_impl=attn_impl)
     return logits[:, -1], cache
+
+
+def supports_slot_prefill(cfg: ModelConfig) -> bool:
+    """Chunked batched prefill needs every block to be attention (K/V
+    rows are position-addressable; recurrent/SSM states would advance on
+    right-padding) and a token-only frontend."""
+    return (not cfg.is_encoder_decoder and not cfg.vision_embed_dim
+            and all(t in ATTN_BLOCKS for t in cfg.layer_types()))
+
+
+def prefill_into_slots(params, cfg: ModelConfig, cache, tokens, lengths,
+                       *, chunk_start=0, attn_impl="full"):
+    """Chunked batched prefill into a slot-batched decode cache.
+
+    ``tokens`` [B, K]: positions ``[chunk_start, chunk_start + K)`` of
+    each slot's prompt, right-padded; ``lengths`` [B] int32: the full
+    prompt length per slot (0 for slots not being primed — their cache
+    rows pass through bit-exactly).  Scatters the chunk's K/V rows into
+    each slot's cache rows (ring layout for local-attention blocks,
+    matching decode writes), attends causally over the already-written
+    history plus the chunk through the full-sequence attention path, and
+    returns ``(logits [B, vocab] at each slot's last valid position of
+    this chunk, new_cache)``.  The final chunk's logits predict each
+    request's first generated token — a P-token prompt costs
+    ``ceil(P / K)`` dispatches for a whole admitted group instead of P
+    whole-model decode dispatches per request.
+    """
+    B, K = tokens.shape
+    positions = jnp.broadcast_to(
+        chunk_start + jnp.arange(K, dtype=jnp.int32)[None], (B, K))
+    x = _embed(params, cfg, tokens, base_pos=chunk_start)
+    x, new_stage_caches, _ = _stack_apply(
+        cfg, params["stages"], x, positions=positions,
+        mode="prefill_slots", caches=cache["stages"],
+        pos=jnp.asarray(lengths, jnp.int32), attn_impl=attn_impl,
+        chunk_start=chunk_start)
+    x = layers.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    # unembed ONLY each slot's last valid row of this chunk — [B, 1, D]
+    # through the same matmul shape the decode path uses (fp parity),
+    # and no [B, K, vocab] logits are ever materialized
+    li = jnp.clip(jnp.minimum(jnp.asarray(lengths, jnp.int32),
+                              chunk_start + K) - 1 - chunk_start, 0, K - 1)
+    xg = jnp.take_along_axis(x, li[:, None, None], axis=1)
+    logits = _unembed(params, cfg, xg)
+    new_cache = dict(cache)
+    new_cache["stages"] = new_stage_caches
+    return logits[:, 0], new_cache
 
 
 def decode_step(params, cfg: ModelConfig, cache, token, pos,

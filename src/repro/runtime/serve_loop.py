@@ -8,8 +8,17 @@ scheme of production LLM servers reduced to its JAX essentials:
   different sequence offsets),
 - an **active-slot mask**: the cache of inactive slots is frozen by a
   jitted blend (recurrent states would otherwise advance on pad tokens),
-- prompt priming through the same decode step (teacher forcing), with the
-  final prime logits emitting the first generated token — no wasted step.
+- **chunked batched prefill** (FastDecode): a whole admitted group's
+  prompts run through ``model.prefill_into_slots`` in prompt chunks —
+  one full-sequence dispatch per chunk scatters the K/V rows straight
+  into the slot-batched cache and the final chunk's logits emit each
+  request's first token.  A P-token prompt costs ``ceil(P /
+  prefill_chunk)`` dispatches per group instead of P whole-model decode
+  dispatches per request; chunk lengths are bucketed to powers of two so
+  ragged prompts hit a handful of compiled shapes.  Non-attention
+  families (recurrent/SSM state would advance on padding) and
+  ``prefill_chunk=0`` fall back to the legacy per-token priming, which
+  decodes the prompt through the same step as generation.
 
 Multi-tenant (BlockDelta) serving: requests may carry an ``adapter_id``
 resolved against an adapter registry (``repro.adapters``).  One base
@@ -32,8 +41,9 @@ has queued work.  The aware scheduler instead:
   over a longer micro-batch), clamped to ``[1, 4*steps_per_turn]`` and
   truncated when another group's SLO deadline would expire inside it;
 - honors per-request deadlines: ``Request.slo_ms`` (converted to decode
-  steps via ``ms_per_step``) pulls a group to the front of rotation
-  when its slack runs low;
+  steps via ``ms_per_step``; pass ``"auto"`` to calibrate it from a
+  wall-clock EMA of the measured step time) pulls a group to the front
+  of rotation when its slack runs low;
 - bounds starvation with an aging rule: any runnable group that has
   waited ``aging_steps`` decode steps preempts residency at the next
   turn boundary, so the worst-case wait is
@@ -51,8 +61,9 @@ from __future__ import annotations
 
 import functools
 import math
+import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -73,6 +84,7 @@ class Request:
     out: List[int] = field(default_factory=list)
     done: bool = False
     submit_step: int = -1       # decode-step clock at submit()
+    first_token_step: int = -1  # decode-step clock at first output token
     finish_step: int = -1       # decode-step clock at completion
 
 
@@ -96,14 +108,39 @@ def _decode_fn(cfg, attn_impl):
     return jax.jit(_decode, donate_argnums=(1,))
 
 
+@functools.lru_cache(maxsize=None)
+def _prefill_fn(cfg, chunk_len, chunk_start):
+    """Shared jitted chunk-prefill per (cfg, chunk shape) — chunk lengths
+    are bucketed by the server, so the compile count stays at a handful
+    of static shapes per architecture."""
+
+    def _pf(params, cache, tokens, lengths):
+        return model_lib.prefill_into_slots(params, cfg, cache, tokens,
+                                            lengths,
+                                            chunk_start=chunk_start)
+
+    return jax.jit(_pf, donate_argnums=(1,))
+
+
+def _chunk_bucket(k: int, cap: int) -> int:
+    """Round a ragged tail-chunk length up to the next power of two
+    (capped at the configured chunk) — bounds recompiles without padding
+    every prompt to the full chunk."""
+    b = 1
+    while b < k:
+        b <<= 1
+    return min(b, cap)
+
+
 class DecodeServer:
     def __init__(self, cfg, params, *, batch_slots: int = 4,
                  max_seq: int = 256, attn_impl: str = "full",
                  registry=None, steps_per_turn: int = 8,
                  swap_mode: str = "auto", adapter_aware: bool = True,
                  aging_steps: Optional[int] = None,
-                 ms_per_step: float = 1.0, cache_bytes: int = 0,
-                 cache=None):
+                 ms_per_step: Union[float, str] = 1.0,
+                 cache_bytes: int = 0, cache=None,
+                 prefill_chunk: int = 64):
         self.cfg = cfg
         if registry is not None:
             # the server owns its resident weights: hot swaps donate the
@@ -119,7 +156,13 @@ class DecodeServer:
         self.adapter_aware = adapter_aware
         self.aging_steps = (3 * self.steps_per_turn if aging_steps is None
                             else max(1, aging_steps))
-        self.ms_per_step = ms_per_step
+        # "auto": calibrate ms_per_step from a wall-clock EMA of measured
+        # decode-step time (closes the ROADMAP AdapterCache follow-up) —
+        # SLO slack then tracks the actual hardware instead of the 1.0
+        # placeholder.  A float pins it (deterministic tests/benches).
+        self._ms_auto = ms_per_step == "auto"
+        self._ms_samples = 0
+        self.ms_per_step = 1.0 if self._ms_auto else float(ms_per_step)
         self.cache = cache
         if self.cache is None and cache_bytes > 0:
             if registry is None:
@@ -140,7 +183,15 @@ class DecodeServer:
         self._last_served: Dict[Optional[str], int] = {}
         self.swaps = 0
         self.swap_bytes = 0
+        self.attn_impl = attn_impl
         self._decode = _decode_fn(cfg, attn_impl)
+        # chunked batched prefill (FastDecode); 0 or an unsupported
+        # family (recurrent/SSM) falls back to per-token priming
+        self.prefill_chunk = max(0, prefill_chunk)
+        self._slot_prefill = (self.prefill_chunk > 0
+                              and model_lib.supports_slot_prefill(cfg))
+        self.prefill_dispatches = 0      # model dispatches spent priming
+        self.prefill_prompt_tokens = 0   # prompt tokens primed
 
     def submit(self, req: Request):
         if req.adapter_id is not BASE:
@@ -346,16 +397,42 @@ class DecodeServer:
 
     def _admit(self, group: Optional[str] = BASE):
         """Fill free slots with queued requests of ``group`` and prime
-        their prompts (the delta for ``group`` is already applied)."""
+        their prompts (the delta for ``group`` is already applied).
+        Admitted requests are primed TOGETHER through the chunked
+        batched prefill when the family supports it — ceil(P/chunk)
+        dispatches for the whole group — else per token."""
+        admitted = []
         for slot in range(self.slots):
             if self.active[slot] is not None:
                 continue
             qi = next((i for i, r in enumerate(self.queue)
                        if r.adapter_id == group), None)
             if qi is None:
-                return
+                break
             req = self.queue.pop(qi)
             self.active[slot] = req
+            admitted.append((slot, req))
+        if not admitted:
+            return
+        firsts = (self._prime_chunked(admitted) if self._slot_prefill
+                  else self._prime_tokenwise(admitted))
+        for (slot, req), first in zip(admitted, firsts):
+            req.out.append(first)
+            req.first_token_step = self.steps
+            self.tokens[slot, 0] = first
+            self.pos[slot] = len(req.prompt)
+            self.prefill_prompt_tokens += len(req.prompt)
+            if len(req.out) >= req.max_new_tokens:
+                req.done = True
+                req.finish_step = self.steps
+                self.active[slot] = None
+
+    def _prime_tokenwise(self, admitted) -> List[int]:
+        """Legacy priming: teacher-force each prompt through the decode
+        step, one token (= one whole-model dispatch) at a time, one
+        request at a time.  Returns each request's first new token."""
+        firsts = []
+        for slot, req in admitted:
             logits = None
             toks = self.tokens.copy()
             for t, tok in enumerate(req.prompt):
@@ -365,15 +442,44 @@ class DecodeServer:
                 logits, self.cache_state = self._decode(
                     self.params, self.cache_state, jnp.asarray(toks),
                     jnp.asarray(pos), jnp.asarray(self._mask(slot)))
+                self.prefill_dispatches += 1
             # final prime logits predict the first new token
-            first = int(jnp.argmax(logits[slot]))
-            req.out.append(first)
-            self.tokens[slot, 0] = first
-            self.pos[slot] = len(req.prompt)
-            if len(req.out) >= req.max_new_tokens:
-                req.done = True
-                req.finish_step = self.steps
-                self.active[slot] = None
+            firsts.append(int(jnp.argmax(logits[slot])))
+        return firsts
+
+    def _prime_chunked(self, admitted) -> List[int]:
+        """Chunked batched prefill: every admitted request's prompt runs
+        through ``model.prefill_into_slots`` together, ``prefill_chunk``
+        positions per dispatch (tail chunks bucketed to powers of two).
+        K/V rows land directly in the slot-batched cache; the chunk
+        covering each prompt's last token yields its first new token."""
+        lengths = np.zeros(self.slots, np.int32)
+        for slot, req in admitted:
+            lengths[slot] = len(req.prompt)
+        longest = int(lengths.max())
+        firsts: Dict[int, int] = {}
+        start = 0
+        while start < longest:
+            k = _chunk_bucket(min(self.prefill_chunk, longest - start),
+                              self.prefill_chunk)
+            toks = np.zeros((self.slots, k), np.int32)
+            for slot, req in admitted:
+                hi = min(len(req.prompt), start + k)
+                if hi > start:
+                    toks[slot, :hi - start] = np.asarray(
+                        req.prompt[start:hi], np.int32)
+            logits, self.cache_state = _prefill_fn(self.cfg, k, start)(
+                self.params, self.cache_state, jnp.asarray(toks),
+                jnp.asarray(lengths))
+            self.prefill_dispatches += 1
+            lg = None
+            for slot, req in admitted:
+                if start < len(req.prompt) <= start + k:
+                    if lg is None:
+                        lg = np.asarray(logits)
+                    firsts[slot] = int(np.argmax(lg[slot]))
+            start += k
+        return [firsts[slot] for slot, _ in admitted]
 
     def step(self) -> int:
         """One decode micro-step for the scheduled adapter group;
@@ -385,10 +491,19 @@ class DecodeServer:
         if not mask.any():
             self._turn_left = 0  # group drained during admission: rotate
             return 0
+        t0 = time.monotonic()
         logits, self.cache_state = self._decode(
             self.params, self.cache_state, jnp.asarray(self.tokens),
             jnp.asarray(self.pos), jnp.asarray(mask))
-        nxt = np.asarray(jnp.argmax(logits, -1))
+        nxt = np.asarray(jnp.argmax(logits, -1))  # host sync point
+        if self._ms_auto:
+            dt = (time.monotonic() - t0) * 1e3
+            self._ms_samples += 1
+            # skip the compile-laden first step; EMA after that
+            if self._ms_samples == 2:
+                self.ms_per_step = dt
+            elif self._ms_samples > 2:
+                self.ms_per_step = 0.2 * dt + 0.8 * self.ms_per_step
         finished = 0
         self.steps += 1
         self._turn_left -= 1
@@ -410,19 +525,44 @@ class DecodeServer:
             self._turn_left = 0
         return finished
 
+    def _progress_key(self):
+        return (self.steps, len(self.queue),
+                sum(r is not None for r in self.active),
+                sum(len(r.out) for r in self.active if r is not None))
+
     def run_until_drained(self, max_steps=10_000) -> List[Request]:
+        """Step until queue and slots are empty.  A wedged queue — a
+        step that changes NOTHING (no decode, no admission, no
+        completion) would repeat identically forever — raises instead of
+        silently burning ``max_steps`` and returning undone requests;
+        so does running out of ``max_steps`` with work left."""
         all_reqs = list(self.queue)
         for _ in range(max_steps):
+            before = self._progress_key()
             self.step()
             if not self.queue and all(r is None for r in self.active):
-                break
-        return all_reqs
+                return all_reqs
+            if self._progress_key() == before:
+                raise RuntimeError(
+                    f"DecodeServer wedged at step {self.steps}: "
+                    f"{len(self.queue)} queued / "
+                    f"{sum(r is not None for r in self.active)} active "
+                    f"requests but a scheduler step made no progress")
+        if not self.queue and all(r is None for r in self.active):
+            return all_reqs
+        undone = [r.rid for r in all_reqs if not r.done]
+        raise RuntimeError(
+            f"run_until_drained: {len(undone)} request(s) undone after "
+            f"max_steps={max_steps} (rids {undone[:8]}...)")
 
     def stats(self) -> Dict[str, float]:
         out = {"steps": self.steps, "swaps": self.swaps,
                "swap_bytes": self.swap_bytes,
                "swap_rate": self.swaps / self.steps if self.steps else 0.0,
-               "applied": self._applied}
+               "applied": self._applied,
+               "prefill_dispatches": self.prefill_dispatches,
+               "prefill_prompt_tokens": self.prefill_prompt_tokens,
+               "ms_per_step": self.ms_per_step}
         if self.cache is not None:
             out["cache"] = self.cache.stats()
         return out

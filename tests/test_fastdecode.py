@@ -1,0 +1,338 @@
+"""FastDecode serving hot path: fused Pallas decode-attention kernel
+(interpret-mode parity vs the ref.py oracle over ragged per-slot pos,
+ring-buffer and sliding-window caches), chunked batched prefill (cache +
+token-stream parity vs per-token priming, across rr/aware/cached/q8
+legs and under AdapterCache eviction churn), dispatch-count bounds,
+ms_per_step auto-calibration, and the run_until_drained wedge guard."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.adapters import (InMemoryRegistry, extract_delta,
+                            quantize_delta)
+from repro.adapters.testing import perturb_rows as _tuned
+from repro.configs.base import (BLOCK_GLOBAL_ATTN, BLOCK_LOCAL_ATTN,
+                                BLOCK_RECURRENT, ModelConfig)
+from repro.kernels.decode_attention import (block_bounds,
+                                            cache_read_bytes,
+                                            decode_attention_fwd)
+from repro.kernels.ref import decode_attention_ref
+from repro.models import layers, model
+from repro.runtime.serve_loop import DecodeServer, Request
+
+K = jax.random.PRNGKey
+
+
+# --------------------------------------------------------------- kernel
+
+
+@pytest.mark.parametrize(
+    "B,C,H,KV,hd,window,ring,softcap",
+    [(3, 64, 4, 2, 32, 0, False, 0.0),      # GQA, ragged pos
+     (2, 128, 8, 2, 64, 32, False, 0.0),    # sliding window
+     (2, 32, 4, 4, 32, 32, True, 0.0),      # MHA ring buffer
+     (1, 48, 4, 1, 16, 0, False, 30.0),     # softcap, 4x group
+     (4, 96, 6, 3, 32, 48, True, 0.0)])     # ring, pos past the wrap
+def test_decode_attention_kernel_parity(B, C, H, KV, hd, window, ring,
+                                        softcap):
+    q = jax.random.normal(K(1), (B, 1, H, hd))
+    kc = jax.random.normal(K(2), (B, C, KV, hd))
+    vc = jax.random.normal(K(3), (B, C, KV, hd))
+    # ragged per-slot positions incl. the edges (0 and past-wrap)
+    pos = jnp.asarray(
+        np.random.RandomState(0).randint(0, 2 * C, B), jnp.int32)
+    pos = pos.at[0].set(0)
+    if not ring:
+        pos = jnp.minimum(pos, C - 1)
+    o = decode_attention_fwd(q, kc, vc, pos, window=window, ring=ring,
+                             softcap=softcap, block_k=32, interpret=True)
+    r = decode_attention_ref(q, kc, vc, pos, window=window, ring=ring,
+                             softcap=softcap)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                               rtol=1e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_kernel_dtypes(dtype):
+    q = jax.random.normal(K(1), (2, 1, 4, 64), dtype)
+    kc = jax.random.normal(K(2), (2, 96, 2, 64), dtype)
+    vc = jax.random.normal(K(3), (2, 96, 2, 64), dtype)
+    pos = jnp.asarray([7, 90], jnp.int32)
+    o = decode_attention_fwd(q, kc, vc, pos, block_k=32, interpret=True)
+    r = decode_attention_ref(q, kc, vc, pos)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=tol)
+
+
+def test_decode_attention_xla_fallback_matches_oracle():
+    """The grouped-einsum XLA path (no _repeat_kv materialization) stays
+    on the same oracle as the kernel."""
+    for (H, KV, window, ring) in [(4, 2, 0, False), (4, 4, 16, False),
+                                  (8, 2, 24, True), (6, 1, 0, False)]:
+        hd, C, B = 32, 48, 3
+        q = jax.random.normal(K(1), (B, 1, H, hd))
+        kc = jax.random.normal(K(2), (B, C, KV, hd))
+        vc = jax.random.normal(K(3), (B, C, KV, hd))
+        pos = jnp.asarray([0, 13, C - 1], jnp.int32)
+        o = layers.attention_decode(q, kc, vc, pos, window=window,
+                                    ring=ring)
+        r = decode_attention_ref(q, kc, vc, pos, window=window, ring=ring)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                   rtol=1e-4, atol=2e-5)
+
+
+def test_decode_attention_bytes_scale_with_pos():
+    """The analytic traffic model (what the index_map enforces): reads
+    grow with pos, never exceed full-cache scoring, and a sliding
+    window caps them."""
+    kw = dict(seq_len=256, kv_heads=2, head_dim=64, block_k=32)
+    lo, hi = block_bounds(jnp.asarray([0, 128, 255]), seq_len=256,
+                          block_k=32)
+    assert list(np.asarray(hi - lo + 1)) == [1, 5, 8]
+    b_low = cache_read_bytes(jnp.asarray([15]), **kw)
+    b_half = cache_read_bytes(jnp.asarray([127]), **kw)
+    b_full = cache_read_bytes(jnp.asarray([255]), **kw)
+    assert b_low < b_half < b_full
+    assert b_full == 2 * 256 * 2 * 64 * 2          # == full scoring
+    b_win = cache_read_bytes(jnp.asarray([255]), window=64, **kw)
+    assert b_win < b_half
+
+
+# ------------------------------------------------- chunked prefill: model
+
+
+@pytest.mark.parametrize("pattern,window", [
+    ((BLOCK_GLOBAL_ATTN,), 0),
+    ((BLOCK_LOCAL_ATTN, BLOCK_GLOBAL_ATTN), 8),   # ring-buffer stage
+])
+def test_prefill_into_slots_matches_per_token_priming(pattern, window):
+    cfg = ModelConfig(name="pf", family="dense", num_layers=4, d_model=32,
+                      num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                      remat=False, pattern=pattern, window_size=window)
+    params = model.init_params(K(0), cfg)
+    slots, max_seq = 3, 32
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 64, n) for n in (5, 9, 2)]   # ragged
+
+    def blend(new, old, mask):
+        return jax.tree.map(
+            lambda n, o: jnp.where(
+                mask.reshape((1, -1) + (1,) * (n.ndim - 2)), n, o),
+            new, old)
+
+    # per-token reference: each slot primed alone through decode_step
+    # with the serving loop's active-slot cache blend
+    cache_a = model.init_cache(cfg, slots, max_seq)
+    last = {}
+    for s, p in enumerate(prompts):
+        mask = jnp.asarray(np.arange(slots) == s)
+        for t, tok in enumerate(p):
+            tk = np.zeros((slots, 1), np.int32)
+            tk[s, 0] = int(tok)
+            pos = np.zeros(slots, np.int32)
+            pos[s] = t
+            lg, nc = model.decode_step(params, cfg, cache_a,
+                                       jnp.asarray(tk), jnp.asarray(pos))
+            cache_a = blend(nc, cache_a, mask)
+        last[s] = np.asarray(lg[s])
+
+    # chunked prefill, 4 positions per dispatch
+    cache_b = model.init_cache(cfg, slots, max_seq)
+    lengths = np.asarray([len(p) for p in prompts], np.int32)
+    first = {}
+    start, chunk = 0, 4
+    while start < lengths.max():
+        k = min(chunk, int(lengths.max()) - start)
+        tk = np.zeros((slots, k), np.int32)
+        for s, p in enumerate(prompts):
+            hi = min(len(p), start + k)
+            if hi > start:
+                tk[s, :hi - start] = p[start:hi]
+        lg, cache_b = model.prefill_into_slots(
+            params, cfg, cache_b, jnp.asarray(tk), jnp.asarray(lengths),
+            chunk_start=start)
+        for s, p in enumerate(prompts):
+            if start < len(p) <= start + k:
+                first[s] = np.asarray(lg[s])
+        start += k
+
+    for s in range(slots):
+        np.testing.assert_allclose(first[s], last[s], rtol=2e-2,
+                                   atol=1e-3)
+        assert int(np.argmax(first[s])) == int(np.argmax(last[s]))
+    # the scattered K/V rows (and untouched slots' rows) match the
+    # per-token writes — interpret-grade slack only
+    for a, b in zip(jax.tree.leaves(cache_a["stages"]),
+                    jax.tree.leaves(cache_b["stages"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=2e-2)
+
+
+def test_supports_slot_prefill_gates_families(tiny_cfg):
+    assert model.supports_slot_prefill(tiny_cfg)
+    rec = tiny_cfg.replace(pattern=(BLOCK_RECURRENT,), lru_width=32)
+    assert not model.supports_slot_prefill(rec)
+    # the server falls back to per-token priming instead of crashing
+    srv = DecodeServer(rec, {}, batch_slots=1, max_seq=16,
+                       cache=None)
+    assert not srv._slot_prefill
+
+
+# ------------------------------------------------ chunked prefill: server
+
+
+def _mixed_requests(cfg, tenancy, new_tokens=5, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size,
+                                               3 + (3 * i) % 9),
+                    max_new_tokens=new_tokens, adapter_id=t)
+            for i, t in enumerate(tenancy)]
+
+
+def test_chunked_prefill_parity_across_serving_legs(tiny_cfg,
+                                                   tiny_params):
+    """Token streams are bit-identical between per-token and chunked
+    priming, across rr/aware/cached/q8 legs — including AdapterCache
+    eviction churn (budget of ONE delta)."""
+    tunedA = _tuned(tiny_params, rows=(0, 2), scale=0.8, seed=10)
+    tunedB = _tuned(tiny_params, rows=(1, 3), scale=-0.6, seed=20)
+    deltas = {
+        "A": extract_delta(tiny_params, tunedA, meta={"adapter_id": "A"}),
+        "B": extract_delta(tiny_params, tunedB, meta={"adapter_id": "B"}),
+    }
+    churn_budget = deltas["A"].nbytes + 64
+    tenancy = ["A", "B", None, "B", "A", None, "B", "A"]
+    legs = {
+        "per_token": dict(prefill_chunk=0),
+        "chunk_rr": dict(prefill_chunk=4, adapter_aware=False),
+        "chunk_aware": dict(prefill_chunk=4),
+        "chunk_cached": dict(prefill_chunk=4, cache_bytes=churn_budget),
+        # q8 serves QUANTIZED deltas (different weights than fp32), so
+        # its chunked leg is checked against a q8 per-token leg
+        "q8_per_token": dict(prefill_chunk=0, q8=True),
+        "chunk_q8": dict(prefill_chunk=4, cache_bytes=churn_budget,
+                         q8=True),
+    }
+    outs, srvs = {}, {}
+    for leg, kw in legs.items():
+        kw = dict(kw)
+        reg = InMemoryRegistry(
+            {a: quantize_delta(d) for a, d in deltas.items()}
+            if kw.pop("q8", False) else dict(deltas))
+        reqs = _mixed_requests(tiny_cfg, tenancy)
+        srv = DecodeServer(tiny_cfg, tiny_params, batch_slots=2,
+                           max_seq=64, registry=reg, steps_per_turn=2,
+                           **kw)
+        for r in reqs:
+            srv.submit(r)
+        srv.run_until_drained()
+        assert all(r.done for r in reqs)
+        outs[leg] = {r.rid: tuple(r.out) for r in reqs}
+        srvs[leg] = srv
+    for leg in ("chunk_rr", "chunk_aware", "chunk_cached"):
+        assert outs[leg] == outs["per_token"], \
+            f"{leg} token streams diverged from per-token priming"
+    assert outs["chunk_q8"] == outs["q8_per_token"], \
+        "q8 chunked priming diverged from q8 per-token priming"
+    assert srvs["chunk_cached"].cache.evictions >= 1  # churn happened
+    # chunked spends strictly fewer dispatches on the same prompts
+    assert (srvs["chunk_aware"].prefill_dispatches
+            < srvs["per_token"].prefill_dispatches)
+    assert (srvs["chunk_aware"].prefill_prompt_tokens
+            == srvs["per_token"].prefill_prompt_tokens)
+
+
+def test_prefill_dispatch_bound_per_admitted_group(tiny_cfg,
+                                                   tiny_params):
+    """One admission of a full slot batch costs <= ceil(P/chunk) + 1
+    dispatches (P = longest prompt in the group)."""
+    chunk = 4
+    rng = np.random.default_rng(1)
+    srv = DecodeServer(tiny_cfg, tiny_params, batch_slots=3, max_seq=64,
+                       prefill_chunk=chunk)
+    reqs = [Request(rid=i, prompt=rng.integers(0, 8, n),
+                    max_new_tokens=2) for i, n in enumerate((11, 3, 7))]
+    for r in reqs:
+        srv.submit(r)
+    srv.step()
+    assert srv.prefill_dispatches <= math.ceil(11 / chunk) + 1
+    # bit-identical to the per-token leg on the same prompts
+    rng = np.random.default_rng(1)
+    srv0 = DecodeServer(tiny_cfg, tiny_params, batch_slots=3, max_seq=64,
+                        prefill_chunk=0)
+    reqs0 = [Request(rid=i, prompt=rng.integers(0, 8, n),
+                     max_new_tokens=2) for i, n in enumerate((11, 3, 7))]
+    for r in reqs0:
+        srv0.submit(r)
+    srv.run_until_drained()
+    srv0.run_until_drained()
+    assert ({r.rid: tuple(r.out) for r in reqs}
+            == {r.rid: tuple(r.out) for r in reqs0})
+    assert srv0.prefill_dispatches == 11 + 3 + 7   # P dispatches each
+
+
+def test_pallas_decode_impl_matches_xla_streams(tiny_cfg, tiny_params):
+    outs = {}
+    for impl in ("full", "pallas_interpret"):
+        rng = np.random.default_rng(2)
+        reqs = [Request(rid=i, prompt=rng.integers(0, 8, 3 + i),
+                        max_new_tokens=4) for i in range(3)]
+        srv = DecodeServer(tiny_cfg, tiny_params, batch_slots=3,
+                           max_seq=32, attn_impl=impl)
+        for r in reqs:
+            srv.submit(r)
+        srv.run_until_drained()
+        outs[impl] = {r.rid: tuple(r.out) for r in reqs}
+    assert outs["pallas_interpret"] == outs["full"]
+
+
+# --------------------------------------------- ms_per_step calibration
+
+
+def test_ms_per_step_auto_calibrates_from_wall_clock(tiny_cfg,
+                                                     tiny_params):
+    srv = DecodeServer(tiny_cfg, tiny_params, batch_slots=2, max_seq=32,
+                       ms_per_step="auto")
+    rng = np.random.default_rng(3)
+    for i in range(2):
+        srv.submit(Request(rid=i, prompt=rng.integers(0, 8, 3),
+                           max_new_tokens=8))
+    srv.run_until_drained()
+    assert srv._ms_samples >= 3
+    assert srv.ms_per_step > 0 and srv.ms_per_step != 1.0
+    assert srv.stats()["ms_per_step"] == srv.ms_per_step
+    # pinned float stays pinned (deterministic scheduling for tests)
+    srv2 = DecodeServer(tiny_cfg, tiny_params, batch_slots=2,
+                        max_seq=32, ms_per_step=2.5)
+    assert srv2.ms_per_step == 2.5 and not srv2._ms_auto
+
+
+# -------------------------------------------------- wedged-queue guard
+
+
+def test_run_until_drained_raises_on_wedged_queue(tiny_cfg,
+                                                  tiny_params,
+                                                  monkeypatch):
+    """A scheduler step that changes nothing would previously burn
+    max_steps silently and return undone requests — now it raises."""
+    srv = DecodeServer(tiny_cfg, tiny_params, batch_slots=1, max_seq=32)
+    rng = np.random.default_rng(4)
+    srv.submit(Request(rid=0, prompt=rng.integers(0, 8, 3),
+                       max_new_tokens=4))
+    monkeypatch.setattr(srv, "_admit", lambda group=None: None)
+    with pytest.raises(RuntimeError, match="wedged"):
+        srv.run_until_drained(max_steps=50)
+
+
+def test_run_until_drained_raises_when_budget_exhausted(tiny_cfg,
+                                                        tiny_params):
+    srv = DecodeServer(tiny_cfg, tiny_params, batch_slots=1, max_seq=64)
+    rng = np.random.default_rng(5)
+    srv.submit(Request(rid=0, prompt=rng.integers(0, 8, 3),
+                       max_new_tokens=30))
+    with pytest.raises(RuntimeError, match="undone"):
+        srv.run_until_drained(max_steps=3)

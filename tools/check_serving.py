@@ -4,7 +4,7 @@
 BlockLLM's <5%-of-params deltas are what make multi-tenant serving
 cheap; this gate keeps the serving-side wins from silently regressing
 the same way ``check_memory.py`` locks in the training-memory story.
-It runs the two serving benchmarks in quick mode:
+It runs the three serving benchmarks in quick mode:
 
 - ``benchmarks/bench_adapter_swap.py``  -> swap_bytes_ratio (tenant
   flip bytes / full reload) and q8_payload_ratio (int8 / fp32 payload),
@@ -12,6 +12,10 @@ It runs the two serving benchmarks in quick mode:
   swaps / adapter-aware+cached swaps), cache_hit_rate, swap_rate_cached,
   h2d_frac (host->device share of flip bytes) and p50/p99 request
   latency in decode steps,
+- ``benchmarks/bench_decode_path.py``   -> prefill_dispatch_ratio
+  (chunked / per-token priming dispatches), decode_bytes_ratio (fused
+  decode-attention cache reads / full-max_seq scoring at a half-full
+  cache) and ttft_p50 / ttft_p99 time-to-first-token in decode steps,
 
 and compares every metric against ``benchmarks/serve_baselines.json``
 with a relative tolerance band.  Each metric has an orientation: moving
@@ -52,16 +56,27 @@ ORIENTATION = {
     "h2d_frac": "lower",
     "p50_latency_steps": "lower",
     "p99_latency_steps": "lower",
+    "prefill_dispatch_ratio": "lower",
+    "decode_bytes_ratio": "lower",
+    "ttft_p50_steps": "lower",
+    "ttft_p99_steps": "lower",
 }
 
 
 def collect_metrics() -> dict:
     sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
-    from benchmarks import bench_adapter_swap, bench_serve_sched
+    from benchmarks import (bench_adapter_swap, bench_decode_path,
+                            bench_serve_sched)
 
     swap = bench_adapter_swap.run(quick=True)
     sched = bench_serve_sched.run(quick=True)
+    decode = bench_decode_path.run(quick=True)
     return {
+        "prefill_dispatch_ratio": float(
+            decode["prefill_dispatch_ratio"]),
+        "decode_bytes_ratio": float(decode["decode_bytes_ratio"]),
+        "ttft_p50_steps": float(decode["ttft_p50_steps"]),
+        "ttft_p99_steps": float(decode["ttft_p99_steps"]),
         "swap_bytes_ratio": float(swap["ratio"]),
         "q8_payload_ratio": float(swap["q8_payload_ratio"]),
         "swap_reduction": float(sched["swap_reduction"]),
