@@ -30,12 +30,17 @@ Per-request token streams must be bit-identical between per-token and
 chunked priming (the DecodeServer invariant: priming strategy is
 invisible to the decoded stream).
 
+``--trace-dir DIR`` writes one Chrome/Perfetto trace per serving leg
+(``decode_path_per_token.json`` / ``decode_path_chunked.json``) so the
+gate numbers above are explainable span by span.
+
     PYTHONPATH=src python -m benchmarks.bench_decode_path [--quick]
 """
 from __future__ import annotations
 
 import argparse
 import math
+from pathlib import Path
 
 import jax
 import numpy as np
@@ -45,6 +50,7 @@ from repro.kernels.decode_attention import (cache_read_bytes,
                                             decode_attention_fwd)
 from repro.kernels.ref import decode_attention_ref
 from repro.models import model
+from repro.obs import Tracer, write_trace
 from repro.runtime.serve_loop import DecodeServer, Request
 
 SLOTS = 4
@@ -59,9 +65,23 @@ def _requests(cfg, n_req, new_tokens, prompt_max, seed=0):
             for i in range(n_req)]
 
 
-def _serve(cfg, params, reqs, max_seq, **kw):
+def _trace_leg(trace_dir, stem):
+    """(tracer, finish) pair: tracer is None when tracing is off."""
+    if trace_dir is None:
+        return None, lambda srv: None
+    tracer = Tracer()
+
+    def finish(srv):
+        p = Path(trace_dir) / f"{stem}.json"
+        p.parent.mkdir(parents=True, exist_ok=True)
+        write_trace(p, tracer, srv.metrics)
+        print(f"trace: {len(tracer)} events -> {p}")
+    return tracer, finish
+
+
+def _serve(cfg, params, reqs, max_seq, tracer=None, **kw):
     srv = DecodeServer(cfg, params, batch_slots=SLOTS, max_seq=max_seq,
-                       **kw)
+                       tracer=tracer, **kw)
     for r in reqs:
         srv.submit(r)
     srv.run_until_drained(max_steps=20_000)
@@ -91,7 +111,7 @@ def _decode_bytes_ratio(cfg, max_seq, block_k):
     return fused / full, fused, full
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, trace_dir=None):
     max_seq = 64 if quick else 256
     n_req = 8 if quick else 16
     new_tokens = 6 if quick else 12
@@ -105,8 +125,10 @@ def run(quick: bool = False):
     legs = {}
     for name, kw in (("per_token", dict(prefill_chunk=0)),
                      ("chunked", dict(prefill_chunk=chunk))):
+        tracer, finish = _trace_leg(trace_dir, f"decode_path_{name}")
         reqs = _requests(cfg, n_req, new_tokens, prompt_max)
-        srv = _serve(cfg, params, reqs, max_seq, **kw)
+        srv = _serve(cfg, params, reqs, max_seq, tracer=tracer, **kw)
+        finish(srv)
         legs[name] = dict(srv=srv, reqs=reqs,
                           outs={r.rid: tuple(r.out) for r in reqs})
         print(f"{name:10s}: {srv.prefill_dispatches:3d} prefill "
@@ -170,4 +192,8 @@ def run(quick: bool = False):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    run(quick=ap.parse_args().quick)
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="write one Chrome/Perfetto trace per serving "
+                         "leg into DIR")
+    a = ap.parse_args()
+    run(quick=a.quick, trace_dir=a.trace_dir)

@@ -22,12 +22,17 @@ Reported (CSV name,us_per_call,derived):
   serve_p50_latency_steps / serve_p99_latency_steps
                           request completion latency, cached leg
 
+``--trace-dir DIR`` writes one Chrome/Perfetto trace per scheduler leg
+(``serve_sched_rr_uncached.json`` ...) — the swap/admission story behind
+each gate number, one lane per tenant plus sched/cache lanes.
+
     PYTHONPATH=src python -m benchmarks.bench_serve_sched [--quick]
 """
 from __future__ import annotations
 
 import argparse
 import time
+from pathlib import Path
 
 import jax
 import numpy as np
@@ -37,6 +42,7 @@ from repro.adapters import (InMemoryRegistry, extract_delta,
                             quantize_delta)
 from repro.adapters.testing import perturb_rows as _perturbed
 from repro.models import model
+from repro.obs import Tracer, write_trace
 from repro.runtime.serve_loop import DecodeServer, Request
 
 STEPS_PER_TURN = 4
@@ -67,13 +73,14 @@ def _requests(cfg, tenancy, new_tokens, rid0=0, seed=0):
             for i, t in enumerate(tenancy)]
 
 
-def _serve(cfg, base, registry, waves, **server_kw):
+def _serve(cfg, base, registry, waves, trace_path=None, **server_kw):
     """Drive one server through successive request waves (drain between
     waves) — sustained traffic that revisits every tenant, which is
     what the capture path of the device cache exists for."""
+    tracer = Tracer() if trace_path is not None else None
     srv = DecodeServer(cfg, base, batch_slots=SLOTS, max_seq=128,
                        registry=registry, steps_per_turn=STEPS_PER_TURN,
-                       **server_kw)
+                       tracer=tracer, **server_kw)
     t0 = time.monotonic()
     for wave in waves:
         for r in wave:
@@ -82,6 +89,10 @@ def _serve(cfg, base, registry, waves, **server_kw):
     wall = time.monotonic() - t0
     reqs = [r for wave in waves for r in wave]
     assert all(r.done for r in reqs), "leg failed to drain"
+    if tracer is not None:
+        trace_path.parent.mkdir(parents=True, exist_ok=True)
+        write_trace(trace_path, tracer, srv.metrics)
+        print(f"trace: {len(tracer)} events -> {trace_path}")
     return srv, wall
 
 
@@ -94,7 +105,11 @@ def _latency(reqs):
                       np.float64)
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, trace_dir=None):
+    def _tpath(leg):
+        return (Path(trace_dir) / f"serve_sched_{leg}.json"
+                if trace_dir is not None else None)
+
     cfg = common.small_llama("serve-sched", layers=4, d=32, vocab=128)
     n_req = 24 if quick else 48
     new_tokens = 8 if quick else 16
@@ -121,7 +136,8 @@ def run(quick: bool = False):
             ("aware_cached", dict(adapter_aware=True,
                                   cache_bytes=64 * 2 ** 20))):
         w = waves()
-        srv, wall = _serve(cfg, base, registry, w, **kw)
+        srv, wall = _serve(cfg, base, registry, w,
+                           trace_path=_tpath(name), **kw)
         reqs = [r for wave in w for r in wave]
         legs[name] = dict(srv=srv, reqs=reqs, wall=wall,
                           outs=_outs(reqs))
@@ -194,4 +210,8 @@ def run(quick: bool = False):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    run(quick=ap.parse_args().quick)
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="write one Chrome/Perfetto trace per scheduler "
+                         "leg into DIR")
+    a = ap.parse_args()
+    run(quick=a.quick, trace_dir=a.trace_dir)

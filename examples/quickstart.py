@@ -61,3 +61,33 @@ print(f"re-selections: {state.meta['reselections']}, "
 #    (benchmarks/bench_decode_path.py measures both).  Serving perf is
 #    CI-gated: re-baseline deliberately with
 #    `python tools/check_serving.py --update`.
+
+# 5. Tracing a serve session (TraceKit, repro.obs).  Every layer of the
+#    stack is instrumented behind a `tracer=None` no-op default:
+#
+#        PYTHONPATH=src python -m repro.launch.serve \
+#            --quick --demo-adapters 2 --cache-bytes 16777216 \
+#            --trace /tmp/serve.json
+#
+#    Load /tmp/serve.json at https://ui.perfetto.dev (or
+#    chrome://tracing).  Lanes: one `tenant:<id>` row per adapter (and
+#    `tenant:base`) holding each request's lifecycle — submit instant,
+#    retroactive `queue_wait`, `prefill` chunks, `decode_step`s, and the
+#    whole-`request` span; a `sched` row with `admit`, `swap_apply` /
+#    `swap_revert` (delta row flips between tenants) and `jit_compile`
+#    instants; a `cache` row with AdapterCache hits/promotions/
+#    evictions/captures.  A `.jsonl` path writes the append-friendly
+#    event log instead; `--metrics-every N` dumps the typed metrics
+#    registry (decode/*, prefill/*, sched/*) as greppable text, and
+#    `DecodeServer.stats()` returns the same numbers as nested
+#    sections.  Training mirrors it: `launch.train --trace t.jsonl`
+#    records per-step spans (data/step/ckpt/export lanes) plus BlockLLM
+#    selection telemetry per step — sel_q (selected fraction), sel_churn
+#    (Jaccard distance between consecutive plans), sel_grad_concentration
+#    (gradient-energy share of the selected blocks),
+#    sel_steps_since_reselect.  Kernel-level timing is opt-in:
+#    `repro.kernels.ops.enable_kernel_profiling(tracer, metrics)` wraps
+#    each Pallas op call with block-until-ready timing and its analytic
+#    bytes model (achieved GB/s next to the roofline).  Traces are
+#    CI-validated by tools/check_trace.py (the trace-smoke job);
+#    benchmarks accept --trace-dir to emit one trace per measured leg.

@@ -33,6 +33,7 @@ comes back later is simply re-promoted from the host tier.
 """
 from __future__ import annotations
 
+import time
 from collections import OrderedDict
 from typing import Dict
 
@@ -54,10 +55,14 @@ class AdapterCache:
     the whole budget is served but not retained (``bypasses``).
     """
 
-    def __init__(self, registry, *, cache_bytes: int = 64 * 2 ** 20):
+    def __init__(self, registry, *, cache_bytes: int = 64 * 2 ** 20,
+                 tracer=None):
         assert cache_bytes > 0, "use cache=None to disable caching"
         self.registry = registry
         self.cache_bytes = int(cache_bytes)
+        # TraceKit: promote/evict/capture land on the "cache" lane;
+        # tracer=None (the default) keeps every hook a no-op
+        self.tracer = tracer
         self._slots: "OrderedDict[str, SparseDelta]" = OrderedDict()
         self._nbytes: Dict[str, int] = {}
         self.hits = 0
@@ -101,9 +106,13 @@ class AdapterCache:
         self._slots.move_to_end(adapter_id)
         while self.resident_bytes() > self.cache_bytes:
             victim, _ = next(iter(self._slots.items()))
+            nb_v = self._nbytes[victim]
             del self._slots[victim]
             del self._nbytes[victim]
             self.evictions += 1
+            if self.tracer is not None:
+                self.tracer.instant("cache_evict", lane="cache",
+                                    adapter=str(victim), bytes=nb_v)
         return True
 
     # ------------------------------------------------------------------ #
@@ -123,16 +132,25 @@ class AdapterCache:
                 self.hits += 1
                 self._slots.move_to_end(adapter_id)
                 self.d2d_bytes += self._nbytes[adapter_id]
+                if self.tracer is not None:
+                    self.tracer.instant("cache_hit", lane="cache",
+                                        adapter=str(adapter_id),
+                                        bytes=self._nbytes[adapter_id])
                 return d
             self.drop(adapter_id)
             self.stale_drops += 1
         self.misses += 1
         version = self._registry_version(adapter_id)
+        t0 = time.monotonic_ns() if self.tracer is not None else 0
         host = self.registry.get(adapter_id)
         self.h2d_bytes += host.nbytes      # q8 payloads upload quantized
         dev = self._promote(host)
         dev.meta["registry_version"] = version
         self._admit(adapter_id, dev)
+        if self.tracer is not None:
+            self.tracer.add_span("cache_promote", t0, time.monotonic_ns(),
+                                 lane="cache", adapter=str(adapter_id),
+                                 h2d_bytes=host.nbytes)
         return dev
 
     def put_back(self, adapter_id: str, displaced_of_revert: SparseDelta):
@@ -162,6 +180,9 @@ class AdapterCache:
                 "captured": True, "registry_version": version}
         if self._admit(adapter_id, SparseDelta(entries, meta)):
             self.captures += 1
+            if self.tracer is not None:
+                self.tracer.instant("cache_capture", lane="cache",
+                                    adapter=str(adapter_id))
 
     # ------------------------------------------------------------------ #
     # introspection

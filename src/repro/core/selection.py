@@ -204,3 +204,53 @@ def should_reselect(loss_history: List[float], patience: int) -> bool:
     cur = loss_history[-1]
     window = loss_history[-patience - 1:-1]
     return cur >= (sum(window) / len(window))
+
+
+# -- selection telemetry (TraceKit) ------------------------------------- #
+
+def plan_units(plan: Plan) -> frozenset:
+    """The set of unit names a plan updates (rows + active leaves) —
+    the identity used for churn accounting."""
+    units = set(plan.structure.active_leaves)
+    for sid, idx in plan.stack_idx.items():
+        for g in np.asarray(idx).tolist():
+            units.add(f"{sid}/g{g}")
+    return frozenset(units)
+
+
+def plan_churn(prev: Optional[Plan], new: Plan) -> float:
+    """Jaccard *distance* between consecutive plans' selected-unit sets,
+    in [0, 1]: 0 = reselection kept the same blocks, 1 = disjoint.
+
+    This is the "which blocks is BlockLLM actually churning?" signal —
+    high churn under the patience trigger means the norm dictionary is
+    still exploring; churn ~0 means selection has converged and a longer
+    ``reselect_every`` would save probe gradients.
+    """
+    if prev is None:
+        return 1.0
+    a, b = plan_units(prev), plan_units(new)
+    union = a | b
+    if not union:
+        return 0.0
+    return 1.0 - len(a & b) / len(union)
+
+
+def norm_concentration(norms: Dict[str, float], top_frac: float) -> float:
+    """Share of total squared gradient norm held by the top ``top_frac``
+    fraction of units, in (0, 1].
+
+    The AdaRankGrad-style signal: concentration near 1 says gradient
+    energy lives in few blocks (aggressive sparsity is safe); near
+    ``top_frac`` says energy is spread uniformly.  Non-finite norms
+    (optimistic-init +inf for never-probed units) are excluded.
+    """
+    vals = sorted((v * v for v in norms.values() if math.isfinite(v)),
+                  reverse=True)
+    if not vals:
+        return 0.0
+    total = sum(vals)
+    if total <= 0.0:
+        return 0.0
+    k = max(1, int(math.ceil(len(vals) * min(max(top_frac, 0.0), 1.0))))
+    return sum(vals[:k]) / total

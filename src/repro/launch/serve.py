@@ -83,7 +83,25 @@ def main(argv=None):
     ap.add_argument("--ms-per-step", default="1.0",
                     help="SLO conversion: decode-step time in ms, or "
                          "'auto' to calibrate from a wall-clock EMA")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a TraceKit trace of the run: .jsonl = "
+                         "event log, anything else = Chrome/Perfetto "
+                         "trace JSON (load at ui.perfetto.dev)")
+    ap.add_argument("--metrics-every", type=int, default=0,
+                    help="dump the metrics registry as text every N "
+                         "decode steps (0 = only the final summary)")
+    ap.add_argument("--quick", action="store_true",
+                    help="small smoke preset: fewer requests/tokens "
+                         "(CI trace-smoke uses this)")
+    ap.add_argument("--demo-adapters", type=int, default=0,
+                    help="build N synthetic in-memory adapters (row "
+                         "perturbations of the base) so multi-tenant "
+                         "scheduling/swaps run without a registry dir")
     args = ap.parse_args(argv)
+    if args.quick:
+        args.requests = min(args.requests, 6)
+        args.new_tokens = min(args.new_tokens, 8)
+        args.reduce = max(args.reduce, 8)
 
     import jax
     import numpy as np
@@ -110,6 +128,28 @@ def main(argv=None):
             raise SystemExit(f"adapters not in registry: {missing}")
         tenants += ids
         print(f"multi-tenant: base + {len(ids)} adapter(s) {ids}")
+    elif args.demo_adapters > 0:
+        # synthetic tenants: row-perturbed copies of the base, published
+        # to an in-memory registry — exercises the full swap/scheduling
+        # path (the CI trace-smoke asserts swap spans appear)
+        from repro.adapters import extract_delta
+        from repro.adapters.registry import InMemoryRegistry
+        from repro.adapters.testing import perturb_rows
+        registry = InMemoryRegistry()
+        ids = []
+        for i in range(args.demo_adapters):
+            aid = f"demo{i}"
+            tuned = perturb_rows(params, rows=(1 + i % 2, 3), seed=i)
+            registry.put(aid, extract_delta(params, tuned,
+                                            meta={"adapter_id": aid}))
+            ids.append(aid)
+        tenants += ids
+        print(f"multi-tenant: base + {len(ids)} demo adapter(s) {ids}")
+
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+        tracer = Tracer()
 
     srv = DecodeServer(cfg, params, batch_slots=args.slots,
                        max_seq=args.max_seq, registry=registry,
@@ -120,7 +160,8 @@ def main(argv=None):
                        attn_impl=args.attn_impl,
                        prefill_chunk=args.prefill_chunk,
                        ms_per_step=("auto" if args.ms_per_step == "auto"
-                                    else float(args.ms_per_step)))
+                                    else float(args.ms_per_step)),
+                       tracer=tracer)
     rng = np.random.default_rng(args.seed)
     reqs = [Request(rid=i,
                     prompt=rng.integers(0, cfg.vocab_size, 4 + i % 4),
@@ -131,8 +172,15 @@ def main(argv=None):
     for r in reqs:
         srv.submit(r)
     import time
+
+    def _periodic(s):
+        if args.metrics_every and s.steps \
+                and s.steps % args.metrics_every == 0:
+            print(f"-- metrics @ decode step {s.steps} --")
+            print(s.metrics.dump_text(), flush=True)
+
     t0 = time.monotonic()
-    srv.run_until_drained()
+    srv.run_until_drained(on_step=_periodic if args.metrics_every else None)
     dt = time.monotonic() - t0
     tok = sum(len(r.out) for r in reqs)
     print(f"served {len(reqs)} requests, {tok} tokens in {dt:.2f}s "
@@ -145,10 +193,11 @@ def main(argv=None):
              if args.ms_per_step == "auto" else ""))
     if registry is not None:
         s = srv.stats()
+        reg_stats = getattr(registry, "stats", dict)()
         print(f"adapter swaps: {s['swaps']} "
               f"({s['swap_rate']:.3f}/step), "
               f"{s['swap_bytes'] / 2 ** 20:.2f} MiB moved; "
-              f"registry: {registry.stats()}")
+              f"registry: {reg_stats}")
         if srv.cache is not None:
             c = srv.cache.stats()
             print(f"adapter cache: {c['resident']} resident "
@@ -157,6 +206,10 @@ def main(argv=None):
                   f"hit rate {c['hit_rate']:.0%}, "
                   f"h2d {c['h2d_bytes'] / 2 ** 20:.2f} MiB vs "
                   f"d2d {c['d2d_bytes'] / 2 ** 20:.2f} MiB")
+    if tracer is not None:
+        from repro.obs import write_trace
+        p = write_trace(args.trace, tracer, srv.metrics)
+        print(f"trace: {len(tracer)} events -> {p}")
     for r in reqs[:3]:
         tag = f" [{r.adapter_id or 'base'}]"
         print(f"  req {r.rid}{tag}: {list(r.prompt)} -> {r.out}")

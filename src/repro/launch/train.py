@@ -118,6 +118,13 @@ def main(argv=None):
                     help="divide model dims by this factor (CPU runs)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a TraceKit trace: .jsonl = event log "
+                         "(per-step selection telemetry), else Chrome/"
+                         "Perfetto trace JSON")
+    ap.add_argument("--metrics-every", type=int, default=0,
+                    help="dump the metrics registry as text every N "
+                         "steps (0 = off)")
     ap.add_argument("--tpu-flags", action="store_true",
                     help="append latency-hiding XLA flags (set BEFORE jax)")
     args = ap.parse_args(argv)
@@ -159,13 +166,25 @@ def main(argv=None):
                                            cfg.encoder_feature_dim))
         return b
 
+    tracer, metrics = None, None
+    if args.trace or args.metrics_every:
+        from repro.obs import MetricsRegistry, Tracer
+        metrics = MetricsRegistry()
+        if args.trace:
+            tracer = Tracer()
     out = run(trainer, batch_fn,
               TrainLoopConfig(total_steps=args.steps,
                               ckpt_every=args.ckpt_every,
-                              ckpt_dir=args.ckpt_dir))
+                              ckpt_dir=args.ckpt_dir,
+                              metrics_every=args.metrics_every),
+              tracer=tracer, metrics=metrics)
     rep = trainer.memory_report()
     print(f"final loss: {out['losses'][-1]:.4f}")
     print("memory report:", {k: f"{v/2**20:.1f}MiB" for k, v in rep.items()})
+    if tracer is not None:
+        from repro.obs import write_trace
+        p = write_trace(args.trace, tracer, metrics)
+        print(f"trace: {len(tracer)} events -> {p}")
     return out
 
 

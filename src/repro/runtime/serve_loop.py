@@ -70,6 +70,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as model_lib
+from repro.obs import MetricsRegistry
 
 BASE = None  # adapter id of the un-adapted base model
 
@@ -86,6 +87,21 @@ class Request:
     submit_step: int = -1       # decode-step clock at submit()
     first_token_step: int = -1  # decode-step clock at first output token
     finish_step: int = -1       # decode-step clock at completion
+    submit_ns: int = -1         # monotonic clock at submit() (tracing)
+
+
+def _lane(adapter_id: Optional[str]) -> str:
+    """One trace lane per tenant; the base model gets its own."""
+    return f"tenant:{adapter_id}" if adapter_id is not BASE else "tenant:base"
+
+
+def _jit_cache_size(fn) -> int:
+    """Compiled-entry count of a jitted fn (-1 when the jax version does
+    not expose it).  Growth across a call == that call compiled."""
+    try:
+        return fn._cache_size()
+    except Exception:
+        return -1
 
 
 @functools.lru_cache(maxsize=None)
@@ -140,8 +156,15 @@ class DecodeServer:
                  aging_steps: Optional[int] = None,
                  ms_per_step: Union[float, str] = 1.0,
                  cache_bytes: int = 0, cache=None,
-                 prefill_chunk: int = 64):
+                 prefill_chunk: int = 64, tracer=None, metrics=None):
         self.cfg = cfg
+        # TraceKit: tracer=None disables tracing (hot paths guard with a
+        # single `is None` check — no NullTracer dispatch).  The metrics
+        # registry is always live: it is the source of the stats()
+        # sections, and its per-step cost (a few uncontended lock
+        # acquires) is noise next to a jitted decode dispatch.
+        self.tracer = tracer
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         if registry is not None:
             # the server owns its resident weights: hot swaps donate the
             # edited leaves in place, so they must not alias caller arrays
@@ -168,7 +191,11 @@ class DecodeServer:
             if registry is None:
                 raise ValueError("cache_bytes needs an adapter registry")
             from repro.adapters.device_cache import AdapterCache
-            self.cache = AdapterCache(registry, cache_bytes=cache_bytes)
+            self.cache = AdapterCache(registry, cache_bytes=cache_bytes,
+                                      tracer=tracer)
+        elif self.cache is not None and tracer is not None \
+                and getattr(self.cache, "tracer", None) is None:
+            self.cache.tracer = tracer
         self.queue: List[Request] = []
         self.active: List[Optional[Request]] = [None] * batch_slots
         self.pos = np.zeros(batch_slots, np.int32)  # next write index
@@ -192,6 +219,20 @@ class DecodeServer:
                               and model_lib.supports_slot_prefill(cfg))
         self.prefill_dispatches = 0      # model dispatches spent priming
         self.prefill_prompt_tokens = 0   # prompt tokens primed
+        # pre-register the registry instruments so the stats() sections
+        # exist from step zero (gates diff fixed key sets)
+        m = self.metrics
+        for c in ("decode/steps", "decode/tokens", "prefill/dispatches",
+                  "prefill/prompt_tokens", "sched/swaps",
+                  "sched/swap_bytes", "sched/compiles", "sched/submitted",
+                  "sched/finished"):
+            m.counter(c)
+        for g in ("decode/ms_per_step", "sched/queue_depth",
+                  "sched/swap_rate"):
+            m.gauge(g)
+        for h in ("decode/step_ms", "sched/request_ms",
+                  "sched/queue_wait_ms"):
+            m.histogram(h)
 
     def submit(self, req: Request):
         if req.adapter_id is not BASE:
@@ -205,7 +246,13 @@ class DecodeServer:
                 raise ValueError(f"request {req.rid}: adapter "
                                  f"{req.adapter_id!r} not in registry")
         req.submit_step = self.steps
+        req.submit_ns = time.monotonic_ns()
         self.queue.append(req)
+        self.metrics.counter("sched/submitted").inc()
+        if self.tracer is not None:
+            self.tracer.instant("submit", lane=_lane(req.adapter_id),
+                                rid=req.rid, adapter=str(req.adapter_id),
+                                prompt_len=len(req.prompt))
 
     # ------------------------------------------------------------------ #
     # adapter swapping
@@ -219,7 +266,9 @@ class DecodeServer:
         if adapter_id == self._applied:
             return
         from repro.adapters import delta as delta_lib
+        tr = self.tracer
         if self._applied is not BASE:
+            t0 = time.monotonic_ns() if tr is not None else 0
             disp, self._displaced = self._displaced, None
             # the revert's displaced rows are the leaving adapter's exact
             # resident values — capture them into the device cache so the
@@ -233,10 +282,17 @@ class DecodeServer:
                 self.registry.release(self._applied)
             # state committed per half-swap: if the apply below fails the
             # server is consistently back on the base model
+            if tr is not None:
+                tr.add_span("swap_revert", t0, time.monotonic_ns(),
+                            lane="sched", adapter=str(self._applied),
+                            bytes=disp.nbytes)
             self._applied = BASE
             self.swap_bytes += disp.nbytes
             self.swaps += 1
+            self.metrics.counter("sched/swaps").inc()
+            self.metrics.counter("sched/swap_bytes").inc(disp.nbytes)
         if adapter_id is not BASE:
+            t0 = time.monotonic_ns() if tr is not None else 0
             if self.cache is not None:
                 d = self.cache.get(adapter_id)
             else:
@@ -248,9 +304,15 @@ class DecodeServer:
                 if self.cache is None:
                     self.registry.release(adapter_id)
                 raise
+            if tr is not None:
+                tr.add_span("swap_apply", t0, time.monotonic_ns(),
+                            lane="sched", adapter=str(adapter_id),
+                            bytes=d.nbytes)
             self._applied = adapter_id
             self.swap_bytes += d.nbytes
             self.swaps += 1
+            self.metrics.counter("sched/swaps").inc()
+            self.metrics.counter("sched/swap_bytes").inc(d.nbytes)
 
     def restore_base(self):
         """Revert any applied adapter — ``self.params`` is the pristine
@@ -414,27 +476,48 @@ class DecodeServer:
             admitted.append((slot, req))
         if not admitted:
             return
+        tr = self.tracer
+        if tr is not None:
+            now = time.monotonic_ns()
+            for _, req in admitted:
+                # retroactive: the wait ends at this admission
+                if req.submit_ns >= 0:
+                    tr.add_span("queue_wait", req.submit_ns, now,
+                                lane=_lane(req.adapter_id), rid=req.rid)
+        for _, req in admitted:
+            if req.submit_ns >= 0:
+                self.metrics.histogram("sched/queue_wait_ms").observe(
+                    (time.monotonic_ns() - req.submit_ns) / 1e6)
+        admit_t0 = time.monotonic_ns() if tr is not None else 0
         firsts = (self._prime_chunked(admitted) if self._slot_prefill
                   else self._prime_tokenwise(admitted))
+        if tr is not None:
+            tr.add_span("admit", admit_t0, time.monotonic_ns(),
+                        lane="sched", group=str(group), count=len(admitted))
         for (slot, req), first in zip(admitted, firsts):
             req.out.append(first)
             req.first_token_step = self.steps
             self.tokens[slot, 0] = first
             self.pos[slot] = len(req.prompt)
             self.prefill_prompt_tokens += len(req.prompt)
+            self.metrics.counter("prefill/prompt_tokens").inc(
+                len(req.prompt))
             if len(req.out) >= req.max_new_tokens:
                 req.done = True
                 req.finish_step = self.steps
                 self.active[slot] = None
+                self._finish(req)
 
     def _prime_tokenwise(self, admitted) -> List[int]:
         """Legacy priming: teacher-force each prompt through the decode
         step, one token (= one whole-model dispatch) at a time, one
         request at a time.  Returns each request's first new token."""
+        tr = self.tracer
         firsts = []
         for slot, req in admitted:
             logits = None
             toks = self.tokens.copy()
+            t0 = time.monotonic_ns() if tr is not None else 0
             for t, tok in enumerate(req.prompt):
                 toks[slot, 0] = int(tok)
                 pos = self.pos.copy()
@@ -443,6 +526,11 @@ class DecodeServer:
                     self.params, self.cache_state, jnp.asarray(toks),
                     jnp.asarray(pos), jnp.asarray(self._mask(slot)))
                 self.prefill_dispatches += 1
+            self.metrics.counter("prefill/dispatches").inc(len(req.prompt))
+            if tr is not None:
+                tr.add_span("prefill", t0, time.monotonic_ns(),
+                            lane="sched", kind="tokenwise", rid=req.rid,
+                            tokens=len(req.prompt))
             # final prime logits predict the first new token
             firsts.append(int(jnp.argmax(logits[slot])))
         return firsts
@@ -453,6 +541,7 @@ class DecodeServer:
         positions per dispatch (tail chunks bucketed to powers of two).
         K/V rows land directly in the slot-batched cache; the chunk
         covering each prompt's last token yields its first new token."""
+        tr = self.tracer
         lengths = np.zeros(self.slots, np.int32)
         for slot, req in admitted:
             lengths[slot] = len(req.prompt)
@@ -468,9 +557,21 @@ class DecodeServer:
                 if hi > start:
                     toks[slot, :hi - start] = np.asarray(
                         req.prompt[start:hi], np.int32)
-            logits, self.cache_state = _prefill_fn(self.cfg, k, start)(
+            pf = _prefill_fn(self.cfg, k, start)
+            before = _jit_cache_size(pf)
+            t0 = time.monotonic_ns() if tr is not None else 0
+            logits, self.cache_state = pf(
                 self.params, self.cache_state, jnp.asarray(toks),
                 jnp.asarray(lengths))
+            if tr is not None:
+                t1 = time.monotonic_ns()
+                compiled = _jit_cache_size(pf) > before >= 0
+                tr.add_span("prefill", t0, t1, lane="sched", kind="chunk",
+                            start=start, chunk=k, compiled=compiled)
+                if compiled:
+                    tr.instant("jit_compile", lane="sched", fn="prefill",
+                               chunk=k, chunk_start=start)
+            self.metrics.counter("prefill/dispatches").inc()
             self.prefill_dispatches += 1
             lg = None
             for slot, req in admitted:
@@ -481,31 +582,67 @@ class DecodeServer:
             start += k
         return [firsts[slot] for slot, _ in admitted]
 
+    def _finish(self, req: Request):
+        """Bookkeeping for a completed request (trace span + metrics)."""
+        self.metrics.counter("sched/finished").inc()
+        if req.submit_ns >= 0:
+            now = time.monotonic_ns()
+            self.metrics.histogram("sched/request_ms").observe(
+                (now - req.submit_ns) / 1e6)
+            if self.tracer is not None:
+                self.tracer.add_span(
+                    "request", req.submit_ns, now,
+                    lane=_lane(req.adapter_id), rid=req.rid,
+                    adapter=str(req.adapter_id), tokens=len(req.out))
+
     def step(self) -> int:
         """One decode micro-step for the scheduled adapter group;
         returns #finished requests."""
         group = self._schedule()
         self._ensure_adapter(group)
         self._admit(group)
+        self.metrics.gauge("sched/queue_depth").set(len(self.queue))
         mask = self._mask(group=group)
         if not mask.any():
             self._turn_left = 0  # group drained during admission: rotate
             return 0
-        t0 = time.monotonic()
+        # compile detection: the shared jitted fn's cache growing across
+        # this call means THIS step paid a fresh compile — exclude it
+        # from the ms_per_step EMA (a compile-laden sample would poison
+        # the SLO clock for ~5 samples) and record it as an event
+        before = _jit_cache_size(self._decode)
+        t0_ns = time.monotonic_ns()
         logits, self.cache_state = self._decode(
             self.params, self.cache_state, jnp.asarray(self.tokens),
             jnp.asarray(self.pos), jnp.asarray(mask))
         nxt = np.asarray(jnp.argmax(logits, -1))  # host sync point
-        if self._ms_auto:
-            dt = (time.monotonic() - t0) * 1e3
+        t1_ns = time.monotonic_ns()
+        after = _jit_cache_size(self._decode)
+        # no _cache_size() on this jax: fall back to skip-first-step
+        compiled = (after > before) if before >= 0 else (self.steps == 0)
+        dt = (t1_ns - t0_ns) / 1e6
+        if compiled:
+            self.metrics.counter("sched/compiles").inc()
+        if self.tracer is not None:
+            self.tracer.add_span("decode_step", t0_ns, t1_ns,
+                                 lane=_lane(group), step=self.steps,
+                                 batch=int(mask.sum()), compiled=compiled)
+            if compiled:
+                self.tracer.instant("jit_compile", lane="sched",
+                                    fn="decode", step=self.steps)
+        if not compiled:
+            self.metrics.histogram("decode/step_ms").observe(dt)
+        if self._ms_auto and not compiled:
+            # EMA over compile-free samples only; first one seeds it
             self._ms_samples += 1
-            # skip the compile-laden first step; EMA after that
-            if self._ms_samples == 2:
+            if self._ms_samples == 1:
                 self.ms_per_step = dt
-            elif self._ms_samples > 2:
+            else:
                 self.ms_per_step = 0.2 * dt + 0.8 * self.ms_per_step
         finished = 0
         self.steps += 1
+        self.metrics.counter("decode/steps").inc()
+        self.metrics.counter("decode/tokens").inc(int(mask.sum()))
         self._turn_left -= 1
         self._last_served[group] = self.steps
         for slot, req in enumerate(self.active):
@@ -521,6 +658,7 @@ class DecodeServer:
                 req.finish_step = self.steps
                 self.active[slot] = None
                 finished += 1
+                self._finish(req)
         if not self._group_has_work(group):
             self._turn_left = 0
         return finished
@@ -530,16 +668,21 @@ class DecodeServer:
                 sum(r is not None for r in self.active),
                 sum(len(r.out) for r in self.active if r is not None))
 
-    def run_until_drained(self, max_steps=10_000) -> List[Request]:
+    def run_until_drained(self, max_steps=10_000,
+                          on_step=None) -> List[Request]:
         """Step until queue and slots are empty.  A wedged queue — a
         step that changes NOTHING (no decode, no admission, no
         completion) would repeat identically forever — raises instead of
         silently burning ``max_steps`` and returning undone requests;
-        so does running out of ``max_steps`` with work left."""
+        so does running out of ``max_steps`` with work left.
+        ``on_step(server)`` (if given) runs after every scheduler step —
+        the launchers hook periodic metrics dumps here."""
         all_reqs = list(self.queue)
         for _ in range(max_steps):
             before = self._progress_key()
             self.step()
+            if on_step is not None:
+                on_step(self)
             if not self.queue and all(r is None for r in self.active):
                 return all_reqs
             if self._progress_key() == before:
@@ -555,14 +698,32 @@ class DecodeServer:
             f"run_until_drained: {len(undone)} request(s) undone after "
             f"max_steps={max_steps} (rids {undone[:8]}...)")
 
-    def stats(self) -> Dict[str, float]:
-        out = {"steps": self.steps, "swaps": self.swaps,
-               "swap_bytes": self.swap_bytes,
-               "swap_rate": self.swaps / self.steps if self.steps else 0.0,
-               "applied": self._applied,
-               "prefill_dispatches": self.prefill_dispatches,
-               "prefill_prompt_tokens": self.prefill_prompt_tokens,
-               "ms_per_step": self.ms_per_step}
+    def stats(self) -> Dict[str, object]:
+        """Nested ``prefill`` / ``decode`` / ``cache`` / ``sched``
+        sections sourced from the metrics registry, plus the pre-TraceKit
+        flat keys as deprecated aliases (``tools/check_serving.py``
+        baselines and older callers read those; new consumers should use
+        the sections)."""
+        swap_rate = self.swaps / self.steps if self.steps else 0.0
+        self.metrics.gauge("decode/ms_per_step").set(self.ms_per_step)
+        self.metrics.gauge("sched/swap_rate").set(swap_rate)
+        nested = self.metrics.nested()
+        sched = dict(nested.get("sched", {}))
+        sched["applied"] = self._applied
+        out: Dict[str, object] = {
+            "decode": dict(nested.get("decode", {})),
+            "prefill": dict(nested.get("prefill", {})),
+            "sched": sched,
+        }
         if self.cache is not None:
             out["cache"] = self.cache.stats()
+        # deprecated flat aliases (pre-TraceKit layout)
+        out.update({
+            "steps": self.steps, "swaps": self.swaps,
+            "swap_bytes": self.swap_bytes, "swap_rate": swap_rate,
+            "applied": self._applied,
+            "prefill_dispatches": self.prefill_dispatches,
+            "prefill_prompt_tokens": self.prefill_prompt_tokens,
+            "ms_per_step": self.ms_per_step,
+        })
         return out

@@ -27,6 +27,7 @@ from pathlib import Path
 from typing import Any, Callable, Dict, Optional
 
 from repro.checkpoint import checkpointer as ckpt_lib
+from repro.obs import StepEmitter
 from repro.runtime.straggler import StragglerConfig, StragglerMonitor
 from repro.trainers.api import TrainState, jsonable
 
@@ -38,6 +39,9 @@ class TrainLoopConfig:
     ckpt_dir: Optional[str] = None
     keep_ckpts: int = 3
     log_every: int = 10
+    # TraceKit: dump the metrics registry as text every N steps (0: off;
+    # needs a registry passed to run(..., metrics=...))
+    metrics_every: int = 0
     straggler: StragglerConfig = dataclasses.field(
         default_factory=lambda: StragglerConfig(action="none"))
     # BlockDelta export: at every checkpoint (and at run end) diff the
@@ -108,11 +112,18 @@ def _restore_ckpt(trainer, cfg: TrainLoopConfig, step: int):
 
 def run(trainer, batch_fn: Callable[[int], dict], cfg: TrainLoopConfig,
         *, on_step: Optional[Callable[[int, Dict], None]] = None,
-        crash_at: Optional[int] = None) -> Dict:
+        crash_at: Optional[int] = None, tracer=None, metrics=None,
+        emitter: Optional[StepEmitter] = None) -> Dict:
     """Run (or resume) training.  ``batch_fn(step) -> batch``.
 
     ``crash_at``: raise at that step AFTER state mutation — used by the
     fault-tolerance test to prove checkpoint/restart recovers exactly.
+
+    TraceKit: pass ``tracer``/``metrics`` (``repro.obs``) and every step
+    lands as spans on per-stage lanes (``data``, ``step``, ``ckpt``,
+    ``export``) plus structured per-step metrics via a ``StepEmitter``
+    (stdout stays the ``step N: loss=…`` line at ``log_every``).  An
+    explicit ``emitter`` overrides the default-constructed one.
     """
     start_step = 0
     if cfg.ckpt_dir:
@@ -121,24 +132,41 @@ def run(trainer, batch_fn: Callable[[int], dict], cfg: TrainLoopConfig,
             _restore_ckpt(trainer, cfg, latest)
             start_step = latest
 
-    export = _AdapterExporter.maybe(trainer, cfg, start_step)
+    emit = emitter if emitter is not None else StepEmitter(
+        log_every=cfg.log_every, tracer=tracer, metrics=metrics,
+        metrics_every=cfg.metrics_every)
+    export = _AdapterExporter.maybe(trainer, cfg, start_step, emitter=emit)
     mon = StragglerMonitor(cfg.straggler)
     history = []
     for step in range(start_step, cfg.total_steps):
         mon.step_begin()
-        batch = batch_fn(step)
-        metrics = trainer.train_step(batch)
+        if tracer is None:
+            batch = batch_fn(step)
+            metrics_d = trainer.train_step(batch)
+        else:
+            with tracer.span("data", lane="data", step=step + 1):
+                batch = batch_fn(step)
+            with tracer.span("train_step", lane="step", step=step + 1):
+                metrics_d = trainer.train_step(batch)
         action = mon.step_end()
-        metrics["straggler_action"] = action
-        history.append(metrics["loss"])
+        metrics_d["straggler_action"] = action
+        history.append(metrics_d["loss"])
         if on_step:
-            on_step(step, metrics)
-        if cfg.log_every and (step + 1) % cfg.log_every == 0:
-            print(f"step {step + 1}: loss={metrics['loss']:.4f}", flush=True)
+            on_step(step, metrics_d)
+        emit.on_step(step + 1, metrics_d)
         if cfg.ckpt_dir and (step + 1) % cfg.ckpt_every == 0:
-            _save_ckpt(trainer, cfg, step + 1)
+            if tracer is None:
+                _save_ckpt(trainer, cfg, step + 1)
+            else:
+                with tracer.span("checkpoint", lane="ckpt", step=step + 1):
+                    _save_ckpt(trainer, cfg, step + 1)
             if export:
-                export.emit(trainer, step + 1)
+                if tracer is None:
+                    export.emit(trainer, step + 1)
+                else:
+                    with tracer.span("adapter_export", lane="export",
+                                     step=step + 1):
+                        export.emit(trainer, step + 1)
         if crash_at is not None and step + 1 == crash_at:
             raise RuntimeError(f"simulated node failure at step {step + 1}")
     if export:
@@ -176,7 +204,8 @@ class _AdapterExporter:
         return Path(cfg.adapter_dir) / "_base" / cfg.adapter_id
 
     @staticmethod
-    def maybe(trainer, cfg: "TrainLoopConfig", start_step: int):
+    def maybe(trainer, cfg: "TrainLoopConfig", start_step: int,
+              emitter: Optional[StepEmitter] = None):
         if not cfg.adapter_dir:
             return None
         from repro.adapters import AdapterRegistry, copy_tree
@@ -191,8 +220,12 @@ class _AdapterExporter:
                                 "adapter_id": cfg.adapter_id}, keep=1)
         else:
             if ckpt_lib.latest_step(snap) is None:
-                print("adapter export skipped: resume without a base "
-                      "snapshot", flush=True)
+                msg = ("adapter export skipped: resume without a base "
+                       "snapshot")
+                if emitter is not None:
+                    emitter.warn(msg, start_step=start_step)
+                else:
+                    print(msg, flush=True)
                 return None
             base, _ = ckpt_lib.restore(snap, 0, _merged(trainer))
         return _AdapterExporter(AdapterRegistry(cfg.adapter_dir), base,

@@ -81,7 +81,8 @@ class BlockLLMCore(TrainerCore):
         arrays=("params", "sel", "probe", "opt", "masks"),
         meta=("step", "loss_history", "norms", "norm_age", "visit_counts",
               "visit_rounds", "reselections", "q", "stack_idx", "probe_idx",
-              "active_leaves", "needs_mask_refresh"),
+              "active_leaves", "needs_mask_refresh", "sel_churn",
+              "last_reselect_step"),
         donate=("sel", "opt", "masks"),
         roles=(("params", "params"), ("sel", "active"), ("probe", "active"),
                ("opt", "opt"), ("masks", "active")),
@@ -162,8 +163,9 @@ class BlockLLMCore(TrainerCore):
 
     def _pack(self, params, active, opt, masks, plan: Plan, q, *,
               norms: NormTracker, visits: VisitTracker, step: int,
-              loss_history, reselections: int,
-              needs_mask_refresh: bool) -> TrainState:
+              loss_history, reselections: int, needs_mask_refresh: bool,
+              sel_churn: float = 1.0,
+              last_reselect_step: int = 0) -> TrainState:
         arrays = {"params": params, "sel": active["sel"],
                   "probe": active["probe"], "opt": opt, "masks": masks}
         # bounded history: the patience trigger only reads its window
@@ -179,6 +181,11 @@ class BlockLLMCore(TrainerCore):
             "probe_idx": _idx_lists(plan.probe_idx),
             "active_leaves": list(plan.structure.active_leaves),
             "needs_mask_refresh": bool(needs_mask_refresh),
+            # selection telemetry (TraceKit): churn of the most recent
+            # reselection + when it happened, so resumed runs keep an
+            # accurate reselection cadence
+            "sel_churn": float(sel_churn),
+            "last_reselect_step": int(last_reselect_step),
         }
         return TrainState(arrays, meta)
 
@@ -268,7 +275,9 @@ class BlockLLMCore(TrainerCore):
             params, active, opt, masks, plan, meta["q"], norms=norms,
             visits=visits, step=step_no, loss_history=loss_history,
             reselections=int(meta["reselections"]),
-            needs_mask_refresh=False)
+            needs_mask_refresh=False,
+            sel_churn=float(meta["sel_churn"]),
+            last_reselect_step=int(meta["last_reselect_step"]))
 
         every = self.bcfg.selector.reselect_every
         if every and step_no % every == 0:
@@ -277,8 +286,18 @@ class BlockLLMCore(TrainerCore):
                 loss_history, self.bcfg.selector.patience):
             new_state = self.reselect(new_state)
 
+        nm = new_state.meta
         metrics = {"loss": loss_f, "step": step_no,
-                   "reselections": int(new_state.meta["reselections"])}
+                   "reselections": int(nm["reselections"]),
+                   # selection telemetry (TraceKit / ISSUE 6): fraction
+                   # selected, churn of the latest reselection, gradient
+                   # energy share of the top (1-s) units, cadence
+                   "sel_q": float(nm["q"]),
+                   "sel_churn": float(nm["sel_churn"]),
+                   "sel_grad_concentration": sel_lib.norm_concentration(
+                       norms.norms, 1.0 - self.bcfg.selector.sparsity),
+                   "sel_steps_since_reselect": step_no - int(
+                       nm["last_reselect_step"])}
         metrics.update({k: float(v) for k, v in dev_metrics.items()})
         return new_state, metrics
 
@@ -325,7 +344,9 @@ class BlockLLMCore(TrainerCore):
             params, active, opt, masks, plan, q, norms=norms, visits=visits,
             step=int(state.meta["step"]), loss_history=[],
             reselections=int(state.meta["reselections"]) + 1,
-            needs_mask_refresh=use_masks)
+            needs_mask_refresh=use_masks,
+            sel_churn=sel_lib.plan_churn(old_plan, plan),
+            last_reselect_step=int(state.meta["step"]))
 
     def _ingest_norms(self, norm_out, plan: Plan, params, active,
                       norms: NormTracker, step: int):

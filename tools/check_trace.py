@@ -1,0 +1,157 @@
+#!/usr/bin/env python
+"""CI trace-smoke gate: validate TraceKit trace files.
+
+Checks a trace produced by ``launch/serve.py --trace`` or
+``launch/train.py --trace`` for schema validity and the span names the
+instrumentation contract promises (ISSUE 6 acceptance criteria):
+
+- **Chrome/Perfetto JSON** (non-``.jsonl``): top-level ``traceEvents``
+  list; every event carries name/ph/pid/tid/ts; ``ts`` is monotonic
+  non-decreasing per (pid, tid) lane; every lane has a ``thread_name``
+  metadata record; complete (``X``) events have non-negative ``dur``.
+- **JSONL event log**: first line is the ``tracekit.v1`` header; every
+  line parses as one object with kind/name; spans carry
+  lane/ts_us/dur_us.
+- **Required spans**: ``--kind serve`` requires queue_wait, admit,
+  prefill, decode_step (plus swap_apply/swap_revert under
+  ``--require-swaps``); ``--kind train`` requires data, train_step and
+  per-step ``train_step_metrics`` records carrying the BlockLLM
+  selection telemetry (sel_q, sel_churn, sel_grad_concentration).
+
+Usage:
+    PYTHONPATH=src python tools/check_trace.py --kind serve \
+        --require-swaps /tmp/trace_serve.json
+    PYTHONPATH=src python tools/check_trace.py --kind train \
+        /tmp/trace_train.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+from pathlib import Path
+
+REQUIRED = {
+    "serve": ("queue_wait", "admit", "prefill", "decode_step"),
+    "train": ("data", "train_step", "train_step_metrics"),
+    "any": (),
+}
+SWAP_SPANS = ("swap_apply", "swap_revert")
+TRAIN_TELEMETRY = ("sel_q", "sel_churn", "sel_grad_concentration")
+
+
+def _fail(msg: str) -> None:
+    print(f"check_trace: FAIL: {msg}")
+    sys.exit(1)
+
+
+def _load_chrome(path: Path):
+    obj = json.loads(path.read_text())
+    if not isinstance(obj, dict) or "traceEvents" not in obj:
+        _fail(f"{path}: no top-level 'traceEvents' object")
+    evs = obj["traceEvents"]
+    lanes_named = set()
+    last_ts = defaultdict(lambda: float("-inf"))
+    names = []
+    for i, e in enumerate(evs):
+        for k in ("name", "ph", "pid", "tid"):
+            if k not in e:
+                _fail(f"{path}: event {i} missing {k!r}: {e}")
+        if e["ph"] == "M":
+            if e["name"] == "thread_name":
+                lanes_named.add((e["pid"], e["tid"]))
+            continue
+        if "ts" not in e:
+            _fail(f"{path}: event {i} ({e['name']}) has no ts")
+        lane = (e["pid"], e["tid"])
+        if e["ts"] < last_ts[lane]:
+            _fail(f"{path}: ts not monotonic in lane {lane}: "
+                  f"{e['ts']} after {last_ts[lane]} ({e['name']})")
+        last_ts[lane] = e["ts"]
+        if e["ph"] == "X" and e.get("dur", 0) < 0:
+            _fail(f"{path}: negative dur on {e['name']}")
+        names.append(e["name"])
+        if lane not in lanes_named:
+            _fail(f"{path}: lane {lane} used by {e['name']} has no "
+                  f"thread_name metadata")
+    return names, evs
+
+
+def _load_jsonl(path: Path):
+    lines = [ln for ln in path.read_text().splitlines() if ln]
+    if not lines:
+        _fail(f"{path}: empty")
+    recs = []
+    for i, ln in enumerate(lines):
+        try:
+            recs.append(json.loads(ln))
+        except json.JSONDecodeError as e:
+            _fail(f"{path}: line {i + 1} is not JSON: {e}")
+    head = recs[0]
+    if head.get("kind") != "header" or head.get("format") != "tracekit.v1":
+        _fail(f"{path}: first line is not a tracekit.v1 header: {head}")
+    for i, r in enumerate(recs[1:], start=2):
+        if "kind" not in r or "name" not in r:
+            _fail(f"{path}: line {i} missing kind/name: {r}")
+        if r["kind"] == "span":
+            for k in ("lane", "ts_us", "dur_us"):
+                if k not in r:
+                    _fail(f"{path}: span {r['name']} (line {i}) "
+                          f"missing {k!r}")
+            if r["dur_us"] < 0:
+                _fail(f"{path}: negative dur_us on {r['name']}")
+    names = [r["name"] for r in recs[1:]]
+    return names, recs
+
+
+def _check_train_telemetry(path: Path, recs) -> None:
+    """JSONL train traces must carry the per-step selection telemetry."""
+    steps = [r for r in recs
+             if isinstance(r, dict) and r.get("name") == "train_step_metrics"]
+    if not steps:
+        return  # chrome-format train trace: names check already covers it
+    for r in steps:
+        args = r.get("args", {})
+        missing = [k for k in TRAIN_TELEMETRY if k not in args]
+        if missing:
+            _fail(f"{path}: train_step_metrics at step "
+                  f"{args.get('step')} missing telemetry keys {missing}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="+")
+    ap.add_argument("--kind", default="any",
+                    choices=sorted(REQUIRED),
+                    help="which instrumentation contract to enforce")
+    ap.add_argument("--require-swaps", action="store_true",
+                    help="also require adapter swap spans (multi-tenant "
+                         "serve runs)")
+    args = ap.parse_args(argv)
+
+    required = list(REQUIRED[args.kind])
+    if args.require_swaps:
+        required += list(SWAP_SPANS)
+
+    for p in map(Path, args.paths):
+        if not p.exists():
+            _fail(f"{p}: file not found")
+        if p.suffix == ".jsonl":
+            names, recs = _load_jsonl(p)
+            if args.kind == "train":
+                _check_train_telemetry(p, recs)
+        else:
+            names, _ = _load_chrome(p)
+        seen = set(names)
+        missing = [n for n in required if n not in seen]
+        if missing:
+            _fail(f"{p}: required span(s) absent: {missing} "
+                  f"(present: {sorted(seen)})")
+        print(f"check_trace: OK: {p} ({len(names)} events, "
+              f"{len(seen)} distinct names)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
