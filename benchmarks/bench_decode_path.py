@@ -26,9 +26,20 @@ every counter is deterministic):
    steps (first_token_step - submit_step) over the trace — the queue
    wait a request pays before its prompt is primed.
 
+4. **PagedKV capacity.**  The same trace re-served on the block-paged
+   KV cache (``runtime/paged_kv.py``) must stream bit-identical tokens,
+   and three paged metrics are gated: ``paged_pages_per_token`` (pages
+   allocated per live KV row — the page-rounding overhead over exact
+   per-token memory), ``paged_admitted_ratio`` (peak concurrent
+   requests paged vs dense at EQUAL aggregate KV HBM on a mixed-length
+   workload; gated >= 2x), and ``paged_prefix_savings`` (share of
+   prompt tokens served from registered prefix pages instead of being
+   re-prefilled, on a shared-system-prompt workload).
+
 Per-request token streams must be bit-identical between per-token and
-chunked priming (the DecodeServer invariant: priming strategy is
-invisible to the decoded stream).
+chunked priming AND between dense and paged KV layouts (the
+DecodeServer invariant: priming strategy and cache layout are invisible
+to the decoded stream).
 
 ``--trace-dir DIR`` writes one Chrome/Perfetto trace per serving leg
 (``decode_path_per_token.json`` / ``decode_path_chunked.json``) so the
@@ -111,6 +122,66 @@ def _decode_bytes_ratio(cfg, max_seq, block_k):
     return fused / full, fused, full
 
 
+def _paged_admitted_ratio(cfg, params, max_seq, ps, n_req, new_tokens,
+                          prompt_max):
+    """Peak concurrent requests, paged vs dense, at EQUAL KV HBM.
+
+    The dense budget is 2 slots x max_seq rows; the paged pool holds
+    the same rows (2 * max_seq / page_size pages + the null page) but
+    admits against aggregate live tokens, so mixed-length requests
+    pack far denser.
+    """
+    reqs_lens = [len(r.prompt) for r in
+                 _requests(cfg, n_req, new_tokens, prompt_max, seed=5)]
+
+    def peak(slots, **kw):
+        srv = DecodeServer(cfg, params, batch_slots=slots,
+                           max_seq=max_seq, **kw)
+        for r in _requests(cfg, n_req, new_tokens, prompt_max, seed=5):
+            srv.submit(r)
+        hi = 0
+        for _ in range(20_000):
+            srv.step()
+            hi = max(hi, sum(r is not None for r in srv.active))
+            if not srv.queue and all(r is None for r in srv.active):
+                break
+        return hi
+
+    dense_peak = peak(2)
+    paged_peak = peak(n_req, kv_layout="paged", kv_page_size=ps,
+                      kv_pages=2 * (max_seq // ps) + 1,
+                      prefix_share=False)
+    hbm_rows = 2 * max_seq
+    print(f"paged capacity     : {paged_peak} vs {dense_peak} peak "
+          f"concurrent requests at {hbm_rows} KV rows of HBM "
+          f"(prompts {min(reqs_lens)}..{max(reqs_lens)})")
+    return paged_peak / dense_peak
+
+
+def _paged_prefix_savings(cfg, params, max_seq, ps, chunk, n_req,
+                          new_tokens):
+    """Share of prompt tokens served from registered prefix pages on a
+    shared-system-prompt workload (chat-style: every request repeats
+    the same leading tokens)."""
+    rng = np.random.default_rng(11)
+    common = rng.integers(0, cfg.vocab_size, 2 * ps + ps // 2)
+    reqs = [Request(rid=i,
+                    prompt=np.concatenate(
+                        [common,
+                         rng.integers(0, cfg.vocab_size, 3 + i % 4)]),
+                    max_new_tokens=new_tokens)
+            for i in range(n_req)]
+    srv = DecodeServer(cfg, params, batch_slots=2, max_seq=max_seq,
+                       prefill_chunk=chunk, kv_layout="paged",
+                       kv_page_size=ps)
+    for r in reqs:
+        srv.submit(r)
+    srv.run_until_drained(max_steps=20_000)
+    assert all(r.done for r in reqs), "prefix-share leg failed to drain"
+    total_prompt = sum(len(r.prompt) for r in reqs)
+    return srv.alloc.n_prefix_tokens / total_prompt, srv
+
+
 def run(quick: bool = False, trace_dir=None):
     max_seq = 64 if quick else 256
     n_req = 8 if quick else 16
@@ -165,6 +236,38 @@ def run(quick: bool = False, trace_dir=None):
                        for r in legs["chunked"]["reqs"]], np.float64)
     p50, p99 = np.percentile(ttft, 50), np.percentile(ttft, 99)
 
+    # --- PagedKV: parity on the same trace + capacity metrics --------- #
+    ps = 8 if quick else 16
+    tracer, finish = _trace_leg(trace_dir, "decode_path_paged")
+    paged_reqs = _requests(cfg, n_req, new_tokens, prompt_max)
+    srv_kv = _serve(cfg, params, paged_reqs, max_seq, tracer=tracer,
+                    prefill_chunk=chunk, kv_layout="paged",
+                    kv_page_size=ps, prefix_share=False)
+    finish(srv_kv)
+    assert ({r.rid: tuple(r.out) for r in paged_reqs}
+            == legs["per_token"]["outs"]), \
+        "paged KV layout changed the decoded token streams"
+    live_rows = sum(min(len(r.prompt) + new_tokens, max_seq)
+                    for r in paged_reqs)
+    pages_per_token = srv_kv.alloc.n_alloc * ps / live_rows
+    print(f"paged KV           : {srv_kv.alloc.n_alloc} pages x {ps} "
+          f"rows for {live_rows} live rows "
+          f"({pages_per_token:.2f}x rounding overhead; streams match "
+          f"dense bit-for-bit)")
+
+    admitted_ratio = _paged_admitted_ratio(cfg, params, max_seq, ps,
+                                           n_req, new_tokens, prompt_max)
+    assert admitted_ratio >= 2.0, \
+        (f"paged layout admitted only {admitted_ratio:.2f}x the dense "
+         f"slots at equal KV HBM (acceptance floor: 2x)")
+
+    prefix_savings, srv_px = _paged_prefix_savings(
+        cfg, params, max_seq, ps, chunk, n_req, new_tokens)
+    print(f"prefix sharing     : {prefix_savings:.0%} of prompt tokens "
+          f"mapped from registered pages instead of re-prefilled "
+          f"({srv_px.alloc.n_prefix_pages} page hits, "
+          f"{srv_px.alloc.n_cow} COW splits)")
+
     common.emit("decode_prefill_dispatches_per_token", 0.0,
                 f"{legs['per_token']['srv'].prefill_dispatches}")
     common.emit("decode_prefill_dispatches_chunked", 0.0,
@@ -174,6 +277,12 @@ def run(quick: bool = False, trace_dir=None):
     common.emit("decode_bytes_ratio", 0.0, f"{bytes_ratio:.4f}")
     common.emit("decode_ttft_p50_steps", 0.0, f"{p50:.1f}")
     common.emit("decode_ttft_p99_steps", 0.0, f"{p99:.1f}")
+    common.emit("decode_paged_pages_per_token", 0.0,
+                f"{pages_per_token:.4f}")
+    common.emit("decode_paged_admitted_ratio", 0.0,
+                f"{admitted_ratio:.4f}")
+    common.emit("decode_paged_prefix_savings", 0.0,
+                f"{prefix_savings:.4f}")
 
     print(f"\nprefill dispatches: "
           f"{legs['per_token']['srv'].prefill_dispatches} -> "
@@ -186,7 +295,10 @@ def run(quick: bool = False, trace_dir=None):
     return {"prefill_dispatch_ratio": float(dispatch_ratio),
             "decode_bytes_ratio": float(bytes_ratio),
             "ttft_p50_steps": float(p50),
-            "ttft_p99_steps": float(p99)}
+            "ttft_p99_steps": float(p99),
+            "paged_pages_per_token": float(pages_per_token),
+            "paged_admitted_ratio": float(admitted_ratio),
+            "paged_prefix_savings": float(prefix_savings)}
 
 
 if __name__ == "__main__":

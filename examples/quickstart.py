@@ -62,7 +62,31 @@ print(f"re-selections: {state.meta['reselections']}, "
 #    CI-gated: re-baseline deliberately with
 #    `python tools/check_serving.py --update`.
 
-# 5. Tracing a serve session (TraceKit, repro.obs).  Every layer of the
+# 5. Paged serving (PagedKV, runtime/paged_kv.py).  `--paged` swaps the
+#    dense [slots, max_seq] KV cache for fixed-size pages on a
+#    free-list with per-slot page tables, so HBM is paid per live token
+#    (rounded to a page) instead of per worst-case request:
+#
+#        PYTHONPATH=src python -m repro.launch.serve \
+#            --quick --paged --kv-page-size 16 --kv-pages 0
+#
+#    `--kv-pages 0` sizes the pool dense-equivalent; pass fewer pages to
+#    oversubscribe slots against aggregate tokens — admission is
+#    continuous (requests admit/retire every decode step against page
+#    capacity, worst-case reserved so the loop never wedges) and a
+#    mixed-length workload admits >=2x the concurrent requests at equal
+#    KV HBM.  Tenants sharing a system prompt share physical pages:
+#    prefilled prompt pages register in a prefix registry, later
+#    requests map them copy-on-write and skip re-prefilling the shared
+#    tokens (`--no-prefix-share` disables).  Decoded token streams are
+#    bit-identical to dense serving in every scheduler configuration;
+#    `Request.on_token` streams tokens as they decode
+#    (examples/chat_serve.py measures TTFT/TPS per chat turn on a
+#    shared system prompt).  `DecodeServer.stats()["kv"]` reports
+#    page_alloc/page_free/cow_split/prefix_hit/pages_in_use, and the
+#    same counters land in traces as kv-lane instants.
+
+# 6. Tracing a serve session (TraceKit, repro.obs).  Every layer of the
 #    stack is instrumented behind a `tracer=None` no-op default:
 #
 #        PYTHONPATH=src python -m repro.launch.serve \

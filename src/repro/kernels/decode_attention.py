@@ -193,6 +193,179 @@ def decode_attention_fwd(q, k_cache, v_cache, pos, *, window=0, ring=False,
     return out.reshape(B, 1, H, hd)
 
 
+def _paged_kernel(pos_ref, lo_ref, hi_ref, tbl_ref, act_ref,
+                  q_ref, nk_ref, nv_ref, k_ref, v_ref,
+                  o_ref, ko_ref, vo_ref, acc, m_scr, l_scr, *,
+                  scale, window, softcap, ps, npg):
+    """Fused write+attend over paged KV pools.
+
+    One grid step = one logical page of one (slot, kv-head); the k/v
+    index_maps resolve the page table in SMEM, so the kernel sweeps
+    *physical* pages while the masks reason in logical positions.  The
+    new token's K/V row never takes a separate scatter dispatch: at the
+    boundary page (``ki == hi``) the kernel splices the row into the
+    fetched block and emits it through the aliased pool output (the out
+    index_map pins the slot's write page — the null page 0 for inactive
+    slots), and the attention compute reads the row from the same
+    in-register splice, so scores never depend on the HBM write having
+    landed.  COW guarantees the write page's refcount is 1, so no other
+    slot can map it — the only cross-slot page traffic is reads.
+    """
+    ki = pl.program_id(2)
+    b = pl.program_id(0)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    pos_b = pos_ref[b]
+    lo = lo_ref[b]
+    hi = hi_ref[b]
+    act = act_ref[b]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (ps, 1), 0)
+    wsel = ((ki * ps + rows) == pos_b) & (act > 0)          # [ps, 1]
+
+    @pl.when(ki == hi)
+    def _store():
+        ko_ref[0, :, 0, :] = jnp.where(wsel, nk_ref[0, 0][None, :],
+                                       k_ref[0, :, 0, :])
+        vo_ref[0, :, 0, :] = jnp.where(wsel, nv_ref[0, 0][None, :],
+                                       v_ref[0, :, 0, :])
+
+    @pl.when(jnp.logical_and(ki >= lo, ki <= hi))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                 # [G, hd]
+        k = jnp.where(wsel, nk_ref[0, 0][None, :],
+                      k_ref[0, :, 0, :]).astype(jnp.float32)  # [ps, hd]
+        v = jnp.where(wsel, nv_ref[0, 0][None, :],
+                      v_ref[0, :, 0, :]).astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        idx = ki * ps + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        ok = idx <= pos_b
+        if window:
+            ok &= idx > pos_b - window
+        s = jnp.where(ok, s, -jnp.inf)
+
+        m_prev = m_scr[...]                                 # [G, 1]
+        m_new = jnp.maximum(m_prev[:, 0], s.max(-1))[:, None]
+        m_safe = jnp.maximum(m_new, -1e30)
+        p = jnp.exp(s - m_safe)
+        corr = jnp.exp(jnp.maximum(m_prev, -1e30) - m_safe)
+        l_scr[...] = l_scr[...] * corr + p.sum(-1)[:, None]
+        acc[...] = acc[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_scr[...] = m_new
+
+    @pl.when(ki == npg - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc[...] / jnp.maximum(l_scr[...], 1e-30)).astype(
+            o_ref.dtype)
+
+
+def paged_cache_read_bytes(pos, *, num_pages_per_slot, page_size, kv_heads,
+                           head_dim, window=0, dtype_bytes=2):
+    """Analytic K+V HBM bytes one fused *paged* decode step moves at
+    ``pos``: page reads (same [lo, hi] sweep as the dense kernel with
+    ``block_k = page_size``) plus the boundary-page write-back."""
+    reads = cache_read_bytes(pos, seq_len=num_pages_per_slot * page_size,
+                             kv_heads=kv_heads, head_dim=head_dim,
+                             window=window, ring=False, block_k=page_size,
+                             dtype_bytes=dtype_bytes)
+    n = int(jnp.asarray(pos).reshape(-1).shape[0])
+    writes = n * 2 * page_size * kv_heads * head_dim * dtype_bytes
+    return reads + writes
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "scale", "interpret"))
+def paged_decode_attention_fwd(q, new_k, new_v, k_pool, v_pool, pos,
+                               page_table, active, *, window=0, softcap=0.0,
+                               scale=None, interpret=False):
+    """Fused write+attend decode step over paged KV pools.
+
+    q [B, 1, H, hd]; new_k/new_v [B, KV, hd] — the new token's K/V rows
+    (any float dtype; cast to the pool dtype before use so paged and
+    dense streams stay bit-identical); k/v pools [P, ps, KV, hd];
+    page_table [B, NP] int32 physical page per logical page; active [B]
+    bool (inactive slots write nothing — their boundary block flushes
+    to the null page 0).
+
+    Returns ``(o [B, 1, H, hd], k_pool', v_pool')``.  With
+    ``ps == block_k`` the attention math is block-for-block identical
+    to ``decode_attention_fwd`` on the gathered dense view.
+    """
+    if pltpu is None:  # pragma: no cover
+        raise RuntimeError("pallas TPU support unavailable in this jax "
+                           "build — use the XLA decode path")
+    P, ps, KV, hd = k_pool.shape
+    B, NP = page_table.shape
+    H = q.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+    lo, hi = block_bounds(pos_b, seq_len=NP * ps, window=window, ring=False,
+                          block_k=ps)
+    act = jnp.asarray(active).astype(jnp.int32)
+    qt = q.reshape(B, KV, G, hd)
+    nk = new_k.astype(k_pool.dtype)
+    nv = new_v.astype(v_pool.dtype)
+
+    def kv_map(b, h, j, pos_ref, lo_ref, hi_ref, tbl_ref, act_ref):
+        # page-table indirection in SMEM; the clamp makes out-of-range
+        # grid steps re-visit the boundary page (no DMA, no compute)
+        return tbl_ref[b, jnp.clip(j, lo_ref[b], hi_ref[b])], 0, h, 0
+
+    def wr_map(b, h, j, pos_ref, lo_ref, hi_ref, tbl_ref, act_ref):
+        # constant per (b, h): the slot's write page, flushed once at
+        # the sweep boundary with the spliced block from _store
+        return jnp.where(act_ref[b] > 0, tbl_ref[b, hi_ref[b]], 0), 0, h, 0
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(B, KV, NP),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, hd), lambda b, h, j, *_: (b, h, 0)),
+            pl.BlockSpec((1, 1, hd), lambda b, h, j, *_: (b, h, 0)),
+            pl.BlockSpec((1, ps, 1, hd), kv_map),
+            pl.BlockSpec((1, ps, 1, hd), kv_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, j, *_: (b, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hd), wr_map),
+            pl.BlockSpec((1, ps, 1, hd), wr_map),
+        ],
+        scratch_shapes=[
+            _scratch((G, hd)),
+            _scratch((G, 1)),
+            _scratch((G, 1)),
+        ],
+    )
+    kernel = functools.partial(
+        _paged_kernel, scale=scale, window=window, softcap=softcap,
+        ps=ps, npg=NP)
+    o, kp, vp = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+            jax.ShapeDtypeStruct(k_pool.shape, k_pool.dtype),
+            jax.ShapeDtypeStruct(v_pool.shape, v_pool.dtype),
+        ],
+        # operand numbering includes the 5 scalar-prefetch args
+        input_output_aliases={8: 1, 9: 2},
+        compiler_params=_paged_compiler_params(),
+        interpret=interpret,
+    )(pos_b, lo, hi, jnp.asarray(page_table, jnp.int32), act, qt, nk, nv,
+      k_pool, v_pool)
+    return o.reshape(B, 1, H, hd), kp, vp
+
+
 def _scratch(shape):
     try:
         return pltpu.VMEM(shape, jnp.float32)
@@ -204,5 +377,17 @@ def _compiler_params():
     try:
         return pltpu.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"))
+    except Exception:  # pragma: no cover
+        return None
+
+
+def _paged_compiler_params():
+    # every dim "arbitrary": slots read pages other slots may be
+    # flushing their boundary block to (shared prefix pages are
+    # read-only, but the in/out pool aliasing still wants a defined
+    # step order)
+    try:
+        return pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary"))
     except Exception:  # pragma: no cover
         return None

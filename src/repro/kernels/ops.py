@@ -210,6 +210,77 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=0, ring=False,
                           (q, k_cache, v_cache, pos), kw, nb)
 
 
+def _paged_decode_attention_impl(q, new_k, new_v, k_pool, v_pool, pos,
+                                 page_table, active, *, window=0,
+                                 softcap=0.0, mode="auto"):
+    if mode == "auto":
+        mode = "pallas" if pallas_available() else "xla"
+    if mode != "xla":
+        return da.paged_decode_attention_fwd(
+            q, new_k, new_v, k_pool, v_pool, pos, page_table, active,
+            window=window, softcap=softcap,
+            interpret=(mode == "interpret"))
+    # XLA fallback: scatter the new row, gather the dense-shaped view
+    # through the page table, and run the *same* grouped-einsum
+    # attention the dense cache path runs — identical shapes and values
+    # keep paged and dense token streams bit-identical.
+    P, ps, KV, hd = k_pool.shape
+    B, NP = page_table.shape
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+    act = jnp.asarray(active, bool)
+    tbl = jnp.asarray(page_table, jnp.int32)
+    phys = jnp.take_along_axis(tbl, (pos_b // ps)[:, None], axis=1)[:, 0]
+    widx = jnp.where(act, phys * ps + pos_b % ps, P * ps)
+    kf = k_pool.reshape(P * ps, KV, hd).at[widx].set(
+        new_k.astype(k_pool.dtype), mode="drop")
+    vf = v_pool.reshape(P * ps, KV, hd).at[widx].set(
+        new_v.astype(v_pool.dtype), mode="drop")
+    ridx = (tbl[:, :, None] * ps
+            + jnp.arange(ps, dtype=jnp.int32)[None, None]).reshape(B, NP * ps)
+    ck = jnp.take(kf, ridx, axis=0)
+    cv = jnp.take(vf, ridx, axis=0)
+    o = layers.attention_decode(q, ck, cv, pos_b, window=window,
+                                softcap=softcap, ring=False)
+    return o, kf.reshape(k_pool.shape), vf.reshape(v_pool.shape)
+
+
+def paged_decode_attention(q, new_k, new_v, k_pool, v_pool, pos, page_table,
+                           active, *, window=0, softcap=0.0,
+                           mode: str = "auto"):
+    """One-token fused write+attend against paged KV pools.
+
+    q [B, 1, H, hd]; new_k/new_v [B, KV, hd] (the new token's rows);
+    pools [P, page_size, KV, hd]; page_table [B, NP] int32; active [B]
+    bool.  Returns ``(o, k_pool', v_pool')`` — the row write happens
+    inside the op (kernel prologue on the Pallas path), so the serving
+    loop dispatches one op per layer instead of scatter + attend.
+    ``mode``: ``pallas`` | ``interpret`` | ``xla`` | ``auto``.
+    """
+    kw = dict(window=window, softcap=softcap, mode=mode)
+    if _PROFILER is None:
+        return _paged_decode_attention_impl(q, new_k, new_v, k_pool, v_pool,
+                                            pos, page_table, active, **kw)
+    try:
+        eff = mode if mode != "auto" else (
+            "pallas" if pallas_available() else "xla")
+        if eff == "xla":
+            # the gather materializes a dense view: read pools + write row
+            nb = q.nbytes + k_pool.nbytes + v_pool.nbytes \
+                + new_k.nbytes + new_v.nbytes
+        else:
+            nb = q.nbytes + da.paged_cache_read_bytes(
+                pos, num_pages_per_slot=page_table.shape[1],
+                page_size=k_pool.shape[1], kv_heads=k_pool.shape[2],
+                head_dim=k_pool.shape[3], window=window,
+                dtype_bytes=k_pool.dtype.itemsize)
+    except Exception:
+        nb = None
+    return _profiled_call("paged_decode_attention",
+                          _paged_decode_attention_impl,
+                          (q, new_k, new_v, k_pool, v_pool, pos, page_table,
+                           active), kw, nb)
+
+
 # --------------------------------------------------------------------- #
 # fused masked adam over pytrees
 # --------------------------------------------------------------------- #

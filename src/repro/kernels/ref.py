@@ -105,6 +105,38 @@ def decode_attention_ref(q, k_cache, v_cache, pos, *, window=0,
     return jnp.einsum("bhqk,bkhd->bqhd", p, v).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, new_k, new_v, k_pool, v_pool, pos,
+                               page_table, active, *, window=0,
+                               softcap=0.0, scale=None):
+    """Oracle for kernels.decode_attention.paged_decode_attention_fwd.
+
+    q [B, 1, H, hd]; new_k/new_v [B, KV, hd]; pools [P, ps, KV, hd];
+    page_table [B, NP] int32; active [B] bool.  Writes each active
+    slot's new row into its physical page (dense scatter on the
+    flattened pool), gathers the dense-shaped per-slot view through the
+    page table, and runs ``decode_attention_ref`` on it.  Returns
+    ``(o, k_pool', v_pool')`` — the same contract as the fused kernel.
+    """
+    P, ps, KV, hd = k_pool.shape
+    B, NP = page_table.shape
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+    act = jnp.asarray(active, bool)
+    tbl = jnp.asarray(page_table, jnp.int32)
+    phys = jnp.take_along_axis(tbl, (pos_b // ps)[:, None], axis=1)[:, 0]
+    widx = jnp.where(act, phys * ps + pos_b % ps, P * ps)
+    kf = k_pool.reshape(P * ps, KV, hd).at[widx].set(
+        new_k.astype(k_pool.dtype), mode="drop")
+    vf = v_pool.reshape(P * ps, KV, hd).at[widx].set(
+        new_v.astype(v_pool.dtype), mode="drop")
+    ridx = (tbl[:, :, None] * ps
+            + jnp.arange(ps, dtype=jnp.int32)[None, None]).reshape(B, NP * ps)
+    ck = jnp.take(kf, ridx, axis=0)
+    cv = jnp.take(vf, ridx, axis=0)
+    o = decode_attention_ref(q, ck, cv, pos_b, window=window, ring=False,
+                             softcap=softcap, scale=scale)
+    return o, kf.reshape(k_pool.shape), vf.reshape(v_pool.shape)
+
+
 def scatter_swap_ref(full, idx, rows):
     """Oracle for kernels.scatter_apply.scatter_swap_2d.
 

@@ -27,6 +27,16 @@ with each slot's actual context length instead of ``--max-seq``
 ``--ms-per-step auto`` calibrates SLO slack from a wall-clock EMA of
 the measured decode-step time.
 
+PagedKV (``--paged``): the KV cache becomes a pool of fixed-size pages
+(``--kv-page-size`` rows each, ``--kv-pages`` total; 0 = the dense
+equivalent) addressed through per-slot page tables — HBM is paid per
+live token, admission turns continuous (requests retire and admit
+every decode step against page capacity), and tenants sharing a prompt
+prefix share physical pages copy-on-write.  The demo request set gives
+every tenant a common system-prompt prefix so prefix hits and COW
+splits show up in the ``kv`` stats section; token streams are
+bit-identical to ``--dense`` (the default).
+
 Serving-side regressions are gated in CI by ``tools/check_serving.py``
 against ``benchmarks/serve_baselines.json`` (re-baseline deliberately
 with ``--update``); the decode hot path itself is covered by
@@ -80,6 +90,23 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=64,
                     help="prompt positions per chunked-prefill "
                          "dispatch (0 = legacy per-token priming)")
+    kv = ap.add_mutually_exclusive_group()
+    kv.add_argument("--paged", action="store_true",
+                    help="PagedKV: block-paged KV cache + continuous "
+                         "batching + copy-on-write prefix sharing")
+    kv.add_argument("--dense", action="store_true",
+                    help="dense [slots, max_seq] KV cache (default)")
+    ap.add_argument("--kv-page-size", type=int, default=16,
+                    help="token rows per KV page (must divide "
+                         "--max-seq)")
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help="physical pages in the pool (0 = dense "
+                         "equivalent: slots * max_seq / page_size + "
+                         "1; smaller oversubscribes slots against "
+                         "aggregate live tokens)")
+    ap.add_argument("--no-prefix-share", action="store_true",
+                    help="disable copy-on-write prompt prefix sharing "
+                         "between paged requests")
     ap.add_argument("--ms-per-step", default="1.0",
                     help="SLO conversion: decode-step time in ms, or "
                          "'auto' to calibrate from a wall-clock EMA")
@@ -161,10 +188,25 @@ def main(argv=None):
                        prefill_chunk=args.prefill_chunk,
                        ms_per_step=("auto" if args.ms_per_step == "auto"
                                     else float(args.ms_per_step)),
-                       tracer=tracer)
+                       tracer=tracer,
+                       kv_layout="paged" if args.paged else "dense",
+                       kv_page_size=args.kv_page_size,
+                       kv_pages=args.kv_pages,
+                       prefix_share=not args.no_prefix_share)
     rng = np.random.default_rng(args.seed)
+    # paged demo requests share a system-prompt prefix (sized past one
+    # KV page so full prefix pages AND a partial tail register —
+    # admissions after the first then log prefix hits, and the tail's
+    # first decode write logs a COW split); dense runs keep the short
+    # prompts so small --max-seq demos don't truncate
+    sys_prompt = (rng.integers(0, cfg.vocab_size,
+                               args.kv_page_size + args.kv_page_size // 2)
+                  if args.paged else
+                  np.zeros(0, np.int64))
     reqs = [Request(rid=i,
-                    prompt=rng.integers(0, cfg.vocab_size, 4 + i % 4),
+                    prompt=np.concatenate(
+                        [sys_prompt,
+                         rng.integers(0, cfg.vocab_size, 4 + i % 4)]),
                     max_new_tokens=args.new_tokens,
                     adapter_id=tenants[i % len(tenants)],
                     slo_ms=args.slo_ms or None)
@@ -191,6 +233,15 @@ def main(argv=None):
           f"chunk {srv.prefill_chunk})"
           + (f"; ms/step EMA {srv.ms_per_step:.2f}"
              if args.ms_per_step == "auto" else ""))
+    if srv.alloc is not None:
+        kvs = srv.stats()["kv"]
+        al = srv.alloc
+        print(f"paged KV: {al.num_pages} pages x {al.page_size} rows, "
+              f"{kvs['page_alloc']} allocs / {kvs['page_free']} frees, "
+              f"{kvs['cow_split']} COW splits, "
+              f"prefix hits {kvs['prefix_hit_pages']} pages "
+              f"({kvs['prefix_hit_tokens']} tokens), "
+              f"{kvs['pages_in_use']} in use at drain")
     if registry is not None:
         s = srv.stats()
         reg_stats = getattr(registry, "stats", dict)()

@@ -131,8 +131,18 @@ def _attn_cache_len(cfg, btype, seq_len):
 
 def _block_apply(cfg, btype, params, x, *, positions, mode, cache,
                  enc_out=None, pos=None, attn_impl="chunked",
-                 chunk_start=0):
-    """Returns (y, new_cache, aux_loss)."""
+                 chunk_start=0, page_table=None, active=None, begin=None):
+    """Returns (y, new_cache, aux_loss).
+
+    Paged KV (``init_paged_cache``): global-attention block caches are
+    ``{"pk", "pv"}`` pools ``[num_pages, page_size, KV, hd]`` addressed
+    through ``page_table`` [B, pages_per_slot] (physical page per
+    logical page; see runtime/paged_kv.py).  ``active`` [B] masks slot
+    writes (inactive slots' rows are never touched — the paged path
+    needs no server-side cache blend), ``begin`` [B] is the first
+    prompt position a slot prefills itself (earlier rows come from
+    shared prefix pages).
+    """
     aux = jnp.zeros((), jnp.float32)
     if btype in ATTN_BLOCKS:
         window = cfg.window_size if btype == BLOCK_LOCAL_ATTN else 0
@@ -154,16 +164,43 @@ def _block_apply(cfg, btype, params, x, *, positions, mode, cache,
         q = layers.apply_rope(q, positions, cfg.rope_theta)
         k = layers.apply_rope(k, positions, cfg.rope_theta)
         new_cache = None
-        if mode == "decode":
+        if mode == "decode" and cache is not None and "pk" in cache:
+            # paged decode: write the new row into its physical page and
+            # attend through the page indirection.  The fused kernel
+            # (write+attend in one pass) and the XLA fallback
+            # (scatter -> gather the dense-shaped view -> the *same*
+            # attention_decode the dense path runs) both keep token
+            # streams bit-identical to the dense cache.
+            from repro.kernels import ops as kernel_ops
+            pos_b = jnp.broadcast_to(jnp.asarray(pos), (B,))
+            act = (jnp.ones((B,), bool) if active is None
+                   else jnp.asarray(active, bool))
+            o, npk, npv = kernel_ops.paged_decode_attention(
+                q, k[:, 0], v[:, 0], cache["pk"], cache["pv"], pos_b,
+                page_table, act, window=window, softcap=cfg.attn_softcap,
+                mode={"pallas": "pallas",
+                      "pallas_interpret": "interpret"}.get(attn_impl, "xla"))
+            new_cache = {"pk": npk, "pv": npv}
+        elif mode == "decode":
             ring = btype == BLOCK_LOCAL_ATTN
             C = cache["k"].shape[1]
             pos_b = jnp.broadcast_to(jnp.asarray(pos), (B,))
             slot = (pos_b % C) if ring else pos_b
             bidx = jnp.arange(B)
-            ck = cache["k"].at[bidx, slot].set(
-                k[:, 0].astype(cache["k"].dtype))
-            cv = cache["v"].at[bidx, slot].set(
-                v[:, 0].astype(cache["v"].dtype))
+            if active is not None:
+                # paged serving, dense ring block: mask the write so
+                # inactive slots' rows stay bit-exact without the
+                # server-side whole-tree blend
+                slot = jnp.where(jnp.asarray(active, bool), slot, C)
+                ck = cache["k"].at[bidx, slot].set(
+                    k[:, 0].astype(cache["k"].dtype), mode="drop")
+                cv = cache["v"].at[bidx, slot].set(
+                    v[:, 0].astype(cache["v"].dtype), mode="drop")
+            else:
+                ck = cache["k"].at[bidx, slot].set(
+                    k[:, 0].astype(cache["k"].dtype))
+                cv = cache["v"].at[bidx, slot].set(
+                    v[:, 0].astype(cache["v"].dtype))
             if attn_impl in ("pallas", "pallas_interpret"):
                 from repro.kernels import ops as kernel_ops
                 o = kernel_ops.decode_attention(
@@ -176,6 +213,45 @@ def _block_apply(cfg, btype, params, x, *, positions, mode, cache,
                                             softcap=cfg.attn_softcap,
                                             ring=ring)
             new_cache = {"k": ck, "v": cv}
+        elif mode == "prefill_slots" and cache is not None and "pk" in cache:
+            # paged chunked prefill: scatter the chunk's K/V rows into
+            # their physical pages (skipping rows below ``begin`` —
+            # those live in shared prefix pages already), then attend
+            # exactly like the dense path: history rows gathered through
+            # the page table, the chunk's own rows in-register through
+            # the cache-dtype round trip.  Identical shapes and values
+            # to the dense concat keep the streams bit-identical.
+            pk, pv = cache["pk"], cache["pv"]
+            P_, ps = pk.shape[0], pk.shape[1]
+            lengths = jnp.broadcast_to(jnp.asarray(pos), (B,))
+            last = jnp.minimum(lengths, chunk_start + S)[:, None]
+            valid = positions < last
+            if begin is not None:
+                valid &= positions >= jnp.asarray(begin, jnp.int32)[:, None]
+            phys = jnp.take_along_axis(page_table, positions // ps, axis=1)
+            flat = jnp.where(valid, phys * ps + positions % ps, P_ * ps)
+            pkf = pk.reshape(P_ * ps, KV, hd).at[flat].set(
+                k.astype(pk.dtype), mode="drop")
+            pvf = pv.reshape(P_ * ps, KV, hd).at[flat].set(
+                v.astype(pv.dtype), mode="drop")
+            new_cache = {"pk": pkf.reshape(pk.shape),
+                         "pv": pvf.reshape(pv.shape)}
+            hp = np.arange(chunk_start)
+            ridx = (jnp.take(page_table, hp // ps, axis=1) * ps
+                    + jnp.asarray(hp % ps, jnp.int32)[None])
+            kh = jnp.take(pk.reshape(P_ * ps, KV, hd), ridx,
+                          axis=0).astype(q.dtype)
+            vh = jnp.take(pv.reshape(P_ * ps, KV, hd), ridx,
+                          axis=0).astype(q.dtype)
+            kc = k.astype(pk.dtype).astype(q.dtype)
+            vc = v.astype(pv.dtype).astype(q.dtype)
+            kp = jnp.broadcast_to(jnp.asarray(hp, jnp.int32)[None],
+                                  (B, chunk_start))
+            o = layers.attention_full(
+                q, jnp.concatenate([kh, kc], axis=1),
+                jnp.concatenate([vh, vc], axis=1),
+                positions, jnp.concatenate([kp, positions], axis=1),
+                causal=True, window=window, softcap=cfg.attn_softcap)
         elif mode == "prefill_slots":
             # chunked batched prefill: scatter this chunk's K/V rows into
             # the slot-batched decode cache (positions are absolute,
@@ -341,6 +417,76 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
     return cache
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, num_pages: int,
+                     page_size: int, seq_len: int,
+                     dtype=jnp.bfloat16) -> Pytree:
+    """Paged decode cache (PagedKV, runtime/paged_kv.py).
+
+    Global-attention blocks get a shared pool ``[num_pages, page_size,
+    KV, hd]`` per layer instead of dense ``[batch, seq_len]`` rows —
+    HBM is paid per live token, not per worst-case slot.  Page 0 is
+    the null page (unmapped table entries / inactive-slot write sink).
+    Local-attention blocks keep their dense ring (already bounded by
+    the window, and ring indexing is incompatible with page sharing).
+    """
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def block_cache(btype):
+        if btype == BLOCK_GLOBAL_ATTN:
+            return {"pk": jnp.zeros((num_pages, page_size, KV, hd), dtype),
+                    "pv": jnp.zeros((num_pages, page_size, KV, hd), dtype)}
+        if btype == BLOCK_LOCAL_ATTN:
+            C = _attn_cache_len(cfg, btype, seq_len)
+            return {"k": jnp.zeros((batch, C, KV, hd), dtype),
+                    "v": jnp.zeros((batch, C, KV, hd), dtype)}
+        raise ValueError(
+            f"paged KV supports attention blocks only, got {btype}")
+
+    stages = []
+    for pattern, groups in cfg.stages():
+        st = {}
+        for j, btype in enumerate(pattern):
+            one = block_cache(btype)
+            st[f"pos{j}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (groups,) + a.shape), one)
+        stages.append(st)
+    return {"stages": stages}
+
+
+def copy_cache_pages(cache, src, dst):
+    """Duplicate physical pages ``src -> dst`` in every pooled leaf —
+    the device half of a copy-on-write split.  ``src``/``dst`` are
+    int32 [n]; pad unused pairs with (0, 0) (a null-page self-copy is
+    a no-op), so the caller can bucket ``n`` for jit reuse."""
+    def one_stage(st):
+        out = {}
+        for name, blk in st.items():
+            if isinstance(blk, dict) and "pk" in blk:
+                out[name] = {kk: a.at[:, dst].set(a[:, src])
+                             for kk, a in blk.items()}
+            else:
+                out[name] = blk
+        return out
+
+    new_cache = dict(cache)
+    new_cache["stages"] = [one_stage(st) for st in cache["stages"]]
+    return new_cache
+
+
+def supports_paged_kv(cfg: ModelConfig) -> bool:
+    """Paged KV needs position-addressable K/V rows in every block and
+    a token-only frontend — same bar as chunked slot prefill."""
+    return supports_slot_prefill(cfg)
+
+
+def supports_prefix_share(cfg: ModelConfig) -> bool:
+    """Prefix sharing additionally needs every block global: a shared
+    prefix only covers the *pooled* caches, and local-attention blocks
+    keep per-slot ring rows the sharer would be missing."""
+    return (supports_paged_kv(cfg)
+            and all(t == BLOCK_GLOBAL_ATTN for t in cfg.layer_types()))
+
+
 # ---------------------------------------------------------------------------
 # stack apply (scan over stages)
 # ---------------------------------------------------------------------------
@@ -382,7 +528,8 @@ def _resolve_overlay(gp, g, ov):
 
 def _stack_apply(cfg, stage_params, x, *, positions, mode, caches=None,
                  cross_kv=None, enc_present=False, attn_impl="chunked",
-                 pos=None, overlay=None, chunk_start=0):
+                 pos=None, overlay=None, chunk_start=0, page_table=None,
+                 active=None, begin=None):
     """Scan the staged block stack.  Returns (x, new_caches, aux).
 
     ``overlay``: optional {sid: {"idx", "rows", "pidx", "probe"}} — the
@@ -415,7 +562,8 @@ def _stack_apply(cfg, stage_params, x, *, positions, mode, caches=None,
                 h, cj_new, a = _block_apply(
                     cfg, btype, bp, h, positions=positions,
                     mode=mode, cache=cj, enc_out=ex, pos=pos,
-                    attn_impl=attn_impl, chunk_start=chunk_start)
+                    attn_impl=attn_impl, chunk_start=chunk_start,
+                    page_table=page_table, active=active, begin=begin)
                 if cj_new is not None:
                     new_gc[f"pos{j}"] = cj_new
                 aux = aux + a
@@ -644,7 +792,8 @@ def supports_slot_prefill(cfg: ModelConfig) -> bool:
 
 
 def prefill_into_slots(params, cfg: ModelConfig, cache, tokens, lengths,
-                       *, chunk_start=0, attn_impl="full"):
+                       *, chunk_start=0, attn_impl="full", page_table=None,
+                       begin=None):
     """Chunked batched prefill into a slot-batched decode cache.
 
     ``tokens`` [B, K]: positions ``[chunk_start, chunk_start + K)`` of
@@ -668,7 +817,7 @@ def prefill_into_slots(params, cfg: ModelConfig, cache, tokens, lengths,
         cfg, params["stages"], x, positions=positions,
         mode="prefill_slots", caches=cache["stages"],
         pos=jnp.asarray(lengths, jnp.int32), attn_impl=attn_impl,
-        chunk_start=chunk_start)
+        chunk_start=chunk_start, page_table=page_table, begin=begin)
     x = layers.rms_norm(params["final_norm"], x, cfg.norm_eps)
     # unembed ONLY each slot's last valid row of this chunk — [B, 1, D]
     # through the same matmul shape the decode path uses (fp parity),
@@ -683,9 +832,13 @@ def prefill_into_slots(params, cfg: ModelConfig, cache, tokens, lengths,
 
 
 def decode_step(params, cfg: ModelConfig, cache, token, pos,
-                *, attn_impl="chunked"):
+                *, attn_impl="chunked", page_table=None, active=None):
     """One decode step.  token [B,1] int32; pos = scalar int32 or [B]
     per-slot positions (slot-batched serving).
+
+    Paged caches (``init_paged_cache``) additionally take
+    ``page_table`` [B, pages_per_slot] int32 and ``active`` [B] bool —
+    inactive slots write nothing (no server-side cache blend needed).
 
     Returns (logits [B, vocab], new_cache).
     """
@@ -705,7 +858,8 @@ def decode_step(params, cfg: ModelConfig, cache, token, pos,
     x, new_stage_caches, _ = _stack_apply(
         cfg, params["stages"], x, positions=positions, mode="decode",
         caches=cache["stages"], cross_kv=cache.get("cross_kv"),
-        enc_present=cfg.is_encoder_decoder, pos=pos_b, attn_impl=attn_impl)
+        enc_present=cfg.is_encoder_decoder, pos=pos_b, attn_impl=attn_impl,
+        page_table=page_table, active=active)
     x = layers.rms_norm(params["final_norm"], x, cfg.norm_eps)
     logits = _unembed(params, cfg, x)
     new_cache = dict(cache)

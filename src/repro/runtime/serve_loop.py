@@ -56,6 +56,24 @@ host->device transfer (the registry's host LRU is the second tier,
 disk the third).  Reverted adapters are captured into the cache from
 the revert's displaced rows, so a tenant's delta crosses the host
 boundary at most once while it stays hot.
+
+**PagedKV** (``runtime/paged_kv.py``): pass ``kv_layout="paged"`` and
+the dense ``[slots, max_seq]`` KV cache becomes a pool of fixed-size
+pages addressed through per-slot page tables — HBM is paid per live
+token, not per worst-case slot, so the same bytes admit far more
+concurrent requests on mixed-length workloads.  Admission turns
+*continuous*: every decode step retires finished requests (their
+pages free immediately) and admits queued ones against a worst-case
+page reservation, so a mid-flight allocation can never fail and the
+wedge guard in ``run_until_drained`` stays an invariant.  With
+``prefix_share`` (and an all-global-attention config) tenants with a
+common prompt prefix map the *same* physical pages copy-on-write:
+pages split lazily on the first diverging write.  Token streams are
+bit-identical to the dense layout — the paged decode path gathers the
+exact dense-shaped view through the page table (or runs the fused
+write+attend Pallas kernel) and chunked prefill mirrors the dense
+concat.  Per-request streaming is available on both layouts via
+``Request.on_token``.
 """
 from __future__ import annotations
 
@@ -63,7 +81,7 @@ import functools
 import math
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Union
+from typing import Callable, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -71,6 +89,7 @@ import numpy as np
 
 from repro.models import model as model_lib
 from repro.obs import MetricsRegistry
+from repro.runtime import paged_kv
 
 BASE = None  # adapter id of the un-adapted base model
 
@@ -82,6 +101,7 @@ class Request:
     max_new_tokens: int = 16
     adapter_id: Optional[str] = BASE   # None => base model
     slo_ms: Optional[float] = None     # per-request deadline budget
+    on_token: Optional[Callable[[int], None]] = None  # streaming callback
     out: List[int] = field(default_factory=list)
     done: bool = False
     submit_step: int = -1       # decode-step clock at submit()
@@ -125,6 +145,21 @@ def _decode_fn(cfg, attn_impl):
 
 
 @functools.lru_cache(maxsize=None)
+def _paged_decode_fn(cfg, attn_impl):
+    """Paged decode step: the page table rides along and the model masks
+    inactive slots itself (pooled caches write through the table, dense
+    ring blocks drop the write) — no server-side cache blend needed."""
+
+    def _decode(params, cache, token, pos_vec, active_mask, page_table):
+        return model_lib.decode_step(params, cfg, cache, token, pos_vec,
+                                     attn_impl=attn_impl,
+                                     page_table=page_table,
+                                     active=active_mask)
+
+    return jax.jit(_decode, donate_argnums=(1,))
+
+
+@functools.lru_cache(maxsize=None)
 def _prefill_fn(cfg, chunk_len, chunk_start):
     """Shared jitted chunk-prefill per (cfg, chunk shape) — chunk lengths
     are bucketed by the server, so the compile count stays at a handful
@@ -136,6 +171,29 @@ def _prefill_fn(cfg, chunk_len, chunk_start):
                                             chunk_start=chunk_start)
 
     return jax.jit(_pf, donate_argnums=(1,))
+
+
+@functools.lru_cache(maxsize=None)
+def _paged_prefill_fn(cfg, chunk_len, chunk_start):
+    """Paged chunk-prefill: rows scatter into physical pages through the
+    page table; ``begin`` [B] skips rows below each slot's shared-prefix
+    match (those pages are mapped, not recomputed)."""
+
+    def _pf(params, cache, tokens, lengths, page_table, begin):
+        return model_lib.prefill_into_slots(params, cfg, cache, tokens,
+                                            lengths,
+                                            chunk_start=chunk_start,
+                                            page_table=page_table,
+                                            begin=begin)
+
+    return jax.jit(_pf, donate_argnums=(1,))
+
+
+@functools.lru_cache(maxsize=None)
+def _copy_pages_fn():
+    """Jitted device half of a COW split (src -> dst page copies in every
+    pooled leaf).  jit's shape cache handles the pair-count bucketing."""
+    return jax.jit(model_lib.copy_cache_pages, donate_argnums=(0,))
 
 
 def _chunk_bucket(k: int, cap: int) -> int:
@@ -156,7 +214,9 @@ class DecodeServer:
                  aging_steps: Optional[int] = None,
                  ms_per_step: Union[float, str] = 1.0,
                  cache_bytes: int = 0, cache=None,
-                 prefill_chunk: int = 64, tracer=None, metrics=None):
+                 prefill_chunk: int = 64, tracer=None, metrics=None,
+                 kv_layout: str = "dense", kv_page_size: int = 16,
+                 kv_pages: int = 0, prefix_share: bool = True):
         self.cfg = cfg
         # TraceKit: tracer=None disables tracing (hot paths guard with a
         # single `is None` check — no NullTracer dispatch).  The metrics
@@ -199,7 +259,37 @@ class DecodeServer:
         self.queue: List[Request] = []
         self.active: List[Optional[Request]] = [None] * batch_slots
         self.pos = np.zeros(batch_slots, np.int32)  # next write index
-        self.cache_state = model_lib.init_cache(cfg, batch_slots, max_seq)
+        # KV layout: dense [slots, max_seq] rows, or PagedKV — a page
+        # pool + per-slot page tables + the host-side allocator
+        # (runtime/paged_kv.py).  Page tables ride into the jitted step
+        # as a traced [slots, pages] int32, so admissions / COW splits
+        # never recompile.
+        if kv_layout not in ("dense", "paged"):
+            raise ValueError(f"kv_layout must be 'dense' or 'paged', "
+                             f"got {kv_layout!r}")
+        self.kv_layout = kv_layout
+        self.alloc: Optional[paged_kv.PageAllocator] = None
+        self._plans: Dict[int, paged_kv.AdmitPlan] = {}
+        if kv_layout == "paged":
+            if not model_lib.supports_paged_kv(cfg):
+                raise ValueError(
+                    "kv_layout='paged' needs an all-attention, token-only "
+                    "architecture (recurrent/SSM state is not paged)")
+            ps = int(kv_page_size)
+            # 0 = auto: the dense-equivalent page count (every slot can
+            # hold max_seq tokens) + the null page.  Pass a smaller
+            # kv_pages to oversubscribe slots against aggregate tokens.
+            npages = int(kv_pages) or batch_slots * (max_seq // ps) + 1
+            self.alloc = paged_kv.PageAllocator(
+                npages, ps, batch_slots, max_seq,
+                share_prefix=(prefix_share
+                              and model_lib.supports_prefix_share(cfg)),
+                metrics=self.metrics, tracer=tracer)
+            self.cache_state = model_lib.init_paged_cache(
+                cfg, batch_slots, npages, ps, max_seq)
+        else:
+            self.cache_state = model_lib.init_cache(cfg, batch_slots,
+                                                    max_seq)
         self.tokens = np.zeros((batch_slots, 1), np.int32)
         self.steps = 0
         # adapter swap state
@@ -211,7 +301,9 @@ class DecodeServer:
         self.swaps = 0
         self.swap_bytes = 0
         self.attn_impl = attn_impl
-        self._decode = _decode_fn(cfg, attn_impl)
+        self._decode = (_paged_decode_fn(cfg, attn_impl)
+                        if self.alloc is not None
+                        else _decode_fn(cfg, attn_impl))
         # chunked batched prefill (FastDecode); 0 or an unsupported
         # family (recurrent/SSM) falls back to per-token priming
         self.prefill_chunk = max(0, prefill_chunk)
@@ -245,6 +337,17 @@ class DecodeServer:
             if not self.registry.exists(req.adapter_id):
                 raise ValueError(f"request {req.rid}: adapter "
                                  f"{req.adapter_id!r} not in registry")
+        if self.alloc is not None:
+            # reject up front: a request whose worst case exceeds the
+            # whole page pool could never be admitted (it would wedge
+            # the queue behind an admission check that never passes)
+            total = min(len(req.prompt) + req.max_new_tokens, self.max_seq)
+            if not self.alloc.fits_ever(total):
+                raise ValueError(
+                    f"request {req.rid}: worst case {total} tokens needs "
+                    f"more KV pages than the pool holds "
+                    f"({self.alloc.usable_pages} x "
+                    f"{self.alloc.page_size} rows)")
         req.submit_step = self.steps
         req.submit_ns = time.monotonic_ns()
         self.queue.append(req)
@@ -457,12 +560,53 @@ class DecodeServer:
                            (any_group or r.adapter_id == group)
                            for r in self.active])
 
+    def _emit(self, req: Request, slot: int, tok: int):
+        """Record one generated token (output list + streaming callback
+        + slot feedback for the next decode step)."""
+        req.out.append(tok)
+        self.tokens[slot, 0] = tok
+        if req.on_token is not None:
+            req.on_token(tok)
+
+    def _retire(self, req: Request, slot: int):
+        """Free a finished request's slot (and, paged, its KV pages —
+        continuous batching re-admits against them the same step)."""
+        req.done = True
+        req.finish_step = self.steps
+        self.active[slot] = None
+        if self.alloc is not None:
+            self.alloc.release_slot(slot)
+            self._plans.pop(slot, None)
+        self._finish(req)
+
+    def _apply_copies(self, copies):
+        """Run the device half of COW splits: pad the (src, dst) pairs
+        to a power of two (null-page self-copies are no-ops) so the
+        jitted copy hits a handful of compiled shapes."""
+        if not copies:
+            return
+        n = 1
+        while n < len(copies):
+            n <<= 1
+        src = np.zeros(n, np.int32)
+        dst = np.zeros(n, np.int32)
+        for i, (s, d) in enumerate(copies):
+            src[i], dst[i] = s, d
+        self.cache_state = _copy_pages_fn()(
+            self.cache_state, jnp.asarray(src), jnp.asarray(dst))
+
     def _admit(self, group: Optional[str] = BASE):
         """Fill free slots with queued requests of ``group`` and prime
         their prompts (the delta for ``group`` is already applied).
         Admitted requests are primed TOGETHER through the chunked
         batched prefill when the family supports it — ceil(P/chunk)
-        dispatches for the whole group — else per token."""
+        dispatches for the whole group — else per token.
+
+        Paged KV: admission is additionally gated on page capacity —
+        each request reserves its worst case (prompt + max new tokens,
+        minus shared prefix pages) and FIFO order is preserved per
+        group (a request that does not fit blocks later ones, so big
+        requests cannot be starved by a stream of small ones)."""
         admitted = []
         for slot in range(self.slots):
             if self.active[slot] is not None:
@@ -471,7 +615,16 @@ class DecodeServer:
                        if r.adapter_id == group), None)
             if qi is None:
                 break
-            req = self.queue.pop(qi)
+            req = self.queue[qi]
+            if self.alloc is not None:
+                total = min(len(req.prompt) + req.max_new_tokens,
+                            self.max_seq)
+                plan = self.alloc.plan(group, req.prompt, total)
+                if not self.alloc.can_admit(plan.need_pages):
+                    break           # pages free as active requests retire
+                self.alloc.admit(slot, plan)
+                self._plans[slot] = plan
+            self.queue.pop(qi)
             self.active[slot] = req
             admitted.append((slot, req))
         if not admitted:
@@ -495,42 +648,74 @@ class DecodeServer:
             tr.add_span("admit", admit_t0, time.monotonic_ns(),
                         lane="sched", group=str(group), count=len(admitted))
         for (slot, req), first in zip(admitted, firsts):
-            req.out.append(first)
+            if self.alloc is not None:
+                # pin the freshly-prefilled prompt pages BEFORE the
+                # first decode write: the registry pin keeps them
+                # immutable (the write COW-splits), so later requests
+                # with the same prefix map them instead of prefilling
+                self.alloc.register(slot, group, req.prompt)
             req.first_token_step = self.steps
-            self.tokens[slot, 0] = first
+            self._emit(req, slot, first)
             self.pos[slot] = len(req.prompt)
             self.prefill_prompt_tokens += len(req.prompt)
             self.metrics.counter("prefill/prompt_tokens").inc(
                 len(req.prompt))
             if len(req.out) >= req.max_new_tokens:
-                req.done = True
-                req.finish_step = self.steps
-                self.active[slot] = None
-                self._finish(req)
+                self._retire(req, slot)
+
+    def _prime_begins(self, admitted) -> np.ndarray:
+        """Paged prime prep: make every slot's fresh prompt rows
+        writable (allocating pages, COW-splitting shared ones) and
+        return each slot's first self-computed position — the
+        shared-prefix match length (0 for the whole batch when prefix
+        sharing is off or nothing matched)."""
+        begins = np.zeros(self.slots, np.int32)
+        copies = []
+        for slot, req in admitted:
+            b = self._plans[slot].matched_len
+            begins[slot] = b
+            copies.extend(self.alloc.ensure_range(slot, b,
+                                                  len(req.prompt)))
+        self._apply_copies(copies)
+        return begins
 
     def _prime_tokenwise(self, admitted) -> List[int]:
         """Legacy priming: teacher-force each prompt through the decode
         step, one token (= one whole-model dispatch) at a time, one
-        request at a time.  Returns each request's first new token."""
+        request at a time.  Returns each request's first new token.
+        Paged slots skip their shared-prefix rows — the history is
+        already mapped, so teacher-forcing resumes mid-prompt."""
         tr = self.tracer
+        paged = self.alloc is not None
+        begins = self._prime_begins(admitted) if paged \
+            else np.zeros(self.slots, np.int32)
+        table = (jnp.asarray(self.alloc.table()) if paged else None)
         firsts = []
         for slot, req in admitted:
             logits = None
             toks = self.tokens.copy()
             t0 = time.monotonic_ns() if tr is not None else 0
-            for t, tok in enumerate(req.prompt):
-                toks[slot, 0] = int(tok)
+            b0 = int(begins[slot])
+            for t in range(b0, len(req.prompt)):
+                toks[slot, 0] = int(req.prompt[t])
                 pos = self.pos.copy()
                 pos[slot] = t
-                logits, self.cache_state = self._decode(
-                    self.params, self.cache_state, jnp.asarray(toks),
-                    jnp.asarray(pos), jnp.asarray(self._mask(slot)))
+                if paged:
+                    logits, self.cache_state = self._decode(
+                        self.params, self.cache_state, jnp.asarray(toks),
+                        jnp.asarray(pos), jnp.asarray(self._mask(slot)),
+                        table)
+                else:
+                    logits, self.cache_state = self._decode(
+                        self.params, self.cache_state, jnp.asarray(toks),
+                        jnp.asarray(pos), jnp.asarray(self._mask(slot)))
                 self.prefill_dispatches += 1
-            self.metrics.counter("prefill/dispatches").inc(len(req.prompt))
+            self.metrics.counter("prefill/dispatches").inc(
+                len(req.prompt) - b0)
             if tr is not None:
                 tr.add_span("prefill", t0, time.monotonic_ns(),
                             lane="sched", kind="tokenwise", rid=req.rid,
-                            tokens=len(req.prompt))
+                            tokens=len(req.prompt) - b0)
             # final prime logits predict the first new token
             firsts.append(int(jnp.argmax(logits[slot])))
         return firsts
@@ -540,29 +725,52 @@ class DecodeServer:
         through ``model.prefill_into_slots`` together, ``prefill_chunk``
         positions per dispatch (tail chunks bucketed to powers of two).
         K/V rows land directly in the slot-batched cache; the chunk
-        covering each prompt's last token yields its first new token."""
+        covering each prompt's last token yields its first new token.
+
+        Paged + prefix sharing uses a FIXED chunk grid (full-size
+        chunks at aligned starts, no tail bucketing): a K/V row's bits
+        then depend only on the token prefix, never on this batch's
+        chunk layout, so rows written by one request can be mapped by
+        another bit-for-bit.  Chunks fully below every slot's match
+        point are skipped outright."""
         tr = self.tracer
+        paged = self.alloc is not None
+        begins = self._prime_begins(admitted) if paged \
+            else np.zeros(self.slots, np.int32)
+        table = (jnp.asarray(self.alloc.table()) if paged else None)
+        begin_j = jnp.asarray(begins) if paged else None
+        fixed_grid = paged and self.alloc.share_prefix
         lengths = np.zeros(self.slots, np.int32)
         for slot, req in admitted:
             lengths[slot] = len(req.prompt)
         longest = int(lengths.max())
         firsts: Dict[int, int] = {}
         start = 0
+        if fixed_grid:
+            start = (int(min(begins[s] for s, _ in admitted))
+                     // self.prefill_chunk) * self.prefill_chunk
         while start < longest:
-            k = _chunk_bucket(min(self.prefill_chunk, longest - start),
-                              self.prefill_chunk)
+            k = (self.prefill_chunk if fixed_grid else
+                 _chunk_bucket(min(self.prefill_chunk, longest - start),
+                               self.prefill_chunk))
             toks = np.zeros((self.slots, k), np.int32)
             for slot, req in admitted:
                 hi = min(len(req.prompt), start + k)
                 if hi > start:
                     toks[slot, :hi - start] = np.asarray(
                         req.prompt[start:hi], np.int32)
-            pf = _prefill_fn(self.cfg, k, start)
+            pf = (_paged_prefill_fn(self.cfg, k, start) if paged
+                  else _prefill_fn(self.cfg, k, start))
             before = _jit_cache_size(pf)
             t0 = time.monotonic_ns() if tr is not None else 0
-            logits, self.cache_state = pf(
-                self.params, self.cache_state, jnp.asarray(toks),
-                jnp.asarray(lengths))
+            if paged:
+                logits, self.cache_state = pf(
+                    self.params, self.cache_state, jnp.asarray(toks),
+                    jnp.asarray(lengths), table, begin_j)
+            else:
+                logits, self.cache_state = pf(
+                    self.params, self.cache_state, jnp.asarray(toks),
+                    jnp.asarray(lengths))
             if tr is not None:
                 t1 = time.monotonic_ns()
                 compiled = _jit_cache_size(pf) > before >= 0
@@ -610,11 +818,28 @@ class DecodeServer:
         # this call means THIS step paid a fresh compile — exclude it
         # from the ms_per_step EMA (a compile-laden sample would poison
         # the SLO clock for ~5 samples) and record it as an event
+        if self.alloc is not None:
+            # make this step's write rows writable BEFORE dispatch:
+            # allocates a fresh page at page boundaries, COW-splits a
+            # shared one at the first diverging write.  Reservations
+            # guarantee the allocs succeed (see paged_kv.py).
+            copies = []
+            for slot in range(self.slots):
+                if mask[slot]:
+                    p = int(self.pos[slot])
+                    copies.extend(self.alloc.ensure_range(slot, p, p + 1))
+            self._apply_copies(copies)
         before = _jit_cache_size(self._decode)
         t0_ns = time.monotonic_ns()
-        logits, self.cache_state = self._decode(
-            self.params, self.cache_state, jnp.asarray(self.tokens),
-            jnp.asarray(self.pos), jnp.asarray(mask))
+        if self.alloc is not None:
+            logits, self.cache_state = self._decode(
+                self.params, self.cache_state, jnp.asarray(self.tokens),
+                jnp.asarray(self.pos), jnp.asarray(mask),
+                jnp.asarray(self.alloc.table()))
+        else:
+            logits, self.cache_state = self._decode(
+                self.params, self.cache_state, jnp.asarray(self.tokens),
+                jnp.asarray(self.pos), jnp.asarray(mask))
         nxt = np.asarray(jnp.argmax(logits, -1))  # host sync point
         t1_ns = time.monotonic_ns()
         after = _jit_cache_size(self._decode)
@@ -648,17 +873,12 @@ class DecodeServer:
         for slot, req in enumerate(self.active):
             if req is None or not mask[slot]:
                 continue
-            tok = int(nxt[slot])
-            req.out.append(tok)
-            self.tokens[slot, 0] = tok
+            self._emit(req, slot, int(nxt[slot]))
             self.pos[slot] += 1
             if (len(req.out) >= req.max_new_tokens
                     or self.pos[slot] >= self.max_seq - 1):
-                req.done = True
-                req.finish_step = self.steps
-                self.active[slot] = None
+                self._retire(req, slot)
                 finished += 1
-                self._finish(req)
         if not self._group_has_work(group):
             self._turn_left = 0
         return finished
@@ -717,6 +937,11 @@ class DecodeServer:
         }
         if self.cache is not None:
             out["cache"] = self.cache.stats()
+        if self.alloc is not None:
+            kv = dict(nested.get("kv", {}))
+            kv["page_size"] = self.alloc.page_size
+            kv["num_pages"] = self.alloc.num_pages
+            out["kv"] = kv
         # deprecated flat aliases (pre-TraceKit layout)
         out.update({
             "steps": self.steps, "swaps": self.swaps,

@@ -1,0 +1,509 @@
+"""PagedKV: allocator invariants (free-list exhaustion/recycle, COW
+refcount splits, prefix-share dedup, registry eviction), fused kernel
+parity, paged-vs-dense bit-identical token streams across serving legs
+(rr/aware/cached/q8 churn, chunked + per-token priming, Pallas), and
+continuous-batching capacity behavior (throttled admission never trips
+the wedge guard; ≥2x admitted slots at equal KV HBM)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.adapters import (InMemoryRegistry, extract_delta,
+                            quantize_delta)
+from repro.adapters.testing import perturb_rows as _tuned
+from repro.kernels import decode_attention as da
+from repro.kernels import ref as ref_lib
+from repro.models import model
+from repro.obs import MetricsRegistry, Tracer
+from repro.runtime.paged_kv import AdmitPlan, PageAllocator, pages_for
+from repro.runtime.serve_loop import DecodeServer, Request
+
+
+# --------------------------------------------------------------------- #
+# allocator unit behavior
+# --------------------------------------------------------------------- #
+
+
+def test_pages_for_and_null_page_reserved():
+    assert pages_for(0, 8) == 0
+    assert pages_for(1, 8) == 1
+    assert pages_for(8, 8) == 1
+    assert pages_for(9, 8) == 2
+    al = PageAllocator(5, 8, slots=2, max_seq=32, share_prefix=False)
+    assert al.usable_pages == 4 and al.pages_in_use == 0
+    # every allocation hands out pages 1..N-1; page 0 is never issued
+    al.admit(0, al.plan(None, [1, 2, 3], 32))
+    got = set()
+    for l in range(4):
+        al.ensure_range(0, l * 8, l * 8 + 1)
+        got.add(int(al.table()[0, l]))
+    assert 0 not in got and got == {1, 2, 3, 4}
+
+
+def test_free_list_exhaustion_and_recycle():
+    al = PageAllocator(5, 4, slots=4, max_seq=16, share_prefix=False)
+    p0 = al.plan(None, [1, 2], 8)          # 2 pages worst case
+    assert p0.need_pages == 2
+    al.admit(0, p0)
+    al.admit(1, al.plan(None, [3, 4], 8))
+    # 4 usable pages, 4 reserved: a third 2-page request must wait
+    assert not al.can_admit(al.plan(None, [5, 6], 8).need_pages)
+    al.ensure_range(0, 0, 2)
+    al.ensure_range(1, 0, 2)
+    assert al.pages_in_use == 2
+    # retire slot 0: its page recycles and the reservation returns
+    al.release_slot(0)
+    assert al.can_admit(al.plan(None, [5, 6], 8).need_pages)
+    al.admit(2, al.plan(None, [5, 6], 8))
+    al.ensure_range(2, 0, 8)               # both reserved pages land
+    assert al.pages_in_use == 3 and al.n_free == 1
+
+
+def test_overcommitted_alloc_raises():
+    """Bypassing can_admit trips the reservation invariant loudly
+    instead of silently corrupting a page."""
+    al = PageAllocator(3, 4, slots=2, max_seq=16, share_prefix=False)
+    al.admit(0, AdmitPlan(matched_len=0, need_pages=2))
+    al.ensure_range(0, 0, 8)
+    al.admit(1, AdmitPlan(matched_len=0, need_pages=2))  # liar's plan
+    with pytest.raises(RuntimeError, match="exhausted"):
+        al.ensure_range(1, 0, 8)
+
+
+def test_cow_refcount_split_on_write():
+    al = PageAllocator(8, 4, slots=3, max_seq=16, share_prefix=True)
+    prompt = list(range(10, 16))           # 6 tokens: 1 full + partial
+    al.admit(0, al.plan("t", prompt, 10))
+    al.ensure_range(0, 0, 6)
+    al.register(0, "t", prompt)
+    tbl0 = al.table()[0]
+    # a longer prompt extending the registered one: full page AND the
+    # partial tail page both map shared
+    plan = al.plan("t", prompt + [77, 78], 10)
+    assert plan.matched_len == 6 and len(plan.full_pages) == 1
+    assert plan.partial_page == int(tbl0[1])
+    al.admit(1, plan)
+    assert np.array_equal(al.table()[1][:2], tbl0[:2])
+    # slot 1's first decode write at pos 6 lands in the shared partial
+    # page -> COW: a copy pair comes back, tables diverge, refs drop
+    before = al.n_cow
+    copies = al.ensure_range(1, 6, 7)
+    assert len(copies) == 1 and copies[0][0] == int(tbl0[1])
+    assert al.n_cow == before + 1
+    assert al.table()[1][1] != tbl0[1]
+    # the DONOR too: its partial page is registry-pinned, so its own
+    # decode write must split as well (registered pages are immutable)
+    copies0 = al.ensure_range(0, 6, 7)
+    assert len(copies0) == 1 and copies0[0][0] == int(tbl0[1])
+
+
+def test_prefix_share_dedup_accounting():
+    m = MetricsRegistry()
+    tr = Tracer()
+    al = PageAllocator(16, 4, slots=4, max_seq=16, share_prefix=True,
+                       metrics=m, tracer=tr)
+    prompt = list(range(9))                # 2 full pages + 1 tail token
+    al.admit(0, al.plan("t", prompt, 12))
+    al.ensure_range(0, 0, 9)
+    allocs_for_donor = al.n_alloc
+    al.register(0, "t", prompt)
+    # three sharers: each maps 2 full pages (tail is capped at plen-1,
+    # page 2 holds only the last token -> computed locally)
+    for slot in (1, 2, 3):
+        plan = al.plan("t", prompt, 12)
+        assert plan.matched_len == 8 and len(plan.full_pages) == 2
+        al.admit(slot, plan)
+        al.ensure_range(slot, plan.matched_len, 9)
+    assert al.n_prefix_pages == 6 and al.n_prefix_tokens == 24
+    # sharers re-use the donor's 2 prefix pages: only their private
+    # tail page was allocated (1 page each)
+    assert al.n_alloc == allocs_for_donor + 3
+    assert m.counter("kv/prefix_hit_pages").value == 6
+    assert m.counter("kv/prefix_hit_tokens").value == 24
+    # shared = 2 full prefix pages + the donor's registry-pinned tail
+    assert int(m.gauge("kv/shared_pages").value) == 3
+    names = [e.name for e in tr.events()]
+    assert "prefix_share" in names and "page_alloc" in names
+
+
+def test_registry_lru_eviction_frees_pages():
+    al = PageAllocator(4, 4, slots=2, max_seq=8, share_prefix=True)
+    al.admit(0, al.plan("t", [1, 2, 3, 4, 5], 8))
+    al.ensure_range(0, 0, 5)
+    al.register(0, "t", [1, 2, 3, 4, 5])
+    al.release_slot(0)                     # registry pin keeps 2 pages
+    assert al.pages_in_use == 2 and al._evictable() == 2
+    # a request needing every page: admission counts evictable pages,
+    # and an alloc past the free list evicts the LRU entry to free one
+    plan = al.plan("t", [9, 9, 9], 8)
+    assert al.can_admit(plan.need_pages)
+    al.admit(1, plan)
+    al.ensure_range(1, 0, 8)
+    assert al.n_evict == 1 and al.pages_in_use == 3
+
+
+def test_release_slot_keeps_shared_pages_for_other_mapper():
+    al = PageAllocator(8, 4, slots=2, max_seq=8, share_prefix=True)
+    prompt = [7, 7, 7, 7, 2]
+    al.admit(0, al.plan("t", prompt, 8))
+    al.ensure_range(0, 0, 5)
+    al.register(0, "t", prompt)
+    plan = al.plan("t", prompt, 8)
+    al.admit(1, plan)
+    al.release_slot(0)
+    # slot 1 still maps the shared full page; releasing the donor must
+    # not free it out from under the sharer
+    phys = int(al.table()[1][0])
+    assert phys != 0 and al._ref[phys] >= 2
+
+
+# --------------------------------------------------------------------- #
+# fused paged kernel: oracle parity + write correctness
+# --------------------------------------------------------------------- #
+
+
+def _paged_fixture(B=4, H=4, KV=2, hd=8, ps=4, NP=8, P=40,
+                   dtype=jnp.bfloat16, pos=(5, 9, 4, 30),
+                   act=(True, True, True, False), share=True, seed=0):
+    """A VALID paged decode state: shared pages only where no active
+    slot writes (the allocator's COW invariant)."""
+    rng = np.random.default_rng(seed)
+    tbl = np.zeros((B, NP), np.int32)
+    nxt = 3
+    for b in range(B):
+        for j in range(NP):
+            if share and j == 0:
+                tbl[b, j] = (b % 2) + 1
+            else:
+                tbl[b, j] = nxt
+                nxt += 1
+    assert nxt <= P
+    for b in range(B):
+        if act[b] and share:
+            assert pos[b] >= ps          # never write a shared page
+    kp = jnp.asarray(rng.standard_normal((P, ps, KV, hd)), dtype)
+    vp = jnp.asarray(rng.standard_normal((P, ps, KV, hd)), dtype)
+    q = jnp.asarray(rng.standard_normal((B, 1, H, hd)), jnp.float32)
+    nk = jnp.asarray(rng.standard_normal((B, KV, hd)), jnp.float32)
+    nv = jnp.asarray(rng.standard_normal((B, KV, hd)), jnp.float32)
+    return (q, nk, nv, kp, vp, jnp.asarray(pos, jnp.int32),
+            jnp.asarray(tbl), jnp.asarray(act))
+
+
+@pytest.mark.parametrize("case", [
+    dict(),                                         # bf16 + shared + inactive
+    dict(act=(True,) * 4),                          # all active
+    dict(share=False, pos=(5, 9, 0, 30)),           # pos 0 write
+    dict(window=6),                                 # sliding window
+    dict(softcap=30.0),                             # gemma-style softcap
+    dict(dtype=jnp.float32),                        # f32 pools
+    dict(pos=(7, 8, 4, 31), act=(True,) * 4),       # page-boundary writes
+    dict(act=(False,) * 4),                         # all inactive
+])
+def test_paged_kernel_matches_oracle(case):
+    case = dict(case)
+    window = case.pop("window", 0)
+    softcap = case.pop("softcap", 0.0)
+    args = _paged_fixture(**case)
+    o_r, k_r, v_r = ref_lib.paged_decode_attention_ref(
+        *args, window=window, softcap=softcap)
+    o_k, k_k, v_k = da.paged_decode_attention_fwd(
+        *args, window=window, softcap=softcap, interpret=True)
+    actf = jnp.asarray(args[7], jnp.float32)[:, None, None, None]
+    assert float(jnp.max(jnp.abs((o_r - o_k) * actf))) < 2e-6
+    # pools must agree everywhere EXCEPT page 0 (the null page is the
+    # inactive-slot write sink — garbage by contract, never read)
+    np.testing.assert_array_equal(np.asarray(k_r[1:]), np.asarray(k_k[1:]))
+    np.testing.assert_array_equal(np.asarray(v_r[1:]), np.asarray(v_k[1:]))
+
+
+def test_paged_kernel_write_lands_in_right_row():
+    q, nk, nv, kp, vp, pos, tbl, act = _paged_fixture(share=False,
+                                                      pos=(5, 9, 0, 30))
+    _, k2, v2 = da.paged_decode_attention_fwd(
+        q, nk, nv, kp, vp, pos, tbl, act, interpret=True)
+    ps = kp.shape[1]
+    for b in range(4):
+        phys = int(tbl[b, int(pos[b]) // ps])
+        row = np.asarray(k2[phys, int(pos[b]) % ps])
+        if bool(act[b]):
+            np.testing.assert_array_equal(
+                row, np.asarray(nk[b].astype(kp.dtype)))
+        else:       # inactive: the mapped page keeps its old rows
+            np.testing.assert_array_equal(
+                row, np.asarray(kp[phys, int(pos[b]) % ps]))
+
+
+def test_paged_kernel_bitwise_vs_dense_kernel_at_equal_blocks():
+    """With page_size == block_k the fused paged sweep is block-for-
+    block the dense kernel's online softmax on the gathered view —
+    outputs must agree BITWISE (satellite: fused write+attend)."""
+    ps = 8
+    q, nk, nv, kp, vp, pos, tbl, act = _paged_fixture(
+        ps=ps, NP=4, P=20, pos=(5, 9, 4, 30), share=False)
+    o_p, k2, v2 = da.paged_decode_attention_fwd(
+        q, nk, nv, kp, vp, pos, tbl, act, interpret=True)
+    # dense view: gather each slot's pages, with the new row scattered
+    # (exactly what the separate-write + attend-only path would see)
+    B, NP = tbl.shape
+    P, _, KV, hd = kp.shape
+    ridx = (np.asarray(tbl)[:, :, None] * ps
+            + np.arange(ps)[None, None]).reshape(B, NP * ps)
+    ck = jnp.take(jnp.asarray(k2).reshape(P * ps, KV, hd), ridx, axis=0)
+    cv = jnp.take(jnp.asarray(v2).reshape(P * ps, KV, hd), ridx, axis=0)
+    o_d = da.decode_attention_fwd(q, ck, cv, pos, block_k=ps,
+                                  interpret=True)
+    act_rows = np.asarray(act)
+    np.testing.assert_array_equal(np.asarray(o_p)[act_rows],
+                                  np.asarray(o_d)[act_rows])
+
+
+# --------------------------------------------------------------------- #
+# serving: paged vs dense bit-identical streams
+# --------------------------------------------------------------------- #
+
+
+def _run_server(cfg, params, lens, seed=7, batch_slots=3, max_seq=64,
+                new_tokens=6, tenancy=None, registry=None, **kw):
+    rng = np.random.default_rng(seed)
+    srv = DecodeServer(cfg, params, batch_slots=batch_slots,
+                       max_seq=max_seq, registry=registry, **kw)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size - 1,
+                                        n).astype(np.int32),
+                    max_new_tokens=new_tokens,
+                    adapter_id=None if tenancy is None else tenancy[i])
+            for i, n in enumerate(lens)]
+    for r in reqs:
+        srv.submit(r)
+    srv.run_until_drained()
+    assert all(r.done for r in reqs)
+    return [tuple(r.out) for r in reqs], srv
+
+
+_LENS = [5, 11, 3, 9, 7, 4]
+
+
+@pytest.mark.parametrize("leg,kw", [
+    # chunked priming, sharing off: identical chunk grid to dense
+    ("chunked", dict(prefill_chunk=8, prefix_share=False)),
+    # per-token priming, sharing ON: teacher-forcing resumes mid-prompt
+    # on shared prefixes, rows are bit-equal to dense writes
+    ("tokenwise_share", dict(prefill_chunk=0)),
+    # tight pool: continuous batching throttles admissions, streams
+    # stay bit-identical (only the admission *times* change)
+    ("tight_pool", dict(prefill_chunk=8, prefix_share=False,
+                        kv_pages=2 * 8 + 1)),
+])
+def test_paged_stream_parity_vs_dense(tiny_cfg, tiny_params, leg, kw):
+    dense, _ = _run_server(tiny_cfg, tiny_params, _LENS,
+                           prefill_chunk=kw.get("prefill_chunk", 8),
+                           attn_impl="full")
+    paged, srv = _run_server(tiny_cfg, tiny_params, _LENS,
+                             attn_impl="full", kv_layout="paged",
+                             kv_page_size=8, **kw)
+    assert paged == dense, f"{leg}: paged stream diverged from dense"
+    assert srv.alloc.pages_in_use <= srv.alloc.usable_pages
+
+
+def test_paged_prefix_share_chunked_parity(tiny_cfg, tiny_params):
+    """Chunked priming with prefix sharing: the fixed chunk grid keeps
+    shared rows bit-equal across requests, so streams still match the
+    dense server when prompt lengths align with the grid."""
+    common = np.random.default_rng(3).integers(
+        1, tiny_cfg.vocab_size - 1, 8).astype(np.int32)
+
+    def run(**kw):
+        srv = DecodeServer(tiny_cfg, tiny_params, batch_slots=3,
+                           max_seq=64, attn_impl="full",
+                           prefill_chunk=8, **kw)
+        reqs = [Request(rid=i,
+                        prompt=np.concatenate(
+                            [common, np.full(8, 20 + i, np.int32)]),
+                        max_new_tokens=5)
+                for i in range(5)]
+        for r in reqs:
+            srv.submit(r)
+        srv.run_until_drained()
+        return [tuple(r.out) for r in reqs], srv
+
+    dense, _ = run()
+    paged, srv = run(kv_layout="paged", kv_page_size=8)
+    assert paged == dense
+    # requests admitted after the donor's registration mapped its pages
+    assert srv.alloc.n_prefix_pages >= 1
+    assert srv.alloc.n_prefix_tokens >= 8
+
+
+def test_paged_parity_under_adapter_churn(tiny_cfg, tiny_params):
+    """rr / aware / cached / q8 scheduling churn: paged streams match
+    the dense streams of the SAME leg bit-for-bit."""
+    tunedA = _tuned(tiny_params, rows=(0, 2), scale=0.8, seed=10)
+    tunedB = _tuned(tiny_params, rows=(1, 3), scale=-0.6, seed=20)
+    deltas = {
+        "A": extract_delta(tiny_params, tunedA, meta={"adapter_id": "A"}),
+        "B": extract_delta(tiny_params, tunedB, meta={"adapter_id": "B"}),
+    }
+    churn = deltas["A"].nbytes + 64
+    tenancy = ["A", "B", None, "B", "A", None, "B", "A"]
+    lens = [3 + i % 3 for i in range(len(tenancy))]
+    legs = {
+        "rr": dict(adapter_aware=False),
+        "aware": dict(),
+        "cached": dict(cache_bytes=churn),
+        "q8": dict(cache_bytes=churn, q8=True),
+    }
+    for leg, kw in legs.items():
+        kw = dict(kw)
+        q8 = kw.pop("q8", False)
+
+        def mkreg():
+            return InMemoryRegistry(
+                {a: quantize_delta(d) for a, d in deltas.items()}
+                if q8 else {a: d for a, d in deltas.items()})
+
+        dense, _ = _run_server(tiny_cfg, tiny_params, lens,
+                               batch_slots=2, tenancy=tenancy,
+                               registry=mkreg(), steps_per_turn=2,
+                               prefill_chunk=4, **kw)
+        paged, srv = _run_server(tiny_cfg, tiny_params, lens,
+                                 batch_slots=2, tenancy=tenancy,
+                                 registry=mkreg(), steps_per_turn=2,
+                                 prefill_chunk=4, kv_layout="paged",
+                                 kv_page_size=8, prefix_share=False,
+                                 **kw)
+        assert paged == dense, f"{leg}: paged diverged under churn"
+        assert srv.alloc.pages_in_use == 0      # drained -> all freed
+
+
+def test_paged_pallas_fused_matches_dense_pallas(tiny_cfg, tiny_params):
+    """Fused write+attend kernel in the server loop: with page_size ==
+    the dense kernel's block the sweeps are identical, so streams match
+    the dense Pallas leg bitwise."""
+    dense, _ = _run_server(tiny_cfg, tiny_params, _LENS, prefill_chunk=8,
+                           attn_impl="pallas_interpret")
+    paged, _ = _run_server(tiny_cfg, tiny_params, _LENS, prefill_chunk=8,
+                           attn_impl="pallas_interpret",
+                           kv_layout="paged", kv_page_size=64,
+                           prefix_share=False)
+    assert paged == dense
+
+
+# --------------------------------------------------------------------- #
+# continuous batching: capacity, wedge guard, streaming
+# --------------------------------------------------------------------- #
+
+
+def test_tight_pool_throttles_but_never_wedges(tiny_cfg, tiny_params):
+    """A pool sized for ~1.5 requests forces serialized admission; the
+    wedge guard must never trip (reservations guarantee progress)."""
+    outs, srv = _run_server(tiny_cfg, tiny_params, [10, 10, 10, 10],
+                            new_tokens=6, attn_impl="full",
+                            prefill_chunk=8, kv_layout="paged",
+                            kv_page_size=8, kv_pages=4,
+                            prefix_share=False)
+    assert srv.alloc.pages_in_use == 0
+    assert srv.alloc.n_alloc == srv.alloc.n_free  # every page recycled
+
+
+def test_submit_rejects_request_larger_than_pool(tiny_cfg, tiny_params):
+    srv = DecodeServer(tiny_cfg, tiny_params, batch_slots=2, max_seq=64,
+                       kv_layout="paged", kv_page_size=8, kv_pages=3)
+    with pytest.raises(ValueError, match="pool"):
+        srv.submit(Request(rid=0, prompt=np.arange(30, dtype=np.int32),
+                           max_new_tokens=10))
+
+
+def test_paged_doubles_admitted_slots_at_equal_hbm(tiny_cfg, tiny_params):
+    """Mixed-length workload at EQUAL KV HBM bytes: the dense layout
+    fits 2 slots; the paged pool holding the same bytes admits >= 2x
+    the concurrent requests (acceptance criterion)."""
+    ps, max_seq = 8, 64
+    pool_pages = 2 * (max_seq // ps) + 1   # dense 2-slot HBM + null page
+    lens = [6, 4, 8, 5, 7, 4, 6, 5]
+
+    def peak(srv_kw, slots):
+        peak_active = 0
+        srv = DecodeServer(tiny_cfg, tiny_params, batch_slots=slots,
+                           max_seq=max_seq, attn_impl="full",
+                           prefill_chunk=8, **srv_kw)
+        rng = np.random.default_rng(5)
+        reqs = [Request(rid=i, prompt=rng.integers(
+            1, tiny_cfg.vocab_size - 1, n).astype(np.int32),
+            max_new_tokens=8) for i, n in enumerate(lens)]
+        for r in reqs:
+            srv.submit(r)
+        for _ in range(10_000):
+            srv.step()
+            peak_active = max(peak_active,
+                              sum(r is not None for r in srv.active))
+            if not srv.queue and all(r is None for r in srv.active):
+                break
+        assert all(r.done for r in reqs)
+        return peak_active
+
+    dense_peak = peak(dict(), slots=2)                 # HBM-bound: 2
+    paged_peak = peak(dict(kv_layout="paged", kv_page_size=ps,
+                           kv_pages=pool_pages, prefix_share=False),
+                      slots=8)
+    assert dense_peak == 2
+    assert paged_peak >= 2 * dense_peak
+
+
+def test_streaming_on_token_callback(tiny_cfg, tiny_params):
+    got = []
+    srv = DecodeServer(tiny_cfg, tiny_params, batch_slots=2, max_seq=64,
+                       prefill_chunk=8, kv_layout="paged",
+                       kv_page_size=8)
+    req = Request(rid=0, prompt=np.arange(1, 7, dtype=np.int32),
+                  max_new_tokens=4, on_token=got.append)
+    srv.submit(req)
+    srv.run_until_drained()
+    assert got == req.out and len(got) == 4
+    # dense layout streams identically
+    got_d = []
+    srv = DecodeServer(tiny_cfg, tiny_params, batch_slots=2, max_seq=64,
+                       prefill_chunk=8)
+    req_d = Request(rid=0, prompt=np.arange(1, 7, dtype=np.int32),
+                    max_new_tokens=4, on_token=got_d.append)
+    srv.submit(req_d)
+    srv.run_until_drained()
+    assert got_d == req_d.out == req.out
+
+
+def test_paged_requires_attention_family(tiny_cfg, tiny_params):
+    from repro.configs.base import BLOCK_RECURRENT
+    rec = tiny_cfg.replace(pattern=(BLOCK_RECURRENT,), lru_width=32)
+    with pytest.raises(ValueError, match="paged"):
+        DecodeServer(rec, model.init_params(jax.random.PRNGKey(0), rec),
+                     batch_slots=2, max_seq=32, kv_layout="paged")
+
+
+def test_kv_stats_section_and_trace_events(tiny_cfg, tiny_params):
+    """Satellite: TraceKit counters + kv section in stats() (nested),
+    page_alloc/page_free/cow_split/prefix_share events in the trace."""
+    tr = Tracer()
+    srv = DecodeServer(tiny_cfg, tiny_params, batch_slots=2, max_seq=64,
+                       prefill_chunk=8, kv_layout="paged",
+                       kv_page_size=8, tracer=tr)
+    rng = np.random.default_rng(1)
+    common = rng.integers(1, 100, 10).astype(np.int32)
+    for i in range(3):
+        srv.submit(Request(
+            rid=i,
+            prompt=np.concatenate([common,
+                                   np.full(2 + i, 110 + i, np.int32)]),
+            max_new_tokens=4))
+    srv.run_until_drained()
+    kv = srv.stats()["kv"]
+    for key in ("page_alloc", "page_free", "cow_split",
+                "prefix_hit_pages", "prefix_hit_tokens",
+                "pages_in_use", "pages_free", "shared_pages",
+                "page_size", "num_pages"):
+        assert key in kv, f"stats()['kv'] missing {key}"
+    assert kv["page_alloc"] > 0 and kv["page_free"] > 0
+    assert kv["cow_split"] > 0          # decode write split a pinned page
+    names = {e.name for e in tr.events()}
+    for ev in ("page_alloc", "page_free", "cow_split", "prefix_share"):
+        assert ev in names, f"trace missing {ev} events"

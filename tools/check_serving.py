@@ -15,7 +15,12 @@ It runs the three serving benchmarks in quick mode:
 - ``benchmarks/bench_decode_path.py``   -> prefill_dispatch_ratio
   (chunked / per-token priming dispatches), decode_bytes_ratio (fused
   decode-attention cache reads / full-max_seq scoring at a half-full
-  cache) and ttft_p50 / ttft_p99 time-to-first-token in decode steps,
+  cache), ttft_p50 / ttft_p99 time-to-first-token in decode steps,
+  plus the PagedKV capacity story: paged_pages_per_token (page-rounding
+  overhead over exact per-token KV memory), paged_admitted_ratio (peak
+  concurrent requests paged vs dense at equal KV HBM — the bench also
+  hard-asserts >= 2x) and paged_prefix_savings (share of prompt tokens
+  served from registered prefix pages on a shared-prompt workload),
 
 and compares every metric against ``benchmarks/serve_baselines.json``
 with a relative tolerance band.  Each metric has an orientation: moving
@@ -60,6 +65,9 @@ ORIENTATION = {
     "decode_bytes_ratio": "lower",
     "ttft_p50_steps": "lower",
     "ttft_p99_steps": "lower",
+    "paged_pages_per_token": "lower",
+    "paged_admitted_ratio": "higher",
+    "paged_prefix_savings": "higher",
 }
 
 
@@ -77,6 +85,9 @@ def collect_metrics() -> dict:
         "decode_bytes_ratio": float(decode["decode_bytes_ratio"]),
         "ttft_p50_steps": float(decode["ttft_p50_steps"]),
         "ttft_p99_steps": float(decode["ttft_p99_steps"]),
+        "paged_pages_per_token": float(decode["paged_pages_per_token"]),
+        "paged_admitted_ratio": float(decode["paged_admitted_ratio"]),
+        "paged_prefix_savings": float(decode["paged_prefix_savings"]),
         "swap_bytes_ratio": float(swap["ratio"]),
         "q8_payload_ratio": float(swap["q8_payload_ratio"]),
         "swap_reduction": float(sched["swap_reduction"]),

@@ -14,13 +14,17 @@ instrumentation contract promises (ISSUE 6 acceptance criteria):
   lane/ts_us/dur_us.
 - **Required spans**: ``--kind serve`` requires queue_wait, admit,
   prefill, decode_step (plus swap_apply/swap_revert under
-  ``--require-swaps``); ``--kind train`` requires data, train_step and
+  ``--require-swaps``, plus the PagedKV lifecycle instants
+  page_alloc/page_free/cow_split/prefix_share under
+  ``--require-paging``); ``--kind train`` requires data, train_step and
   per-step ``train_step_metrics`` records carrying the BlockLLM
   selection telemetry (sel_q, sel_churn, sel_grad_concentration).
 
 Usage:
     PYTHONPATH=src python tools/check_trace.py --kind serve \
         --require-swaps /tmp/trace_serve.json
+    PYTHONPATH=src python tools/check_trace.py --kind serve \
+        --require-paging /tmp/trace_paged.json
     PYTHONPATH=src python tools/check_trace.py --kind train \
         /tmp/trace_train.jsonl
 """
@@ -38,6 +42,7 @@ REQUIRED = {
     "any": (),
 }
 SWAP_SPANS = ("swap_apply", "swap_revert")
+PAGING_EVENTS = ("page_alloc", "page_free", "cow_split", "prefix_share")
 TRAIN_TELEMETRY = ("sel_q", "sel_churn", "sel_grad_concentration")
 
 
@@ -128,11 +133,16 @@ def main(argv=None) -> int:
     ap.add_argument("--require-swaps", action="store_true",
                     help="also require adapter swap spans (multi-tenant "
                          "serve runs)")
+    ap.add_argument("--require-paging", action="store_true",
+                    help="also require the PagedKV page-lifecycle "
+                         "instants (serve runs with --paged)")
     args = ap.parse_args(argv)
 
     required = list(REQUIRED[args.kind])
     if args.require_swaps:
         required += list(SWAP_SPANS)
+    if args.require_paging:
+        required += list(PAGING_EVENTS)
 
     for p in map(Path, args.paths):
         if not p.exists():
