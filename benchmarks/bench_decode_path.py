@@ -36,10 +36,20 @@ every counter is deterministic):
    prompt tokens served from registered prefix pages instead of being
    re-prefilled, on a shared-system-prompt workload).
 
+5. **SpecServe throughput.**  Self-speculative decoding (the base
+   model drafts, the adapter model verifies all N+1 positions in one
+   dispatch) re-serves a repetitive-text trace:
+   ``spec_tokens_per_step`` is the tokens emitted per scheduler step
+   with speculation on, gated >= 2x the non-speculative baseline on
+   the same trace with bit-identical streams (dense AND paged);
+   ``spec_acceptance_rate`` is the deterministic draft/verify
+   agreement rate under a synthetic BlockDelta tenant.
+
 Per-request token streams must be bit-identical between per-token and
-chunked priming AND between dense and paged KV layouts (the
-DecodeServer invariant: priming strategy and cache layout are invisible
-to the decoded stream).
+chunked priming AND between dense and paged KV layouts AND between
+speculative and plain decoding (the DecodeServer invariant: priming
+strategy, cache layout and speculation are invisible to the decoded
+stream).
 
 ``--trace-dir DIR`` writes one Chrome/Perfetto trace per serving leg
 (``decode_path_per_token.json`` / ``decode_path_chunked.json``) so the
@@ -182,6 +192,82 @@ def _paged_prefix_savings(cfg, params, max_seq, ps, chunk, n_req,
     return srv.alloc.n_prefix_tokens / total_prompt, srv
 
 
+def _spec_requests(cfg, n_req, new_tokens, adapter=None, seed=9):
+    """Repetitive-text workload: each prompt tiles a short motif, so
+    greedy decode settles into a loop the base drafter predicts —
+    the agreeable-text case where speculation pays most."""
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=np.tile(rng.integers(0, cfg.vocab_size, 3), 3),
+                    max_new_tokens=new_tokens, adapter_id=adapter)
+            for i in range(n_req)]
+
+
+def _spec_legs(cfg, params, max_seq, ps, chunk, n_req, new_tokens,
+               trace_dir):
+    """SpecServe gates: tokens per scheduler step with speculation on
+    (vs the non-speculative baseline on the same trace — bit-identical
+    streams required, dense AND paged), plus the tenant-leg acceptance
+    rate under a synthetic BlockDelta adapter."""
+    from repro.adapters import extract_delta
+    from repro.adapters.registry import InMemoryRegistry
+    from repro.adapters.testing import perturb_rows
+    draft_n = 4
+
+    def leg(spec, tracer=None, registry=None, adapter=None, **kw):
+        reqs = _spec_requests(cfg, n_req, new_tokens, adapter=adapter)
+        srv = DecodeServer(cfg, params, batch_slots=SLOTS,
+                           max_seq=max_seq, prefill_chunk=chunk,
+                           speculate=spec, registry=registry,
+                           tracer=tracer, **kw)
+        for r in reqs:
+            srv.submit(r)
+        srv.run_until_drained(max_steps=20_000)
+        return srv, {r.rid: tuple(r.out) for r in reqs}
+
+    base_srv, base_out = leg(0)
+    tracer, finish = _trace_leg(trace_dir, "decode_path_spec")
+    spec_srv, spec_out = leg(draft_n, tracer=tracer)
+    finish(spec_srv)
+    assert spec_out == base_out, \
+        "speculative decoding changed the decoded token streams (dense)"
+    total = sum(len(v) for v in base_out.values())
+    tps_base = total / base_srv.steps
+    tps_spec = total / spec_srv.steps
+    speedup = tps_spec / tps_base
+    assert speedup >= 2.0, \
+        (f"speculation reached only {speedup:.2f}x tokens/step on "
+         f"repetitive text (acceptance floor: 2x)")
+    _, paged_out = leg(draft_n, kv_layout="paged", kv_page_size=ps,
+                       prefix_share=False)
+    assert paged_out == base_out, \
+        "speculative decoding changed the decoded token streams (paged)"
+
+    # tenant leg: a real BlockDelta adapter verifies the base's drafts —
+    # acceptance is the (deterministic) draft/verify agreement rate, and
+    # streams must still match the tenant's own non-speculative greedy
+    # mild perturbation: a realistic near-base finetune whose greedy
+    # stream agrees with the base often but not always — acceptance
+    # lands mid-range instead of pinning at 0 or 1
+    tuned = perturb_rows(params, rows=(1, 3), seed=2, scale=0.01)
+    registry = InMemoryRegistry(
+        {"spec-t": extract_delta(params, tuned,
+                                 meta={"adapter_id": "spec-t"})})
+    _, t_base = leg(0, registry=registry, adapter="spec-t")
+    t_srv, t_spec = leg(draft_n, registry=registry, adapter="spec-t")
+    assert t_spec == t_base, \
+        "speculative decoding changed the tenant's token streams"
+    acceptance = t_srv.spec_accepted / t_srv.spec_drafted
+    print(f"speculative        : {tps_base:.2f} -> {tps_spec:.2f} "
+          f"tokens/step ({speedup:.2f}x, draft {draft_n}, base-group "
+          f"acceptance "
+          f"{spec_srv.spec_accepted / spec_srv.spec_drafted:.0%}); "
+          f"tenant acceptance {acceptance:.2f} "
+          f"({t_srv.spec_rounds} rounds, "
+          f"{t_srv.metrics.counter('spec/rollbacks').value} rollbacks)")
+    return tps_spec, acceptance
+
+
 def run(quick: bool = False, trace_dir=None):
     max_seq = 64 if quick else 256
     n_req = 8 if quick else 16
@@ -268,6 +354,10 @@ def run(quick: bool = False, trace_dir=None):
           f"({srv_px.alloc.n_prefix_pages} page hits, "
           f"{srv_px.alloc.n_cow} COW splits)")
 
+    # --- SpecServe: tokens/step + acceptance rate --------------------- #
+    spec_tps, spec_acceptance = _spec_legs(
+        cfg, params, max_seq, ps, chunk, n_req, new_tokens, trace_dir)
+
     common.emit("decode_prefill_dispatches_per_token", 0.0,
                 f"{legs['per_token']['srv'].prefill_dispatches}")
     common.emit("decode_prefill_dispatches_chunked", 0.0,
@@ -283,6 +373,9 @@ def run(quick: bool = False, trace_dir=None):
                 f"{admitted_ratio:.4f}")
     common.emit("decode_paged_prefix_savings", 0.0,
                 f"{prefix_savings:.4f}")
+    common.emit("decode_spec_tokens_per_step", 0.0, f"{spec_tps:.4f}")
+    common.emit("decode_spec_acceptance_rate", 0.0,
+                f"{spec_acceptance:.4f}")
 
     print(f"\nprefill dispatches: "
           f"{legs['per_token']['srv'].prefill_dispatches} -> "
@@ -298,7 +391,9 @@ def run(quick: bool = False, trace_dir=None):
             "ttft_p99_steps": float(p99),
             "paged_pages_per_token": float(pages_per_token),
             "paged_admitted_ratio": float(admitted_ratio),
-            "paged_prefix_savings": float(prefix_savings)}
+            "paged_prefix_savings": float(prefix_savings),
+            "spec_tokens_per_step": float(spec_tps),
+            "spec_acceptance_rate": float(spec_acceptance)}
 
 
 if __name__ == "__main__":

@@ -115,3 +115,33 @@ print(f"re-selections: {state.meta['reselections']}, "
 #    bytes model (achieved GB/s next to the roofline).  Traces are
 #    CI-validated by tools/check_trace.py (the trace-smoke job);
 #    benchmarks accept --trace-dir to emit one trace per measured leg.
+
+# 7. Speculative serving (SpecServe).  Under BlockDelta a tenant IS the
+#    base model plus <5% edited rows, so the base weights are always
+#    resident — a free draft model.  `--speculate N` makes each decode
+#    round flip the slot group to base weights, draft N tokens through
+#    the normal fast decode path, flip back, then score all N+1
+#    positions with the tenant's adapter in ONE chunked dispatch
+#    (model.verify_into_slots):
+#
+#        PYTHONPATH=src python -m repro.launch.serve \
+#            --quick --demo-adapters 1 --speculate 4 \
+#            --trace /tmp/spec.json
+#
+#    The longest draft prefix agreeing with the verifier's greedy
+#    argmaxes is accepted, plus the verifier's own next token (a bonus
+#    on full accept, a correction on mismatch) — every emitted token is
+#    an adapter argmax, so streams are BIT-IDENTICAL to plain decoding
+#    by construction, dense or paged (rejected draft rows are masked
+#    out by position dense-side and their pages unmapped paged-side).
+#    Speedup == acceptance: a draft of 4 with acceptance rate `a` emits
+#    ~(1 + 4a) tokens per round, so a near-base finetune (~0.85 on the
+#    bench's repetitive text) decodes 3-5x fewer rounds, while a
+#    divergent tenant degrades toward 1.0 — the per-group draft length
+#    adapts automatically (halves under ~40% acceptance, regrows above
+#    ~80%).  `DecodeServer.stats()["spec"]` reports rounds/drafted/
+#    accepted/rollbacks/flips/acceptance_rate/tokens_per_step; traces
+#    grow `spec_draft`/`spec_verify` spans (CI's trace-smoke validates
+#    them via check_trace --require-spec) and the serve gate pins
+#    spec_tokens_per_step / spec_acceptance_rate in
+#    benchmarks/serve_baselines.json.

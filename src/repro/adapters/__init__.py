@@ -50,14 +50,15 @@ back on load, so the round trip is exact.
 """
 from repro.adapters.delta import (DeltaEntry, SparseDelta, apply_delta,
                                   copy_tree, delta_from_trainer,
-                                  extract_delta, fingerprint, load_delta,
-                                  quantize_delta, revert_delta, save_delta)
+                                  extract_delta, fingerprint, flip_delta,
+                                  load_delta, quantize_delta, revert_delta,
+                                  save_delta)
 from repro.adapters.device_cache import AdapterCache
 from repro.adapters.registry import AdapterRegistry, InMemoryRegistry
 
 __all__ = [
     "AdapterCache", "DeltaEntry", "SparseDelta", "apply_delta",
     "copy_tree", "delta_from_trainer", "extract_delta", "fingerprint",
-    "load_delta", "quantize_delta", "revert_delta", "save_delta",
-    "AdapterRegistry", "InMemoryRegistry",
+    "flip_delta", "load_delta", "quantize_delta", "revert_delta",
+    "save_delta", "AdapterRegistry", "InMemoryRegistry",
 ]

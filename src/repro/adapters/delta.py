@@ -219,6 +219,23 @@ def revert_delta(params: Pytree, displaced: SparseDelta, *,
     return out
 
 
+def flip_delta(params: Pytree, other_side: SparseDelta, *, mode: str = "auto"
+               ) -> Tuple[Pytree, SparseDelta]:
+    """One half of a base<->adapter flip on privately-owned weights.
+
+    Because ``apply_delta`` is an involution whose displaced rows stay
+    device-resident, a server holding adapter-applied params plus the
+    displaced base rows can flip to the base model — and back — with a
+    pure device scatter-swap per edited leaf: no registry acquire, no
+    cache traffic, no fingerprint hash, O(delta rows) bytes moved.
+    Self-speculative serving does this twice per round (draft under the
+    base, verify under the adapter).  Returns ``(flipped_params,
+    other_side')`` where applying ``other_side'`` flips back bit-exactly.
+    """
+    return apply_delta(params, other_side, mode=mode, donate=True,
+                       check_fingerprint=False)
+
+
 def quantize_delta(delta: SparseDelta) -> SparseDelta:
     """Int8 block-quantize a delta's row payloads (opt-in at export).
 

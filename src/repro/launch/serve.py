@@ -37,6 +37,16 @@ every tenant a common system-prompt prefix so prefix hits and COW
 splits show up in the ``kv`` stats section; token streams are
 bit-identical to ``--dense`` (the default).
 
+SpecServe (``--speculate N``): self-speculative decoding — the
+always-resident base model drafts N tokens per scheduler step through
+the plain decode path, then the tenant's adapter-applied model scores
+all N+1 positions in one chunked verify dispatch and the longest
+greedy-agreeing prefix is accepted.  No second draft model: under
+BlockDelta a tenant differs from the base by <5% of rows, so the
+base↔adapter flip is a device scatter-swap.  Streams are bit-identical
+to non-speculative greedy serving; the draft length adapts per tenant
+as acceptance moves.  ``spec/*`` counters land in stats/traces.
+
 Serving-side regressions are gated in CI by ``tools/check_serving.py``
 against ``benchmarks/serve_baselines.json`` (re-baseline deliberately
 with ``--update``); the decode hot path itself is covered by
@@ -107,6 +117,16 @@ def main(argv=None):
     ap.add_argument("--no-prefix-share", action="store_true",
                     help="disable copy-on-write prompt prefix sharing "
                          "between paged requests")
+    sp = ap.add_mutually_exclusive_group()
+    sp.add_argument("--speculate", type=int, default=0, metavar="N",
+                    help="SpecServe: the always-resident base model "
+                         "drafts N tokens per scheduler step and the "
+                         "adapter model verifies all N+1 positions in "
+                         "one dispatch; streams stay bit-identical to "
+                         "greedy serving (0 = off)")
+    sp.add_argument("--no-speculate", action="store_true",
+                    help="force speculative decoding off (explicit A/B "
+                         "baseline against --speculate)")
     ap.add_argument("--ms-per-step", default="1.0",
                     help="SLO conversion: decode-step time in ms, or "
                          "'auto' to calibrate from a wall-clock EMA")
@@ -192,7 +212,8 @@ def main(argv=None):
                        kv_layout="paged" if args.paged else "dense",
                        kv_page_size=args.kv_page_size,
                        kv_pages=args.kv_pages,
-                       prefix_share=not args.no_prefix_share)
+                       prefix_share=not args.no_prefix_share,
+                       speculate=0 if args.no_speculate else args.speculate)
     rng = np.random.default_rng(args.seed)
     # paged demo requests share a system-prompt prefix (sized past one
     # KV page so full prefix pages AND a partial tail register —
@@ -233,6 +254,13 @@ def main(argv=None):
           f"chunk {srv.prefill_chunk})"
           + (f"; ms/step EMA {srv.ms_per_step:.2f}"
              if args.ms_per_step == "auto" else ""))
+    if srv.speculate:
+        sps = srv.stats()["spec"]
+        print(f"speculative: {sps['rounds']} rounds, "
+              f"{sps['drafted']} drafted / {sps['accepted']} accepted "
+              f"({sps['acceptance_rate']:.0%}), "
+              f"{sps['rollbacks']} rollbacks, {sps['flips']} flips, "
+              f"{sps['tokens_per_step']:.2f} tokens/round")
     if srv.alloc is not None:
         kvs = srv.stats()["kv"]
         al = srv.alloc

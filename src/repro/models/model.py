@@ -155,7 +155,7 @@ def _block_apply(cfg, btype, params, x, *, positions, mode, cache,
         q = (h @ params["attn"]["wq"].astype(h.dtype)).reshape(B, S, H, hd)
         k = (h @ params["attn"]["wk"].astype(h.dtype)).reshape(B, S, KV, hd)
         v = (h @ params["attn"]["wv"].astype(h.dtype)).reshape(B, S, KV, hd)
-        if mode not in ("decode", "prefill_slots"):
+        if mode not in ("decode", "prefill_slots", "verify"):
             # Megatron-SP: attention runs head-sharded with full sequence
             # (one reshard per layer; pruned when heads don't divide)
             q = shard_ctx.constrain(q, "attn_heads")
@@ -297,6 +297,90 @@ def _block_apply(cfg, btype, params, x, *, positions, mode, cache,
                 jnp.concatenate([vh, vc], axis=1),
                 positions, jnp.concatenate([kp, positions], axis=1),
                 causal=True, window=window, softcap=cfg.attn_softcap)
+        elif mode == "verify" and cache is not None and "pk" in cache:
+            # paged speculative verify: like paged prefill_slots, but the
+            # chunk starts at a *traced per-slot* position (``pos`` [B] =
+            # each slot's next write index) and every row is live.  The
+            # scatter overwrites the base model's draft rows with the
+            # adapter's K/V; history is the whole table range with key
+            # positions pushed past any query where the chunk supersedes
+            # them (kp >= start), so stale draft rows are masked to an
+            # exact-zero softmax weight.
+            if btype != BLOCK_GLOBAL_ATTN:
+                raise ValueError(
+                    "verify mode needs global-attention blocks "
+                    "(see supports_spec_decode)")
+            pk, pv = cache["pk"], cache["pv"]
+            P_, ps = pk.shape[0], pk.shape[1]
+            act = (jnp.ones((B,), bool) if active is None
+                   else jnp.asarray(active, bool))
+            valid = jnp.broadcast_to(act[:, None], (B, S))
+            phys = jnp.take_along_axis(page_table, positions // ps, axis=1)
+            flat = jnp.where(valid, phys * ps + positions % ps, P_ * ps)
+            pkf = pk.reshape(P_ * ps, KV, hd).at[flat].set(
+                k.astype(pk.dtype), mode="drop")
+            pvf = pv.reshape(P_ * ps, KV, hd).at[flat].set(
+                v.astype(pv.dtype), mode="drop")
+            new_cache = {"pk": pkf.reshape(pk.shape),
+                         "pv": pvf.reshape(pv.shape)}
+            S_hist = page_table.shape[1] * ps
+            hp = np.arange(S_hist)
+            ridx = (jnp.take(page_table, hp // ps, axis=1) * ps
+                    + jnp.asarray(hp % ps, jnp.int32)[None])
+            kh = jnp.take(pk.reshape(P_ * ps, KV, hd), ridx,
+                          axis=0).astype(q.dtype)
+            vh = jnp.take(pv.reshape(P_ * ps, KV, hd), ridx,
+                          axis=0).astype(q.dtype)
+            kc = k.astype(pk.dtype).astype(q.dtype)
+            vc = v.astype(pv.dtype).astype(q.dtype)
+            start_b = positions[:, :1]
+            kp = jnp.where(jnp.asarray(hp, jnp.int32)[None] < start_b,
+                           jnp.asarray(hp, jnp.int32)[None],
+                           jnp.int32(2 ** 30))
+            o = layers.attention_full(
+                q, jnp.concatenate([kh, kc], axis=1),
+                jnp.concatenate([vh, vc], axis=1),
+                positions, jnp.concatenate([kp, positions], axis=1),
+                causal=True, window=window, softcap=cfg.attn_softcap)
+        elif mode == "verify":
+            # dense speculative verify.  Rejected rows need no rollback:
+            # rows at/after a slot's next write index are never read (the
+            # decode path masks by position), so overwriting them with
+            # candidate K/V is free — only the scheduler's ``pos`` decides
+            # what is real.  Ring-buffer local attention breaks this (a
+            # write at p clobbers the live row at p - C), hence the
+            # all-global gate in supports_spec_decode.
+            if btype != BLOCK_GLOBAL_ATTN:
+                raise ValueError(
+                    "verify mode needs global-attention blocks "
+                    "(see supports_spec_decode)")
+            C = cache["k"].shape[1]
+            act = (jnp.ones((B,), bool) if active is None
+                   else jnp.asarray(active, bool))
+            slot = jnp.where(act[:, None], positions, C)
+            bidx = jnp.arange(B)[:, None]
+            ck = cache["k"].at[bidx, slot].set(
+                k.astype(cache["k"].dtype), mode="drop")
+            cv = cache["v"].at[bidx, slot].set(
+                v.astype(cache["v"].dtype), mode="drop")
+            new_cache = {"k": ck, "v": cv}
+            # history = every cache row, with rows the chunk supersedes
+            # (kp >= per-slot start) masked by position: exp(-1e30) == 0.0
+            # in f32, so the extra rows are bitwise-neutral padding and
+            # the per-slot ragged starts never enter a shape.
+            hp = jnp.arange(C, dtype=jnp.int32)
+            start_b = positions[:, :1]
+            kp = jnp.where(hp[None, :] < start_b, hp[None, :],
+                           jnp.int32(2 ** 30))
+            kh = cache["k"].astype(q.dtype)
+            vh = cache["v"].astype(q.dtype)
+            kc = k.astype(cache["k"].dtype).astype(q.dtype)
+            vc = v.astype(cache["v"].dtype).astype(q.dtype)
+            o = layers.attention_full(
+                q, jnp.concatenate([kh, kc], axis=1),
+                jnp.concatenate([vh, vc], axis=1),
+                positions, jnp.concatenate([kp, positions], axis=1),
+                causal=True, window=window, softcap=cfg.attn_softcap)
         else:
             if attn_impl == "full" or S <= 2048:
                 o = layers.attention_full(
@@ -342,11 +426,11 @@ def _block_apply(cfg, btype, params, x, *, positions, mode, cache,
             y = jnp.zeros_like(h)
         return x + y, new_cache, aux
 
-    if mode == "prefill_slots":
+    if mode in ("prefill_slots", "verify"):
         # recurrent/SSM states would advance on the right-padding of
         # shorter prompts — the server falls back to per-token priming
         # for these families (see supports_slot_prefill)
-        raise ValueError(f"prefill_slots does not support {btype} blocks")
+        raise ValueError(f"{mode} does not support {btype} blocks")
 
     if btype == BLOCK_RECURRENT:
         h = layers.rms_norm(params["ln1"], x, cfg.norm_eps)
@@ -477,6 +561,16 @@ def supports_paged_kv(cfg: ModelConfig) -> bool:
     """Paged KV needs position-addressable K/V rows in every block and
     a token-only frontend — same bar as chunked slot prefill."""
     return supports_slot_prefill(cfg)
+
+
+def supports_spec_decode(cfg: ModelConfig) -> bool:
+    """Self-speculative serving (``verify_into_slots``) needs chunked
+    slot prefill plus every block global: rejected draft rows are rolled
+    back by position masking alone, which ring-buffer local-attention
+    rows do not support — a speculative write at position p clobbers the
+    live row at p - C."""
+    return (supports_slot_prefill(cfg)
+            and all(t == BLOCK_GLOBAL_ATTN for t in cfg.layer_types()))
 
 
 def supports_prefix_share(cfg: ModelConfig) -> bool:
@@ -829,6 +923,54 @@ def prefill_into_slots(params, cfg: ModelConfig, cache, tokens, lengths,
     new_cache = dict(cache)
     new_cache["stages"] = new_stage_caches
     return logits[:, 0], new_cache
+
+
+def verify_into_slots(params, cfg: ModelConfig, cache, tokens, starts,
+                      active, *, page_table=None):
+    """Score K candidate positions per slot in ONE dispatch — the
+    verifier half of self-speculative serving (SpecServe).
+
+    ``tokens`` [B, K] int32: position ``starts[b] + j`` holds
+    ``tokens[b, j]`` — each slot's last emitted token followed by the
+    K - 1 base-model draft tokens.  ``starts`` [B] int32 is each slot's
+    next cache write index (traced, ragged across slots — unlike
+    ``prefill_into_slots`` whose chunk_start is static and shared).
+    ``active`` [B] bool masks untouched slots; their cache rows pass
+    through bit-exactly.
+
+    Writes the chunk's K/V rows under the CURRENT params (overwriting
+    the base model's draft rows with adapter-correct values) and returns
+    ``(logits [B, K, vocab], new_cache)`` where ``logits[b, j]`` scores
+    the token following ``tokens[b, j]`` — so ``argmax(logits[b, j])``
+    is exactly what ``decode_step`` would emit after feeding
+    ``tokens[b, :j + 1]`` token by token.  Each position is unembedded
+    through the same [B, 1, D] matmul shape the decode path uses (fp
+    parity; K is small and static).
+    """
+    B, K = tokens.shape
+    starts = jnp.asarray(starts, jnp.int32)
+    act = jnp.asarray(active, bool)
+    positions = starts[:, None] + jnp.arange(K, dtype=jnp.int32)[None]
+    x = params["embed"].astype(_cdtype(cfg))[tokens]
+    if not cfg.rope_theta:  # absolute positions: sinusoidal rows
+        d = cfg.d_model
+        div = jnp.exp(jnp.arange(0, d, dtype=jnp.float32)[0::2]
+                      * (-math.log(10000.0) / d))
+        ang = positions[..., None].astype(jnp.float32) * div[None, None]
+        pe = jnp.zeros((B, K, d), jnp.float32)
+        pe = pe.at[..., 0::2].set(jnp.sin(ang)).at[..., 1::2].set(jnp.cos(ang))
+        x = x + pe.astype(x.dtype)
+    x, new_stage_caches, _ = _stack_apply(
+        cfg, params["stages"], x, positions=positions, mode="verify",
+        caches=cache["stages"], pos=starts, attn_impl="full",
+        page_table=page_table, active=act)
+    x = layers.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.stack(
+        [_unembed(params, cfg, x[:, j:j + 1])[:, 0] for j in range(K)],
+        axis=1)
+    new_cache = dict(cache)
+    new_cache["stages"] = new_stage_caches
+    return logits, new_cache
 
 
 def decode_step(params, cfg: ModelConfig, cache, token, pos,

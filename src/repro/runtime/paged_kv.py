@@ -119,10 +119,11 @@ class PageAllocator:
         self.n_prefix_pages = 0
         self.n_prefix_tokens = 0
         self.n_evict = 0
+        self.n_rollback = 0
         if metrics is not None:
             for n in ("kv/page_alloc", "kv/page_free", "kv/cow_split",
                       "kv/prefix_hit_pages", "kv/prefix_hit_tokens",
-                      "kv/registry_evictions"):
+                      "kv/registry_evictions", "kv/spec_rollback_pages"):
                 metrics.counter(n)
             metrics.gauge("kv/pages_in_use")
             metrics.gauge("kv/pages_free")
@@ -279,6 +280,35 @@ class PageAllocator:
                                         src=phys, dst=new)
         self._update_gauges()
         return copies
+
+    def rollback_to(self, slot: int, keep_rows: int) -> int:
+        """Roll ``slot``'s page table back to its first ``keep_rows``
+        token rows — the speculative-decode rejection path: pages that
+        ``ensure_range`` allocated for draft rows beyond the accepted
+        prefix are unmapped (freed once nothing else holds them) and
+        each returns +1 to the slot's worst-case reservation, so a
+        rejected speculation never strands pages the admission
+        invariant already promised to this slot.  Returns the number of
+        pages unmapped."""
+        first = pages_for(max(0, keep_rows), self.page_size)
+        dropped = 0
+        for l in range(first, self.pages_per_slot):
+            phys = int(self._table[slot, l])
+            if phys == self.NULL_PAGE:
+                continue
+            self._unref(phys)
+            self._table[slot, l] = self.NULL_PAGE
+            self._resv[slot] += 1
+            dropped += 1
+        if dropped:
+            self.n_rollback += dropped
+            if self.metrics is not None:
+                self.metrics.counter("kv/spec_rollback_pages").inc(dropped)
+            if self.tracer is not None:
+                self.tracer.instant("spec_rollback", lane="kv", slot=slot,
+                                    keep_rows=keep_rows, pages=dropped)
+        self._update_gauges()
+        return dropped
 
     # -- prefix registration -------------------------------------------- #
 

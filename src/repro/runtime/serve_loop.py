@@ -81,7 +81,7 @@ import functools
 import math
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -190,6 +190,59 @@ def _paged_prefill_fn(cfg, chunk_len, chunk_start):
 
 
 @functools.lru_cache(maxsize=None)
+def _verify_fn(cfg):
+    """Jitted speculative verifier (dense KV): scores K candidate
+    positions per slot in one dispatch.  Per-slot chunk starts are
+    TRACED (unlike ``_prefill_fn``'s static chunk_start) — one compile
+    per (cfg, K) regardless of where each slot's frontier sits."""
+
+    def _vf(params, cache, tokens, starts, active):
+        return model_lib.verify_into_slots(params, cfg, cache, tokens,
+                                           starts, active)
+
+    return jax.jit(_vf, donate_argnums=(1,))
+
+
+@functools.lru_cache(maxsize=None)
+def _paged_verify_fn(cfg):
+    """Paged speculative verifier: the chunk scatters through the page
+    table (pages pre-allocated by ``ensure_range``); rejected rows are
+    returned to the pool host-side via ``PageAllocator.rollback_to``."""
+
+    def _vf(params, cache, tokens, starts, active, page_table):
+        return model_lib.verify_into_slots(params, cfg, cache, tokens,
+                                           starts, active,
+                                           page_table=page_table)
+
+    return jax.jit(_vf, donate_argnums=(1,))
+
+
+def spec_accept(draft: Sequence[int], verify: Sequence[int]
+                ) -> Tuple[int, List[int]]:
+    """The speculative acceptance rule (greedy / longest-prefix).
+
+    ``draft`` — the N tokens the base model proposed; ``verify`` — the
+    N + 1 greedy argmaxes of the adapter model at positions
+    ``pos .. pos + N`` (``verify[j]`` is what the adapter would emit
+    after the last emitted token followed by ``draft[:j]``).  Returns
+    ``(accepted, emitted)`` where ``accepted`` is the length of the
+    longest prefix with ``draft[j] == verify[j]`` and ``emitted =
+    verify[:accepted + 1]`` — the accepted drafts plus the adapter's
+    own next token (a correction on mismatch, a bonus on full accept).
+    Every emitted token is an adapter argmax, so the stream is
+    bit-identical to non-speculative greedy decoding by construction.
+    """
+    n = len(draft)
+    if len(verify) != n + 1:
+        raise ValueError(f"verify must score n+1 positions "
+                         f"(n={n}, got {len(verify)})")
+    a = 0
+    while a < n and draft[a] == verify[a]:
+        a += 1
+    return a, [int(t) for t in verify[:a + 1]]
+
+
+@functools.lru_cache(maxsize=None)
 def _copy_pages_fn():
     """Jitted device half of a COW split (src -> dst page copies in every
     pooled leaf).  jit's shape cache handles the pair-count bucketing."""
@@ -216,7 +269,8 @@ class DecodeServer:
                  cache_bytes: int = 0, cache=None,
                  prefill_chunk: int = 64, tracer=None, metrics=None,
                  kv_layout: str = "dense", kv_page_size: int = 16,
-                 kv_pages: int = 0, prefix_share: bool = True):
+                 kv_pages: int = 0, prefix_share: bool = True,
+                 speculate: int = 0, spec_adaptive: bool = True):
         self.cfg = cfg
         # TraceKit: tracer=None disables tracing (hot paths guard with a
         # single `is None` check — no NullTracer dispatch).  The metrics
@@ -304,6 +358,34 @@ class DecodeServer:
         self._decode = (_paged_decode_fn(cfg, attn_impl)
                         if self.alloc is not None
                         else _decode_fn(cfg, attn_impl))
+        # SpecServe: self-speculative decoding.  The base model — always
+        # resident under BlockDelta (a tenant differs by <5% of rows) —
+        # drafts ``speculate`` tokens via the plain decode path, then the
+        # adapter-applied model scores all N+1 positions in ONE verify
+        # dispatch; the longest greedy-agreeing prefix is accepted
+        # (see ``spec_accept``) so streams stay bit-identical to
+        # non-speculative serving.  ``spec_adaptive`` backs the per-group
+        # draft length off when the acceptance EMA drops (a divergent
+        # tenant wastes draft steps) and grows it back toward
+        # ``speculate`` when acceptance recovers.
+        self.speculate = max(0, int(speculate))
+        self.spec_adaptive = bool(spec_adaptive)
+        if self.speculate and not model_lib.supports_spec_decode(cfg):
+            raise ValueError(
+                "speculate > 0 needs an all-global-attention, token-only "
+                "architecture: rejected draft rows roll back by position "
+                "masking, which ring-buffer local-attention rows do not "
+                "support (see model.supports_spec_decode)")
+        self._verify = None
+        if self.speculate:
+            self._verify = (_paged_verify_fn(cfg) if self.alloc is not None
+                            else _verify_fn(cfg))
+        self._spec_len: Dict[Optional[str], int] = {}
+        self._spec_ema: Dict[Optional[str], float] = {}
+        self.spec_rounds = 0
+        self.spec_drafted = 0
+        self.spec_accepted = 0
+        self.spec_emitted = 0
         # chunked batched prefill (FastDecode); 0 or an unsupported
         # family (recurrent/SSM) falls back to per-token priming
         self.prefill_chunk = max(0, prefill_chunk)
@@ -319,6 +401,12 @@ class DecodeServer:
                   "sched/swap_bytes", "sched/compiles", "sched/submitted",
                   "sched/finished"):
             m.counter(c)
+        if self.speculate:
+            for c in ("spec/rounds", "spec/drafted", "spec/accepted",
+                      "spec/rollbacks", "spec/flips"):
+                m.counter(c)
+            m.gauge("spec/draft_len")
+            m.gauge("spec/acceptance_rate")
         for g in ("decode/ms_per_step", "sched/queue_depth",
                   "sched/swap_rate"):
             m.gauge(g)
@@ -814,6 +902,10 @@ class DecodeServer:
         if not mask.any():
             self._turn_left = 0  # group drained during admission: rotate
             return 0
+        if self.speculate:
+            n = self._spec_round_len(group, mask)
+            if n >= 1:
+                return self._spec_step(group, mask, n)
         # compile detection: the shared jitted fn's cache growing across
         # this call means THIS step paid a fresh compile — exclude it
         # from the ms_per_step EMA (a compile-laden sample would poison
@@ -883,6 +975,189 @@ class DecodeServer:
             self._turn_left = 0
         return finished
 
+    def _spec_round_len(self, group, mask) -> int:
+        """Draft length for this round: the group's adaptive length,
+        clamped so no active slot writes past its budget — rows up to
+        ``pos + n`` are written by the verify chunk, and paged slots
+        reserved exactly ``prompt + max_new_tokens`` rows, so ``n`` may
+        not exceed any slot's remaining tokens (nor its max_seq
+        headroom)."""
+        n = self._spec_len.get(group, self.speculate)
+        for slot in range(self.slots):
+            if not mask[slot]:
+                continue
+            req = self.active[slot]
+            n = min(n, req.max_new_tokens - len(req.out),
+                    self.max_seq - 1 - int(self.pos[slot]))
+        return max(0, n)
+
+    def _flip_to_base(self):
+        """Drop to the base model for drafting: re-apply the displaced
+        base rows (a pure device scatter-swap — no registry or cache
+        traffic, ``_applied`` unchanged).  Returns the adapter's rows
+        for ``_flip_back``; None when the base group is already live
+        (drafter == verifier: every draft is accepted by parity)."""
+        if self._displaced is None:
+            return None
+        from repro.adapters import flip_delta
+        disp, self._displaced = self._displaced, None
+        self.params, adapter_rows = flip_delta(self.params, disp,
+                                               mode=self.swap_mode)
+        return adapter_rows
+
+    def _flip_back(self, adapter_rows):
+        if adapter_rows is None:
+            return
+        from repro.adapters import flip_delta
+        self.params, self._displaced = flip_delta(self.params, adapter_rows,
+                                                  mode=self.swap_mode)
+        self.metrics.counter("spec/flips").inc(2)
+
+    def _spec_step(self, group, mask, n: int) -> int:
+        """One speculative scheduler step: the base model drafts ``n``
+        tokens per active slot through the plain decode path, the
+        adapter model scores all n+1 positions in one verify dispatch
+        (overwriting the draft K/V rows with adapter-correct values),
+        and the longest greedy-agreeing prefix is accepted.  Emits
+        between 1 and n+1 tokens per slot; returns #finished."""
+        tr = self.tracer
+        m = self.metrics
+        paged = self.alloc is not None
+        pos0 = self.pos.copy()
+        slots_idx = [s for s in range(self.slots) if mask[s]]
+        if paged:
+            # every row this round touches — n draft writes + the verify
+            # chunk's n+1 rows — made writable up front; reservations
+            # guarantee the allocs succeed (n is clamped to each slot's
+            # remaining-token budget)
+            copies = []
+            for s in slots_idx:
+                p = int(pos0[s])
+                copies.extend(self.alloc.ensure_range(s, p, p + n + 1))
+            self._apply_copies(copies)
+            table = jnp.asarray(self.alloc.table())
+        mask_j = jnp.asarray(mask)
+        before = _jit_cache_size(self._decode)
+        vbefore = _jit_cache_size(self._verify)
+        t0_ns = time.monotonic_ns()
+        # ---- draft: n plain decode steps under the base model --------- #
+        saved = self._flip_to_base()
+        toks = self.tokens.copy()
+        dpos = pos0.copy()
+        drafts = np.zeros((n, self.slots), np.int64)
+        for i in range(n):
+            d0 = time.monotonic_ns()
+            if paged:
+                logits, self.cache_state = self._decode(
+                    self.params, self.cache_state, jnp.asarray(toks),
+                    jnp.asarray(dpos), mask_j, table)
+            else:
+                logits, self.cache_state = self._decode(
+                    self.params, self.cache_state, jnp.asarray(toks),
+                    jnp.asarray(dpos), mask_j)
+            drafts[i] = np.asarray(jnp.argmax(logits, -1))
+            d1 = time.monotonic_ns()
+            if tr is not None:
+                tr.add_span("decode_step", d0, d1, lane=_lane(group),
+                            step=self.steps, batch=int(mask.sum()),
+                            draft=True)
+            for s in slots_idx:
+                toks[s, 0] = drafts[i, s]
+            dpos[mask] += 1
+        self._flip_back(saved)
+        t1_ns = time.monotonic_ns()
+        if tr is not None:
+            tr.add_span("spec_draft", t0_ns, t1_ns, lane=_lane(group),
+                        step=self.steps, n=n, batch=int(mask.sum()))
+        # ---- verify: one chunked dispatch under the adapter ----------- #
+        vt = np.zeros((self.slots, n + 1), np.int32)
+        for s in slots_idx:
+            vt[s, 0] = self.tokens[s, 0]   # last emitted token
+            vt[s, 1:] = drafts[:, s]
+        if paged:
+            vlogits, self.cache_state = self._verify(
+                self.params, self.cache_state, jnp.asarray(vt),
+                jnp.asarray(pos0), mask_j, table)
+        else:
+            vlogits, self.cache_state = self._verify(
+                self.params, self.cache_state, jnp.asarray(vt),
+                jnp.asarray(pos0), mask_j)
+        greedy = np.asarray(jnp.argmax(vlogits, -1))   # [slots, n+1]
+        t2_ns = time.monotonic_ns()
+        if tr is not None:
+            tr.add_span("spec_verify", t1_ns, t2_ns, lane=_lane(group),
+                        step=self.steps, n=n + 1, batch=int(mask.sum()))
+        after = _jit_cache_size(self._decode)
+        vafter = _jit_cache_size(self._verify)
+        compiled = ((after > before or vafter > vbefore)
+                    if before >= 0 and vbefore >= 0 else self.steps == 0)
+        if compiled:
+            m.counter("sched/compiles").inc()
+            if tr is not None:
+                tr.instant("jit_compile", lane="sched", fn="spec",
+                           step=self.steps)
+        dt = (t2_ns - t0_ns) / 1e6
+        if not compiled:
+            m.histogram("decode/step_ms").observe(dt)
+        if self._ms_auto and not compiled:
+            self._ms_samples += 1
+            self.ms_per_step = (dt if self._ms_samples == 1
+                                else 0.2 * dt + 0.8 * self.ms_per_step)
+        # ---- accept / emit / roll back -------------------------------- #
+        finished = 0
+        emitted_total = 0
+        accepted_total = 0
+        rollbacks = 0
+        self.steps += 1
+        m.counter("decode/steps").inc()
+        self._turn_left -= 1
+        self._last_served[group] = self.steps
+        for s in slots_idx:
+            req = self.active[s]
+            a, emit = spec_accept(drafts[:, s], greedy[s])
+            accepted_total += a
+            if a < n:
+                rollbacks += 1
+            for t in emit:
+                self._emit(req, s, t)
+                self.pos[s] += 1
+                emitted_total += 1
+                if (len(req.out) >= req.max_new_tokens
+                        or self.pos[s] >= self.max_seq - 1):
+                    break
+            if (len(req.out) >= req.max_new_tokens
+                    or self.pos[s] >= self.max_seq - 1):
+                self._retire(req, s)
+                finished += 1
+            elif paged:
+                # return pages the rejected suffix no longer needs
+                self.alloc.rollback_to(s, int(self.pos[s]))
+        self.spec_rounds += 1
+        self.spec_drafted += n * len(slots_idx)
+        self.spec_accepted += accepted_total
+        self.spec_emitted += emitted_total
+        m.counter("spec/rounds").inc()
+        m.counter("spec/drafted").inc(n * len(slots_idx))
+        m.counter("spec/accepted").inc(accepted_total)
+        m.counter("spec/rollbacks").inc(rollbacks)
+        m.counter("decode/tokens").inc(emitted_total)
+        # ---- adaptive draft length ------------------------------------ #
+        rate = accepted_total / (n * len(slots_idx))
+        prev = self._spec_ema.get(group)
+        ema = rate if prev is None else 0.5 * rate + 0.5 * prev
+        self._spec_ema[group] = ema
+        if self.spec_adaptive:
+            cur = self._spec_len.get(group, self.speculate)
+            if ema < 0.4 and cur > 1:
+                cur = max(1, cur // 2)
+            elif ema > 0.8 and cur < self.speculate:
+                cur += 1
+            self._spec_len[group] = cur
+            m.gauge("spec/draft_len").set(cur)
+        if not self._group_has_work(group):
+            self._turn_left = 0
+        return finished
+
     def _progress_key(self):
         return (self.steps, len(self.queue),
                 sum(r is not None for r in self.active),
@@ -927,6 +1202,10 @@ class DecodeServer:
         swap_rate = self.swaps / self.steps if self.steps else 0.0
         self.metrics.gauge("decode/ms_per_step").set(self.ms_per_step)
         self.metrics.gauge("sched/swap_rate").set(swap_rate)
+        if self.speculate:
+            self.metrics.gauge("spec/acceptance_rate").set(
+                self.spec_accepted / self.spec_drafted
+                if self.spec_drafted else 0.0)
         nested = self.metrics.nested()
         sched = dict(nested.get("sched", {}))
         sched["applied"] = self._applied
@@ -935,6 +1214,12 @@ class DecodeServer:
             "prefill": dict(nested.get("prefill", {})),
             "sched": sched,
         }
+        if self.speculate:
+            spec = dict(nested.get("spec", {}))
+            spec["tokens_per_step"] = (
+                self.spec_emitted / spec["rounds"] if spec.get("rounds")
+                else 0.0)
+            out["spec"] = spec
         if self.cache is not None:
             out["cache"] = self.cache.stats()
         if self.alloc is not None:

@@ -12,6 +12,13 @@ import pytest
 from repro.configs.base import ModelConfig
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running tier-1 test; CI runs these in a separate "
+        "matrix leg (-m slow) so the fast leg stays under its timeout")
+
+
 @pytest.fixture(scope="session")
 def tiny_cfg():
     return ModelConfig(name="tiny", family="dense", num_layers=4,

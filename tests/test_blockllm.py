@@ -42,6 +42,7 @@ def _bll(cfg, sparsity=0.9, **kw):
                                                     **defaults)))
 
 
+@pytest.mark.slow
 def test_loss_decreases(cfg, batch):
     tr = _bll(cfg)
     losses = [tr.train_step(batch)["loss"] for _ in range(30)]
@@ -146,6 +147,7 @@ def test_badam_is_single_block(cfg, batch):
     assert rows2[0] != b0, "BAdam must have switched blocks"
 
 
+@pytest.mark.slow
 def test_all_methods_reduce_loss(cfg, batch):
     """The paper's Fig-5 cast all train on the same task."""
     mk = {
@@ -168,6 +170,7 @@ def test_all_methods_reduce_loss(cfg, batch):
         assert last < first, name
 
 
+@pytest.mark.slow
 def test_fused_update_matches_unfused(cfg, batch):
     """The masked_adam Pallas kernel path == the XLA Adam path."""
     import numpy as np

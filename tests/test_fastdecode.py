@@ -105,6 +105,7 @@ def test_decode_attention_bytes_scale_with_pos():
 # ------------------------------------------------- chunked prefill: model
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("pattern,window", [
     ((BLOCK_GLOBAL_ATTN,), 0),
     ((BLOCK_LOCAL_ATTN, BLOCK_GLOBAL_ATTN), 8),   # ring-buffer stage

@@ -207,6 +207,7 @@ def _train3(name, cfg, params):
     return loss, core.memory_report(state)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", ["blockllm", "adam"])
 def test_q8_core_memory_and_loss_vs_fp32(name, tiny_cfg, tiny_params):
     """ISSUE acceptance: opt bytes <= 30% of fp32, 3-step loss within
@@ -217,6 +218,7 @@ def test_q8_core_memory_and_loss_vs_fp32(name, tiny_cfg, tiny_params):
     assert abs(loss_q8 - loss_fp) <= 0.05 * abs(loss_fp)
 
 
+@pytest.mark.slow
 def test_q8_fused_kernel_step_matches_unfused(tiny_cfg, tiny_params):
     """BlockLLM with fused_update='interpret' and quantize_state walks
     the same trajectory as the unfused Q8 path (same codec both ways)."""

@@ -1,0 +1,270 @@
+"""SpecServe: self-speculative serving (base drafts, adapter verifies).
+
+Covers the acceptance rule (property: accepted prefix IS the longest
+greedy-agreeing prefix), bitwise parity of ``verify_into_slots`` against
+per-token ``decode_step`` (dense and paged caches), bit-identical token
+streams between speculative and plain serving across the rr/aware/
+cached/q8 and dense/paged legs — including mid-stream rejection with
+paged page-table rollback — the allocator's ``rollback_to`` invariants,
+the supports_spec_decode gate, and adaptive draft-length backoff.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.adapters import (InMemoryRegistry, extract_delta,
+                            quantize_delta)
+from repro.adapters.testing import perturb_rows as _tuned
+from repro.configs.base import (BLOCK_GLOBAL_ATTN, BLOCK_LOCAL_ATTN,
+                                ModelConfig)
+from repro.models import model
+from repro.runtime.paged_kv import PageAllocator, pages_for
+from repro.runtime.serve_loop import DecodeServer, Request, spec_accept
+from tests._hyp import given, settings, st
+
+K = jax.random.PRNGKey
+
+
+# ------------------------------------------------------ acceptance rule
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.integers(0, 3), min_size=0, max_size=8),
+       st.lists(st.integers(0, 3), min_size=9, max_size=9))
+def test_spec_accept_is_longest_agreeing_prefix(draft, pool):
+    """Property: ``accepted`` is EXACTLY the longest prefix where the
+    draft agrees with the verifier, and the emitted tokens are the
+    verifier's own argmaxes for those positions plus one."""
+    verify = pool[:len(draft) + 1]
+    a, emitted = spec_accept(draft, verify)
+    assert 0 <= a <= len(draft)
+    assert all(draft[j] == verify[j] for j in range(a))        # agrees
+    assert a == len(draft) or draft[a] != verify[a]            # longest
+    assert emitted == [int(t) for t in verify[:a + 1]]
+    assert len(emitted) == a + 1                     # >= 1 token/round
+
+
+def test_spec_accept_requires_n_plus_one_scores():
+    with pytest.raises(ValueError):
+        spec_accept([1, 2, 3], [1, 2, 3])
+
+
+# ------------------------------------------- verify-vs-decode parity
+
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_verify_into_slots_bitwise_matches_decode_step(layout, tiny_cfg,
+                                                       tiny_params):
+    """One chunked verify dispatch over K positions produces BITWISE
+    the same logits and cache rows as K per-token decode steps — the
+    property that makes speculative streams identical by construction,
+    not within-tolerance."""
+    cfg, params = tiny_cfg, tiny_params
+    B, max_seq, L, s0, ps = 3, 48, 6, 2, 8
+    rng = np.random.default_rng(0)
+    toks = rng.integers(1, cfg.vocab_size, (B, L)).astype(np.int32)
+
+    if layout == "paged":
+        per_slot = max_seq // ps
+        table = np.arange(B * per_slot, dtype=np.int32).reshape(
+            B, per_slot)
+        tbl = jnp.asarray(table)
+        kw = dict(page_table=tbl, active=jnp.ones(B, bool))
+        mk = lambda: model.init_paged_cache(cfg, B, B * per_slot + 1,
+                                            ps, max_seq)
+    else:
+        tbl, kw = None, {}
+        mk = lambda: model.init_cache(cfg, B, max_seq)
+
+    # reference: L per-token decode steps
+    cache, pos = mk(), np.zeros(B, np.int64)
+    ref = []
+    for i in range(L):
+        lg, cache = model.decode_step(params, cfg, cache,
+                                      jnp.asarray(toks[:, i:i + 1]),
+                                      jnp.asarray(pos),
+                                      attn_impl="full", **kw)
+        ref.append(np.asarray(lg))
+        pos += 1
+
+    # candidate: prime to s0 per-token, verify positions s0..L-1 at once
+    cache2, pos2 = mk(), np.zeros(B, np.int64)
+    for i in range(s0):
+        _, cache2 = model.decode_step(params, cfg, cache2,
+                                      jnp.asarray(toks[:, i:i + 1]),
+                                      jnp.asarray(pos2),
+                                      attn_impl="full", **kw)
+        pos2 += 1
+    vkw = {"page_table": tbl} if layout == "paged" else {}
+    vlog, cache2 = model.verify_into_slots(params, cfg, cache2,
+                                           jnp.asarray(toks[:, s0:]),
+                                           jnp.asarray(pos2),
+                                           jnp.ones(B, bool), **vkw)
+    vlog = np.asarray(vlog)
+    for j in range(L - s0):
+        assert np.array_equal(ref[s0 + j], vlog[:, j]), \
+            f"{layout} verify logits at offset {j} are not bit-identical"
+    # the chunk's K/V rows land bit-identical to the per-token writes
+    for a, b in zip(jax.tree.leaves(cache["stages"]),
+                    jax.tree.leaves(cache2["stages"])):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), \
+            f"{layout} cache rows diverged"
+
+
+def test_verify_masks_inactive_slots(tiny_cfg, tiny_params):
+    """Inactive slots' cache rows pass through bit-exactly and their
+    logits are ignored by the server — verify must not scribble."""
+    cfg, params = tiny_cfg, tiny_params
+    B, max_seq = 2, 32
+    cache = model.init_cache(cfg, B, max_seq)
+    _, cache = model.decode_step(params, cfg, cache,
+                                 jnp.ones((B, 1), jnp.int32),
+                                 jnp.zeros(B, jnp.int32),
+                                 attn_impl="full")
+    act = jnp.asarray([True, False])
+    before = [np.asarray(l) for l in jax.tree.leaves(cache["stages"])]
+    _, cache2 = model.verify_into_slots(
+        params, cfg, cache, jnp.ones((B, 3), jnp.int32),
+        jnp.ones(B, jnp.int32), act)
+    for pre, post in zip(before,
+                         jax.tree.leaves(cache2["stages"])):
+        if pre.ndim >= 4:  # K/V rows: [groups, B, S, ...]; slot 1 (the
+            # batch axis is 1 — the leading axis stacks layer groups)
+            assert np.array_equal(pre[:, 1], np.asarray(post)[:, 1])
+
+
+def test_supports_spec_decode_gate(tiny_cfg):
+    assert model.supports_spec_decode(tiny_cfg)
+    local = tiny_cfg.replace(
+        pattern=(BLOCK_LOCAL_ATTN, BLOCK_GLOBAL_ATTN), window_size=8)
+    assert not model.supports_spec_decode(local)   # ring rollback unsafe
+    with pytest.raises(ValueError):
+        DecodeServer(local, {}, batch_slots=1, max_seq=16, cache=None,
+                     speculate=4)
+
+
+# ----------------------------------------------- stream parity: server
+
+
+def _mixed_requests(cfg, tenancy, new_tokens=7, seed=3):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size,
+                                               3 + (3 * i) % 9),
+                    max_new_tokens=new_tokens, adapter_id=t)
+            for i, t in enumerate(tenancy)]
+
+
+def _drain(cfg, params, tenancy, reg, **kw):
+    srv = DecodeServer(cfg, params, batch_slots=2, max_seq=64,
+                       registry=reg, steps_per_turn=2, **kw)
+    reqs = _mixed_requests(cfg, tenancy)
+    for r in reqs:
+        srv.submit(r)
+    srv.run_until_drained()
+    assert all(r.done for r in reqs)
+    return {r.rid: tuple(r.out) for r in reqs}, srv
+
+
+def test_spec_stream_parity_across_serving_legs(tiny_cfg, tiny_params):
+    """Speculative token streams are bit-identical to plain decoding on
+    every serving leg: rr/aware/cached/q8 schedulers, dense and paged
+    KV.  The q8 legs compare spec-q8 vs plain-q8 (quantized deltas are
+    different weights than fp32)."""
+    # mild perturbation: drafts agree often but not always, so both
+    # acceptance and mid-stream rejection paths execute
+    tunedA = _tuned(tiny_params, rows=(0, 2), scale=0.02, seed=10)
+    tunedB = _tuned(tiny_params, rows=(1, 3), scale=0.4, seed=20)
+    deltas = {
+        "A": extract_delta(tiny_params, tunedA, meta={"adapter_id": "A"}),
+        "B": extract_delta(tiny_params, tunedB, meta={"adapter_id": "B"}),
+    }
+    budget = deltas["A"].nbytes + 64
+    tenancy = ["A", "B", None, "B", "A", None]
+    legs = {
+        "plain": dict(),
+        "spec_rr": dict(adapter_aware=False, speculate=3),
+        "spec_aware": dict(speculate=3),
+        "spec_cached": dict(cache_bytes=budget, speculate=3),
+        "plain_q8": dict(q8=True),
+        "spec_q8": dict(cache_bytes=budget, q8=True, speculate=3),
+        "spec_paged": dict(kv_layout="paged", kv_page_size=8,
+                           speculate=3),
+    }
+    outs, srvs = {}, {}
+    for leg, kw in legs.items():
+        kw = dict(kw)
+        reg = InMemoryRegistry(
+            {a: quantize_delta(d) for a, d in deltas.items()}
+            if kw.pop("q8", False) else dict(deltas))
+        outs[leg], srvs[leg] = _drain(tiny_cfg, tiny_params, tenancy,
+                                      reg, **kw)
+    for leg in ("spec_rr", "spec_aware", "spec_cached", "spec_paged"):
+        assert outs[leg] == outs["plain"], \
+            f"{leg} token streams diverged from plain decoding"
+    assert outs["spec_q8"] == outs["plain_q8"], \
+        "spec q8 streams diverged from plain q8"
+    # speculation actually sped things up on the same workload
+    assert srvs["spec_aware"].steps < srvs["plain"].steps
+    st_ = srvs["spec_aware"].stats()["spec"]
+    assert st_["rounds"] > 0 and st_["drafted"] > 0
+    assert st_["tokens_per_step"] > 1.0
+    assert st_["flips"] >= 2       # adapter groups flipped base<->tenant
+
+
+def test_spec_midstream_rejection_rolls_back_paged(tiny_cfg,
+                                                   tiny_params):
+    """A strongly perturbed adapter rejects most drafts mid-stream; the
+    paged path must unmap the speculative pages and still emit the
+    bit-identical stream."""
+    tuned = _tuned(tiny_params, rows=(1, 3), scale=2.0, seed=7)
+    reg = InMemoryRegistry(
+        {"T": extract_delta(tiny_params, tuned, meta={"adapter_id": "T"})})
+    tenancy = ["T", "T", None, "T"]
+    plain, _ = _drain(tiny_cfg, tiny_params, tenancy, reg,
+                      kv_layout="paged", kv_page_size=8)
+    spec, srv = _drain(tiny_cfg, tiny_params, tenancy, reg,
+                       kv_layout="paged", kv_page_size=8, speculate=4)
+    assert spec == plain, "paged spec streams diverged after rejection"
+    st_ = srv.stats()["spec"]
+    assert st_["rollbacks"] > 0, "expected mid-stream rejections"
+    assert st_["acceptance_rate"] < 1.0
+    assert srv.alloc.n_rollback > 0, "no pages were unmapped"
+    assert srv.stats()["kv"]["spec_rollback_pages"] > 0
+
+
+def test_spec_adaptive_draft_len_backs_off(tiny_cfg, tiny_params):
+    """Near-zero acceptance halves the per-group draft length; the
+    base-tenant group (drafter == verifier) stays at the cap."""
+    tuned = _tuned(tiny_params, rows=(1, 3), scale=2.0, seed=7)
+    reg = InMemoryRegistry(
+        {"T": extract_delta(tiny_params, tuned, meta={"adapter_id": "T"})})
+    _, srv = _drain(tiny_cfg, tiny_params, ["T", "T", "T", None, None],
+                    reg, speculate=4)
+    assert srv._spec_len.get("T", 4) < 4, \
+        "draft length did not back off under rejections"
+    assert srv._spec_len.get(None, 4) == 4   # base group: 100% accept
+
+
+# ------------------------------------------------- allocator rollback
+
+
+def test_rollback_to_unmaps_and_restores_reservation():
+    al = PageAllocator(10, 4, slots=2, max_seq=32, share_prefix=False)
+    al.admit(0, al.plan(None, [1, 2, 3], 16))
+    al.ensure_range(0, 0, 10)                      # 3 pages mapped
+    assert al.pages_in_use == 3
+    resv0 = int(al._resv[0])
+    dropped = al.rollback_to(0, 5)                 # keep rows 0..4
+    assert dropped == 1 and al.pages_in_use == 2
+    assert int(al.table()[0, 2]) == al.NULL_PAGE
+    assert int(al._resv[0]) == resv0 + 1           # reservation restored
+    assert al.n_rollback == 1
+    # rolled-back range can be re-mapped and re-used
+    al.ensure_range(0, 0, 10)
+    assert al.pages_in_use == 3
+    # keep_rows on a page boundary keeps exactly the full pages
+    assert pages_for(8, 4) == 2
+    assert al.rollback_to(0, 8) == 1
+    # idempotent once the tail is unmapped
+    assert al.rollback_to(0, 8) == 0

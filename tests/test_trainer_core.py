@@ -57,6 +57,7 @@ def test_state_spec_honored(name, tiny_cfg):
     assert int(state2.meta["step"]) == 1
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", NAMES)
 def test_step_determinism(name, tiny_cfg):
     """Two independent (core, state) pairs from the same seed walk the
@@ -88,6 +89,7 @@ def test_memory_report_shape(name, tiny_cfg):
         if k not in ("params_bytes", "total_train_state"))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", NAMES)
 def test_checkpoint_roundtrip_resumes_bit_identical(name, tmp_path,
                                                     tiny_cfg):
@@ -124,6 +126,7 @@ def test_checkpoint_roundtrip_resumes_bit_identical(name, tmp_path,
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.slow
 def test_blockllm_host_meta_survives_roundtrip(tmp_path, tiny_cfg):
     """The norm dictionary / visit counts / plan indices ride the generic
     manifest meta and come back equal."""
@@ -146,6 +149,7 @@ def test_blockllm_host_meta_survives_roundtrip(tmp_path, tiny_cfg):
     assert h2.state.meta["step"] == 4
 
 
+@pytest.mark.slow
 def test_resume_rejects_wrong_trainer(tmp_path, tiny_cfg):
     """A checkpoint written by one trainer must fail fast (clear
     ValueError from the manifest, before any array load) when resumed

@@ -21,6 +21,11 @@ It runs the three serving benchmarks in quick mode:
   concurrent requests paged vs dense at equal KV HBM — the bench also
   hard-asserts >= 2x) and paged_prefix_savings (share of prompt tokens
   served from registered prefix pages on a shared-prompt workload),
+  plus the SpecServe legs: spec_tokens_per_step (tokens emitted per
+  decode round at draft length 4 on repetitive text — the bench
+  hard-asserts >= 2x over plain decoding with bit-identical streams)
+  and spec_acceptance_rate (tenant-adapter acceptance of base-model
+  drafts),
 
 and compares every metric against ``benchmarks/serve_baselines.json``
 with a relative tolerance band.  Each metric has an orientation: moving
@@ -68,6 +73,8 @@ ORIENTATION = {
     "paged_pages_per_token": "lower",
     "paged_admitted_ratio": "higher",
     "paged_prefix_savings": "higher",
+    "spec_tokens_per_step": "higher",
+    "spec_acceptance_rate": "higher",
 }
 
 
@@ -88,6 +95,8 @@ def collect_metrics() -> dict:
         "paged_pages_per_token": float(decode["paged_pages_per_token"]),
         "paged_admitted_ratio": float(decode["paged_admitted_ratio"]),
         "paged_prefix_savings": float(decode["paged_prefix_savings"]),
+        "spec_tokens_per_step": float(decode["spec_tokens_per_step"]),
+        "spec_acceptance_rate": float(decode["spec_acceptance_rate"]),
         "swap_bytes_ratio": float(swap["ratio"]),
         "q8_payload_ratio": float(swap["q8_payload_ratio"]),
         "swap_reduction": float(sched["swap_reduction"]),
@@ -139,9 +148,16 @@ def main(argv=None) -> int:
     ap.add_argument("--tolerance", type=float, default=0.10,
                     help="relative tolerance band per metric")
     ap.add_argument("--baselines", default=str(BASELINES))
+    ap.add_argument("--json-out", default=None, metavar="PATH",
+                    help="also write the collected metrics as JSON "
+                         "(CI uploads this on failure so the debugging "
+                         "loop starts from the numbers, not a rerun)")
     args = ap.parse_args(argv)
 
     metrics = collect_metrics()
+    if args.json_out:
+        Path(args.json_out).write_text(
+            json.dumps(metrics, indent=1, sort_keys=True) + "\n")
     path = Path(args.baselines)
     if args.update:
         path.write_text(json.dumps(metrics, indent=1, sort_keys=True)

@@ -16,8 +16,10 @@ instrumentation contract promises (ISSUE 6 acceptance criteria):
   prefill, decode_step (plus swap_apply/swap_revert under
   ``--require-swaps``, plus the PagedKV lifecycle instants
   page_alloc/page_free/cow_split/prefix_share under
-  ``--require-paging``); ``--kind train`` requires data, train_step and
-  per-step ``train_step_metrics`` records carrying the BlockLLM
+  ``--require-paging``, plus the SpecServe spec_draft/spec_verify spans
+  under ``--require-spec``); ``--kind train`` requires data,
+  train_step and per-step ``train_step_metrics`` records carrying the
+  BlockLLM
   selection telemetry (sel_q, sel_churn, sel_grad_concentration).
 
 Usage:
@@ -43,6 +45,7 @@ REQUIRED = {
 }
 SWAP_SPANS = ("swap_apply", "swap_revert")
 PAGING_EVENTS = ("page_alloc", "page_free", "cow_split", "prefix_share")
+SPEC_SPANS = ("spec_draft", "spec_verify")
 TRAIN_TELEMETRY = ("sel_q", "sel_churn", "sel_grad_concentration")
 
 
@@ -136,6 +139,9 @@ def main(argv=None) -> int:
     ap.add_argument("--require-paging", action="store_true",
                     help="also require the PagedKV page-lifecycle "
                          "instants (serve runs with --paged)")
+    ap.add_argument("--require-spec", action="store_true",
+                    help="also require the speculative-decode spans "
+                         "(serve runs with --speculate)")
     args = ap.parse_args(argv)
 
     required = list(REQUIRED[args.kind])
@@ -143,6 +149,8 @@ def main(argv=None) -> int:
         required += list(SWAP_SPANS)
     if args.require_paging:
         required += list(PAGING_EVENTS)
+    if args.require_spec:
+        required += list(SPEC_SPANS)
 
     for p in map(Path, args.paths):
         if not p.exists():
