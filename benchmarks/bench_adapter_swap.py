@@ -29,7 +29,8 @@ import numpy as np
 from benchmarks import common
 from repro.adapters import (apply_delta, delta_from_trainer,
                             quantize_delta, revert_delta)
-from repro.core.blockllm import BlockLLMConfig, BlockLLMTrainer
+from repro import trainers
+from repro.core.blockllm import BlockLLMConfig
 from repro.core.selection import SelectorConfig
 from repro.optim.adam import Adam
 
@@ -44,8 +45,8 @@ def _finetuned_delta(cfg, steps: int):
     from repro.models import model
     base = model.init_params(jax.random.PRNGKey(0), cfg)
     base_copy = jax.tree.map(lambda a: a.copy(), base)
-    tr = BlockLLMTrainer(
-        cfg, base, adam=Adam(lr=3e-3),
+    tr = trainers.handle(
+        "blockllm", cfg, base, adam=Adam(lr=3e-3),
         bcfg=BlockLLMConfig(selector=SelectorConfig(
             sparsity=0.97, policy="static",
             static_k_frac=1.0 / cfg.num_layers, selectable_leaves=(),

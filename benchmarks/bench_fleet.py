@@ -1,0 +1,162 @@
+"""FleetServe benchmark: multi-replica aggregate throughput + routing.
+
+Replays one Zipf-skewed multi-tenant request mix — at ~10x the volume
+of ``bench_serve_sched`` — through fleets of 1, 2 and 4 replicas built
+from the SAME frozen ``ServeConfig``, and proves the fleet story:
+
+- **aggregate TPS scales**: tokens per fleet *round* (every replica
+  with work advances one scheduler step per round — the
+  step-denominated clock all serving gates use) must reach >= 1.8x the
+  single-replica rate at 2 replicas (hard assert + CI gate);
+- **tail latency drops**: p99 request latency in rounds at 2 replicas;
+- **cross-replica capture works**: when the router spills a hot tenant
+  to a second replica, that replica's ``AdapterCache`` captures the
+  home replica's already-dequantized HBM rows through the shared
+  ``FleetAdapterDirectory`` instead of re-promoting from disk — the
+  bench hard-asserts >= 1 peer hit and reports the shared bytes
+  (``fleet_xrep_bytes``, gated);
+- **streams are bit-identical**: every tenant's per-request token
+  streams at 2 and 4 replicas match single-replica serving exactly
+  (routing, spilling and peer capture are invisible to the tokens).
+
+Reported (CSV name,us_per_call,derived):
+  fleet_tps_per_round_{1,2,4}  aggregate tokens per fleet round
+  fleet_tps_speedup_2x         tps_2 / tps_1   (gate: >= 1.8x)
+  fleet_tps_speedup_4x         tps_4 / tps_1
+  fleet_p99_latency_rounds     p99 request latency, 2-replica fleet
+  fleet_xrep_bytes             device bytes captured cross-replica
+  fleet_spills                 requests routed off their home replica
+
+    PYTHONPATH=src python -m benchmarks.bench_fleet [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from benchmarks.bench_serve_sched import _zipf_tenancy
+from repro.adapters import InMemoryRegistry, extract_delta
+from repro.adapters.testing import perturb_rows as _perturbed
+from repro.models import model
+from repro.runtime.fleet import Router
+from repro.runtime.serve_config import SchedConfig, ServeConfig
+from repro.runtime.serve_loop import Request
+
+N_TENANTS = 8
+
+
+def _requests(cfg, tenancy, new_tokens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, 3 + i % 4),
+                    max_new_tokens=new_tokens, adapter_id=t)
+            for i, t in enumerate(tenancy)]
+
+
+def _outs(reqs):
+    return {r.rid: tuple(r.out) for r in reqs}
+
+
+def _serve_fleet(cfg, base, registry, serve_cfg, tenancy, new_tokens,
+                 replicas):
+    reqs = _requests(cfg, tenancy, new_tokens)
+    router = Router(cfg, base, serve_cfg, replicas=replicas,
+                    registry=registry)
+    t0 = time.monotonic()
+    for r in reqs:
+        assert router.submit(r) is not None   # no SLO => never shed
+    rounds = router.run_until_drained(max_rounds=50_000)
+    wall = time.monotonic() - t0
+    assert all(r.done for r in reqs), f"{replicas}-replica leg undrained"
+    return router, reqs, rounds, wall
+
+
+def run(quick: bool = False):
+    cfg = common.small_llama("fleet-bench", layers=4, d=32, vocab=128)
+    n_req = 240 if quick else 480        # ~10x bench_serve_sched volume
+    new_tokens = 6 if quick else 12
+    base = model.init_params(jax.random.PRNGKey(0), cfg)
+
+    ids = [f"t{i}" for i in range(N_TENANTS)]
+    deltas = {aid: extract_delta(
+        base, _perturbed(base, rows=(i % cfg.num_layers,
+                                     (i + 2) % cfg.num_layers),
+                         scale=0.4 + 0.1 * i, seed=10 + i),
+        meta={"adapter_id": aid}) for i, aid in enumerate(ids)}
+    registry = InMemoryRegistry(deltas)
+    tenancy, counts = _zipf_tenancy(ids, n_req, alpha=1.2)
+    print(f"tenant mix (Zipf over {N_TENANTS} tenants, "
+          f"{n_req} requests): {counts}")
+
+    serve_cfg = ServeConfig(
+        batch_slots=3, max_seq=128,
+        sched=SchedConfig(steps_per_turn=4, cache_bytes=64 * 2 ** 20))
+
+    legs = {}
+    for n in (1, 2, 4):
+        router, reqs, rounds, wall = _serve_fleet(
+            cfg, base, registry, serve_cfg, tenancy, new_tokens, n)
+        f = router.stats()["fleet"]
+        legs[n] = dict(router=router, reqs=reqs, rounds=rounds,
+                       outs=_outs(reqs), fleet=f)
+        print(f"{n} replica(s): {f['tokens']} tokens / {rounds} rounds "
+              f"= {f['tps_per_round']:.2f} tok/round; "
+              f"{f['spills']} spilled, {f['swaps']} swaps, "
+              f"{f['peer_hits']} peer hits, {wall:.2f}s")
+
+    # routing, spilling and peer capture must be invisible to the tokens
+    for n in (2, 4):
+        assert legs[n]["outs"] == legs[1]["outs"], \
+            f"{n}-replica token streams diverged from single-replica"
+
+    tps = {n: legs[n]["fleet"]["tps_per_round"] for n in (1, 2, 4)}
+    speedup2 = tps[2] / tps[1]
+    speedup4 = tps[4] / tps[1]
+    lat2 = np.asarray([r.finish_step - r.submit_step
+                       for r in legs[2]["reqs"]], np.float64)
+    p99 = float(np.percentile(lat2, 99))
+    xrep = int(legs[2]["fleet"]["xrep_bytes"])
+    peer_hits = int(legs[2]["fleet"]["peer_hits"])
+    spills = int(legs[2]["fleet"]["spills"])
+
+    common.emit("fleet_tps_per_round_1", 0.0, f"{tps[1]:.2f}")
+    common.emit("fleet_tps_per_round_2", 0.0, f"{tps[2]:.2f}")
+    common.emit("fleet_tps_per_round_4", 0.0, f"{tps[4]:.2f}")
+    common.emit("fleet_tps_speedup_2x", 0.0, f"{speedup2:.2f}")
+    common.emit("fleet_tps_speedup_4x", 0.0, f"{speedup4:.2f}")
+    common.emit("fleet_p99_latency_rounds", 0.0, f"{p99:.1f}")
+    common.emit("fleet_xrep_bytes", 0.0, f"{xrep}")
+    common.emit("fleet_spills", 0.0, f"{spills}")
+
+    print(f"\naggregate TPS : {tps[1]:.2f} -> {tps[2]:.2f} -> "
+          f"{tps[4]:.2f} tok/round "
+          f"({speedup2:.2f}x @ 2, {speedup4:.2f}x @ 4; gate >= 1.8x)")
+    print(f"p99 latency   : {p99:.0f} rounds (2 replicas)")
+    print(f"capture       : {peer_hits} peer hit(s), "
+          f"{xrep / 2 ** 10:.1f} KiB shared cross-replica "
+          f"(zero h2d re-promotion)")
+    assert speedup2 >= 1.8, (
+        f"2-replica aggregate TPS only {speedup2:.2f}x single-replica "
+        f"(need >= 1.8x)")
+    assert peer_hits >= 1, (
+        "no cross-replica capture happened: the spilled hot tenant "
+        "should have been captured from its home replica's HBM rows")
+    return {"tps_per_round_1": float(tps[1]),
+            "tps_per_round_2": float(tps[2]),
+            "tps_per_round_4": float(tps[4]),
+            "tps_speedup_2x": float(speedup2),
+            "tps_speedup_4x": float(speedup4),
+            "p99_latency_rounds": p99,
+            "xrep_bytes": float(xrep),
+            "spills": float(spills)}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args()
+    run(quick=a.quick)

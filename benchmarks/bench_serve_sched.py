@@ -43,6 +43,7 @@ from repro.adapters import (InMemoryRegistry, extract_delta,
 from repro.adapters.testing import perturb_rows as _perturbed
 from repro.models import model
 from repro.obs import Tracer, write_trace
+from repro.runtime.serve_config import SchedConfig, ServeConfig
 from repro.runtime.serve_loop import DecodeServer, Request
 
 STEPS_PER_TURN = 4
@@ -73,14 +74,16 @@ def _requests(cfg, tenancy, new_tokens, rid0=0, seed=0):
             for i, t in enumerate(tenancy)]
 
 
-def _serve(cfg, base, registry, waves, trace_path=None, **server_kw):
+def _serve(cfg, base, registry, waves, trace_path=None, **sched_kw):
     """Drive one server through successive request waves (drain between
     waves) — sustained traffic that revisits every tenant, which is
     what the capture path of the device cache exists for."""
     tracer = Tracer() if trace_path is not None else None
-    srv = DecodeServer(cfg, base, batch_slots=SLOTS, max_seq=128,
-                       registry=registry, steps_per_turn=STEPS_PER_TURN,
-                       tracer=tracer, **server_kw)
+    serve_cfg = ServeConfig(
+        batch_slots=SLOTS, max_seq=128,
+        sched=SchedConfig(steps_per_turn=STEPS_PER_TURN, **sched_kw))
+    srv = DecodeServer(cfg, base, serve_cfg, registry=registry,
+                       tracer=tracer)
     t0 = time.monotonic()
     for wave in waves:
         for r in wave:
@@ -142,8 +145,9 @@ def run(quick: bool = False, trace_dir=None):
         legs[name] = dict(srv=srv, reqs=reqs, wall=wall,
                           outs=_outs(reqs))
         s = srv.stats()
-        print(f"{name:15s}: {s['swaps']:3d} swaps / {s['steps']:4d} "
-              f"steps, {s['swap_bytes'] / 2 ** 20:.2f} MiB flipped, "
+        print(f"{name:15s}: {s['sched']['swaps']:3d} swaps / "
+              f"{s['decode']['steps']:4d} steps, "
+              f"{s['sched']['swap_bytes'] / 2 ** 20:.2f} MiB flipped, "
               f"{wall:.2f}s")
 
     # scheduling policy and cache tier must be invisible to the tokens

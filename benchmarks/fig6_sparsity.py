@@ -9,7 +9,8 @@ import jax
 import numpy as np
 
 from benchmarks import common
-from repro.core.blockllm import BlockLLMConfig, BlockLLMTrainer
+from repro import trainers
+from repro.core.blockllm import BlockLLMConfig
 from repro.core.selection import SelectorConfig
 from repro.models import model as model_lib
 from repro.optim.adam import Adam
@@ -22,8 +23,9 @@ def run(quick=False):
     steps = 15 if quick else 40
     rows = {}
     for s, kf in ((0.5, 0.5), (0.7, 0.3), (0.9, 0.125)):
-        tr = BlockLLMTrainer(
-            cfg, model_lib.init_params(jax.random.PRNGKey(0), cfg),
+        tr = trainers.handle(
+            "blockllm", cfg,
+            model_lib.init_params(jax.random.PRNGKey(0), cfg),
             adam=Adam(lr=1e-3),
             bcfg=BlockLLMConfig(selector=SelectorConfig(
                 sparsity=s, policy="static", static_k_frac=kf,

@@ -11,15 +11,17 @@ import jax
 import numpy as np
 
 from benchmarks import common
-from repro.core.blockllm import BlockLLMConfig, BlockLLMTrainer
+from repro import trainers
+from repro.core.blockllm import BlockLLMConfig
 from repro.core.selection import SelectorConfig
 from repro.models import model as model_lib
 from repro.optim.adam import Adam
 
 
 def _trainer(cfg, invert=False, visit_freq=True, seed=0):
-    return BlockLLMTrainer(
-        cfg, model_lib.init_params(jax.random.PRNGKey(seed), cfg),
+    return trainers.handle(
+        "blockllm", cfg,
+        model_lib.init_params(jax.random.PRNGKey(seed), cfg),
         adam=Adam(lr=3e-3),
         bcfg=BlockLLMConfig(selector=SelectorConfig(
             sparsity=0.95, policy="static", static_k_frac=0.125,

@@ -79,22 +79,24 @@ def run(quick=False):
         assert row[0] < row[2], "BlockLLM must beat Adam on memory"
 
     print("\n== Table 1: loss trend (reduced 60M, synthetic C4) ==")
-    from repro.core.blockllm import (BlockLLMConfig, BlockLLMTrainer,
-                                     FullAdamTrainer)
+    from repro import trainers
+    from repro.core.blockllm import BlockLLMConfig
     from repro.core.selection import SelectorConfig
     cfg = reduce_config(config_base.get_config("llama-60m"), 2)
     steps = 15 if quick else 40
     pipe = common.pipeline_for(cfg, batch=8, seq=64)
     results = {}
     for meth, mk in {
-        "blockllm_s0.5": lambda: BlockLLMTrainer(
-            cfg, model_lib.init_params(jax.random.PRNGKey(0), cfg),
+        "blockllm_s0.5": lambda: trainers.handle(
+            "blockllm", cfg,
+            model_lib.init_params(jax.random.PRNGKey(0), cfg),
             adam=Adam(lr=1e-3),
             bcfg=BlockLLMConfig(selector=SelectorConfig(
                 sparsity=0.5, policy="static", static_k_frac=0.5,
                 patience=50))),
-        "adam": lambda: FullAdamTrainer(
-            cfg, model_lib.init_params(jax.random.PRNGKey(0), cfg),
+        "adam": lambda: trainers.handle(
+            "adam", cfg,
+            model_lib.init_params(jax.random.PRNGKey(0), cfg),
             adam=Adam(lr=1e-3)),
     }.items():
         out = common.run_trainer(mk(), pipe, steps)

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro.core.blockllm import FullAdamTrainer
+from repro import trainers
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.models import model as model_lib
 from repro.optim.adam import Adam
@@ -76,7 +76,7 @@ def run(quick=False):
     pre_steps = 20 if quick else 50
     ft_steps = 12 if quick else 30
 
-    base = FullAdamTrainer(cfg, model_lib.init_params(
+    base = trainers.handle("adam", cfg, model_lib.init_params(
         jax.random.PRNGKey(0), cfg), adam=Adam(lr=2e-3))
     for s in range(pre_steps):
         base.train_step(pipeA.batch(s))
@@ -109,7 +109,7 @@ def run(quick=False):
         "moderate sparsity should beat extreme sparsity"
 
     # Fig 3 companion: are the most-changed weights the largest ones?
-    full = FullAdamTrainer(cfg, w0, adam=Adam(lr=2e-3))
+    full = trainers.handle("adam", cfg, w0, adam=Adam(lr=2e-3))
     for i in range(ft_steps):
         full.train_step(pipeB.batch(i))
     flat0 = jnp.concatenate([l.reshape(-1) for l in jax.tree.leaves(w0)])

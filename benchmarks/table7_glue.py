@@ -14,9 +14,9 @@ import jax
 import numpy as np
 
 from benchmarks import common
-from repro.baselines.galore import GaLore, GaLoreTrainer
-from repro.core.blockllm import (BlockLLMConfig, BlockLLMTrainer,
-                                 FullAdamTrainer)
+from repro import trainers
+from repro.baselines.galore import GaLore
+from repro.core.blockllm import BlockLLMConfig
 from repro.core.selection import SelectorConfig
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.models import model as model_lib
@@ -44,7 +44,7 @@ def run(quick=False):
     cfg = common.small_llama(layers=4, d=96, vocab=256)
     pre = TokenPipeline(DataConfig(vocab_size=256, seq_len=64,
                                    global_batch=8, seed=1))
-    w0_tr = FullAdamTrainer(cfg, model_lib.init_params(
+    w0_tr = trainers.handle("adam", cfg, model_lib.init_params(
         jax.random.PRNGKey(0), cfg), adam=Adam(lr=2e-3))
     for s in range(10 if quick else 30):
         w0_tr.train_step(pre.batch(s))
@@ -61,17 +61,17 @@ def run(quick=False):
         pipe = TokenPipeline(DataConfig(vocab_size=256, seq_len=64,
                                         global_batch=8, seed=seed))
         for meth, mk in {
-            "blockllm": lambda: BlockLLMTrainer(
-                cfg, clone(), adam=Adam(lr=1e-3),
+            "blockllm": lambda: trainers.handle(
+                "blockllm", cfg, clone(), adam=Adam(lr=1e-3),
                 bcfg=BlockLLMConfig(selector=SelectorConfig(
                     sparsity=0.95, patience=max(1, steps // 4),
                     policy="static", static_k_frac=0.25,
                     selectable_leaves=(),
                     always_active_leaves=("final_norm",)))),
-            "galore": lambda: GaLoreTrainer(
-                cfg, clone(), galore=GaLore(rank=8, lr=1e-3,
-                                            update_proj_gap=10)),
-            "fft": lambda: FullAdamTrainer(cfg, clone(),
+            "galore": lambda: trainers.handle(
+                "galore", cfg, clone(),
+                galore=GaLore(rank=8, lr=1e-3, update_proj_gap=10)),
+            "fft": lambda: trainers.handle("adam", cfg, clone(),
                                            adam=Adam(lr=1e-3)),
         }.items():
             tr = mk()

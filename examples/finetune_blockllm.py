@@ -12,11 +12,10 @@ import tempfile
 
 import jax
 
-from repro.baselines.badam import BAdamTrainer
-from repro.baselines.galore import GaLore, GaLoreTrainer
-from repro.baselines.lora import LoRATrainer
+from repro import trainers
+from repro.baselines.galore import GaLore
 from repro.configs import base as config_base
-from repro.core.blockllm import BlockLLMConfig, BlockLLMTrainer
+from repro.core.blockllm import BlockLLMConfig
 from repro.core.selection import SelectorConfig
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.launch.train import reduce_config
@@ -43,8 +42,8 @@ ft = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=128,
                               global_batch=8, seed=42))
 
 # --- pretrain on domain A (full Adam) -------------------------------
-from repro.core.blockllm import FullAdamTrainer
-base = FullAdamTrainer(cfg, model.init_params(jax.random.PRNGKey(0), cfg),
+base = trainers.handle("adam", cfg,
+                       model.init_params(jax.random.PRNGKey(0), cfg),
                        adam=Adam(lr=2e-3))
 print("\npretraining on domain A...")
 run(base, pre.batch, TrainLoopConfig(total_steps=args.pretrain_steps,
@@ -56,17 +55,18 @@ def clone():
     return jax.tree.map(lambda a: a.copy(), w0)
 
 methods = {
-    "blockllm": lambda: BlockLLMTrainer(
-        cfg, clone(), adam=Adam(lr=1e-3),
+    "blockllm": lambda: trainers.handle(
+        "blockllm", cfg, clone(), adam=Adam(lr=1e-3),
         bcfg=BlockLLMConfig(selector=SelectorConfig(
             sparsity=0.95, patience=100, policy="static",
             static_k_frac=0.25))),
-    "lora(r=8)": lambda: LoRATrainer(cfg, clone(), rank=8,
-                                     adam=Adam(lr=1e-3)),
-    "galore(r=8)": lambda: GaLoreTrainer(
-        cfg, clone(), galore=GaLore(rank=8, lr=1e-3, update_proj_gap=50)),
-    "badam": lambda: BAdamTrainer(cfg, clone(), switch_every=20,
-                                  adam=Adam(lr=1e-3)),
+    "lora(r=8)": lambda: trainers.handle("lora", cfg, clone(), rank=8,
+                                         adam=Adam(lr=1e-3)),
+    "galore(r=8)": lambda: trainers.handle(
+        "galore", cfg, clone(),
+        galore=GaLore(rank=8, lr=1e-3, update_proj_gap=50)),
+    "badam": lambda: trainers.handle("badam", cfg, clone(),
+                                     switch_every=20, adam=Adam(lr=1e-3)),
 }
 print(f"\nfinetuning on domain B ({args.finetune_steps} steps each):")
 print(f"{'method':<14}{'final loss':>12}{'state MiB':>12}")

@@ -27,13 +27,14 @@ import numpy as np
 
 from repro.adapters import (AdapterRegistry, InMemoryRegistry,
                             apply_delta, quantize_delta)
+from repro import trainers
 from repro.configs.base import ModelConfig
-from repro.core.blockllm import BlockLLMConfig, BlockLLMTrainer, \
-    FullAdamTrainer
+from repro.core.blockllm import BlockLLMConfig
 from repro.core.selection import SelectorConfig
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.models import model
 from repro.optim.adam import Adam
+from repro.runtime.serve_config import SchedConfig, ServeConfig
 from repro.runtime.serve_loop import DecodeServer, Request
 from repro.runtime.train_loop import TrainLoopConfig, run
 
@@ -64,7 +65,8 @@ def pipe(seed):
 
 # --- 1. pretrain the shared base ------------------------------------
 print(f"pretraining base ({cfg.param_count() / 1e6:.2f}M params)...")
-pre = FullAdamTrainer(cfg, model.init_params(jax.random.PRNGKey(0), cfg),
+pre = trainers.handle("adam", cfg,
+                      model.init_params(jax.random.PRNGKey(0), cfg),
                       adam=Adam(lr=2e-3))
 run(pre, pipe(1).batch, TrainLoopConfig(total_steps=args.pretrain_steps,
                                         log_every=0, ckpt_dir=None))
@@ -76,8 +78,9 @@ adapter_dir = tempfile.mkdtemp(prefix="blockdelta_")
 
 
 def finetune(task: str, seed: int):
-    tr = BlockLLMTrainer(
-        cfg, jax.tree.map(lambda a: a.copy(), base), adam=Adam(lr=2e-3),
+    tr = trainers.handle(
+        "blockllm", cfg, jax.tree.map(lambda a: a.copy(), base),
+        adam=Adam(lr=2e-3),
         bcfg=BlockLLMConfig(selector=SelectorConfig(
             sparsity=0.97, policy="static",
             static_k_frac=1.0 / cfg.num_layers, selectable_leaves=(),
@@ -113,10 +116,12 @@ def fresh_requests():
             for i, p in enumerate(prompts)]
 
 
-def serve_leg(reg, **server_kw):
+def serve_leg(reg, **sched_kw):
     reqs = fresh_requests()
-    srv = DecodeServer(cfg, base, batch_slots=3, max_seq=96,
-                       registry=reg, steps_per_turn=4, **server_kw)
+    serve_cfg = ServeConfig(batch_slots=3, max_seq=96,
+                            sched=SchedConfig(steps_per_turn=4,
+                                              **sched_kw))
+    srv = DecodeServer(cfg, base, serve_cfg, registry=reg)
     for r in reqs:
         srv.submit(r)
     srv.run_until_drained()
@@ -125,7 +130,7 @@ def serve_leg(reg, **server_kw):
 
 
 srv, reqs, outs = serve_leg(registry)
-s = srv.stats()
+s = srv.stats()["sched"]
 print(f"\nserved {len(reqs)} requests across {len(tenants)} tenants: "
       f"{s['swaps']} hot swaps, {s['swap_bytes'] / 2 ** 20:.2f} MiB moved "
       f"(full reload would be {param_bytes / 2 ** 20:.2f} MiB each)")
@@ -136,7 +141,8 @@ for tenant in tenants:
     params_t = base
     if tenant is not None:
         params_t, _ = apply_delta(base, registry.get(tenant))
-    ref = DecodeServer(cfg, params_t, batch_slots=3, max_seq=96)
+    ref = DecodeServer(cfg, params_t,
+                       ServeConfig(batch_slots=3, max_seq=96))
     ref_reqs = [Request(rid=r.rid, prompt=r.prompt,
                         max_new_tokens=args.new_tokens)
                 for r in reqs if r.adapter_id == tenant]

@@ -11,9 +11,10 @@ import argparse
 import jax
 import numpy as np
 
-from repro.baselines.galore import GaLore, GaLoreTrainer
+from repro import trainers as trainers_lib
+from repro.baselines.galore import GaLore
 from repro.configs import base as config_base
-from repro.core.blockllm import BlockLLMConfig, BlockLLMTrainer
+from repro.core.blockllm import BlockLLMConfig
 from repro.core.selection import SelectorConfig
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.launch.train import reduce_config
@@ -34,14 +35,14 @@ pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=256,
                                 global_batch=8, seed=0))
 
 trainers = {
-    "blockllm(s=0.5,m=50)": BlockLLMTrainer(
-        cfg, model.init_params(jax.random.PRNGKey(0), cfg),
+    "blockllm(s=0.5,m=50)": trainers_lib.handle(
+        "blockllm", cfg, model.init_params(jax.random.PRNGKey(0), cfg),
         adam=Adam(lr=schedule.cosine(1e-3, args.steps, warmup_steps=0)),
         bcfg=BlockLLMConfig(selector=SelectorConfig(
             sparsity=0.5, patience=50, policy="static",
             static_k_frac=0.5))),
-    "galore(r=128-equiv)": GaLoreTrainer(
-        cfg, model.init_params(jax.random.PRNGKey(0), cfg),
+    "galore(r=128-equiv)": trainers_lib.handle(
+        "galore", cfg, model.init_params(jax.random.PRNGKey(0), cfg),
         galore=GaLore(rank=min(128, cfg.d_model // 2),
                       lr=schedule.cosine(1e-3, args.steps,
                                          warmup_steps=args.steps // 10),

@@ -145,3 +145,42 @@ print(f"re-selections: {state.meta['reselections']}, "
 #    them via check_trace --require-spec) and the serve gate pins
 #    spec_tokens_per_step / spec_acceptance_rate in
 #    benchmarks/serve_baselines.json.
+
+# 8. Fleet serving (FleetServe, runtime/fleet.py).  One DecodeServer is
+#    one replica; `launch.fleet` puts N of them behind an
+#    adapter-affinity router:
+#
+#        PYTHONPATH=src python -m repro.launch.fleet \
+#            --quick --replicas 2 --demo-adapters 3 \
+#            --cache-bytes 16777216 --trace /tmp/fleet.json
+#
+#    Tenants shard across replicas by consistent hashing (adding or
+#    removing a replica remaps only ~1/N tenants, so HBM-resident
+#    adapters mostly stay put).  Under load the router *spills* a hot
+#    tenant to its ring successors (`--spill-depth`, default 2x batch
+#    slots), *steals* queued work onto replicas that drained early, and
+#    *sheds* requests whose `--slo-ms` no replica can meet — all driven
+#    by the per-replica TraceKit observables.  When a tenant does land
+#    on a second replica, its AdapterCache captures the first replica's
+#    already-dequantized delta rows through the shared
+#    FleetAdapterDirectory instead of re-reading disk (`peer_hits` /
+#    `xrep_bytes`, zero host->device bytes).  Per-tenant token streams
+#    stay bit-identical to single-replica serving (requests never split
+#    across replicas and outputs are co-schedule-invariant).
+#
+#    The replication unit is a frozen ServeConfig
+#    (runtime/serve_config.py): DecodeServer's ~15 flat kwargs folded
+#    into one JSON-round-trippable tree (core + sched/kv/spec
+#    sub-configs, `ServeConfig.from_json(cfg.to_json()) == cfg`).  Both
+#    launchers share the flags: `--save-config fleet.json` writes the
+#    resolved config, `--config fleet.json` reproduces the same server
+#    shape; the flat DecodeServer kwargs still construct for one
+#    release behind a DeprecationWarning.
+#    `Router.stats()` returns a `fleet` roll-up (spills/steals/sheds,
+#    tps_per_round, cross-replica bytes) + per-replica
+#    DecodeServer.stats() + an aggregate metrics merge; `--trace` writes
+#    ONE merged Perfetto trace with one process per replica plus the
+#    router's route/steal/shed lane (CI validates it via
+#    tools/check_trace.py --require-fleet).  benchmarks/bench_fleet.py
+#    gates aggregate TPS >= 1.8x at 2 replicas on a Zipf mix (with
+#    bit-identical streams) through the serve gate's fleet_* metrics.

@@ -56,13 +56,21 @@ class AdapterCache:
     """
 
     def __init__(self, registry, *, cache_bytes: int = 64 * 2 ** 20,
-                 tracer=None):
+                 tracer=None, directory=None, owner: str = "server"):
         assert cache_bytes > 0, "use cache=None to disable caching"
         self.registry = registry
         self.cache_bytes = int(cache_bytes)
         # TraceKit: promote/evict/capture land on the "cache" lane;
         # tracer=None (the default) keeps every hook a no-op
         self.tracer = tracer
+        # FleetServe: ``directory`` is a shared ``FleetAdapterDirectory``
+        # (runtime/fleet.py) advertising which replica holds which
+        # adapter HBM-resident.  A miss first tries a *peer capture* —
+        # sharing another replica's already-dequantized device rows —
+        # before paying the host->device promotion; admissions publish,
+        # evictions/drops unpublish (the PR-4 external-eviction path).
+        self.directory = directory
+        self.owner = owner
         self._slots: "OrderedDict[str, SparseDelta]" = OrderedDict()
         self._nbytes: Dict[str, int] = {}
         self.hits = 0
@@ -73,6 +81,8 @@ class AdapterCache:
         self.stale_drops = 0       # re-published adapters invalidated
         self.h2d_bytes = 0         # host->device promotion traffic
         self.d2d_bytes = 0         # flip bytes served from HBM
+        self.peer_hits = 0         # misses served from a peer replica
+        self.xrep_bytes = 0        # device bytes captured cross-replica
 
     def _registry_version(self, adapter_id: str) -> int:
         ver = getattr(self.registry, "version", None)
@@ -104,12 +114,16 @@ class AdapterCache:
         self._slots[adapter_id] = delta
         self._nbytes[adapter_id] = nb
         self._slots.move_to_end(adapter_id)
+        if self.directory is not None:
+            self.directory.publish(self.owner, adapter_id, delta)
         while self.resident_bytes() > self.cache_bytes:
             victim, _ = next(iter(self._slots.items()))
             nb_v = self._nbytes[victim]
             del self._slots[victim]
             del self._nbytes[victim]
             self.evictions += 1
+            if self.directory is not None:
+                self.directory.unpublish(self.owner, victim)
             if self.tracer is not None:
                 self.tracer.instant("cache_evict", lane="cache",
                                     adapter=str(victim), bytes=nb_v)
@@ -141,6 +155,23 @@ class AdapterCache:
             self.stale_drops += 1
         self.misses += 1
         version = self._registry_version(adapter_id)
+        if self.directory is not None:
+            # cross-replica capture: another replica's HBM copy of this
+            # adapter IS the promoted value (promotion is deterministic),
+            # so share its device rows instead of re-reading disk and
+            # re-dequantizing — zero host->device transfer
+            peer = self.directory.lookup(adapter_id, version,
+                                         exclude=self.owner)
+            if peer is not None:
+                dev = SparseDelta(dict(peer.entries), dict(peer.meta))
+                self.peer_hits += 1
+                self.xrep_bytes += _device_nbytes(dev)
+                self._admit(adapter_id, dev)
+                if self.tracer is not None:
+                    self.tracer.instant("cache_peer_hit", lane="cache",
+                                        adapter=str(adapter_id),
+                                        bytes=_device_nbytes(dev))
+                return dev
         t0 = time.monotonic_ns() if self.tracer is not None else 0
         host = self.registry.get(adapter_id)
         self.h2d_bytes += host.nbytes      # q8 payloads upload quantized
@@ -205,6 +236,8 @@ class AdapterCache:
         """Explicitly release one adapter's device rows."""
         if self._slots.pop(adapter_id, None) is not None:
             del self._nbytes[adapter_id]
+            if self.directory is not None:
+                self.directory.unpublish(self.owner, adapter_id)
 
     def stats(self) -> Dict[str, float]:
         return {"hits": self.hits, "misses": self.misses,
@@ -216,4 +249,6 @@ class AdapterCache:
                 "cache_bytes": self.cache_bytes,
                 "h2d_bytes": self.h2d_bytes,
                 "d2d_bytes": self.d2d_bytes,
+                "peer_hits": self.peer_hits,
+                "xrep_bytes": self.xrep_bytes,
                 "hit_rate": self.hit_rate()}

@@ -8,21 +8,14 @@ draws (BlockLLM = BAdam + informed selection + masks + adaptive trigger).
 """
 from __future__ import annotations
 
-from repro.core.blockllm import BlockLLMConfig, BlockLLMTrainer
-from repro.optim.adam import Adam
 from repro.trainers.badam import badam_config  # noqa: F401 — re-export
 
 
-class BAdamTrainer(BlockLLMTrainer):
-    """Deprecated: thin shim over ``trainers.badam.BAdamCore``."""
-
-    def __init__(self, cfg, params, *, switch_every=100, block_rows=1,
-                 adam=None, loss_fn=None, attn_impl="full",
-                 train_embeddings=False):
-        from repro.trainers.badam import BAdamCore
-        core = BAdamCore(cfg, switch_every=switch_every,
-                         block_rows=block_rows,
-                         train_embeddings=train_embeddings,
-                         adam=adam or Adam(lr=1e-3), loss_fn=loss_fn,
-                         attn_impl=attn_impl)
-        super().__init__(cfg, params, _core=core)
+def __getattr__(name: str):
+    if name == "BAdamTrainer":
+        raise ImportError(
+            "BAdamTrainer was removed: use trainers.handle('badam', "
+            "cfg, params, switch_every=..., block_rows=...) "
+            "(see repro.trainers).")
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")

@@ -137,45 +137,11 @@ class GaLore:
                    jax.tree.leaves((state.proj, state.mu, state.nu)))
 
 
-class GaLoreTrainer:
-    """Deprecated: thin shim over ``trainers.galore.GaLoreCore``.
-
-    NOTE: ``self.state`` is now the protocol ``TrainState``; the raw
-    ``GaLoreState`` lives at ``self.state.arrays["opt"]`` (also exposed
-    as ``self.opt_state``).
-    """
-
-    def __init__(self, cfg, params, *, galore=None, loss_fn=None,
-                 attn_impl="full"):
-        from repro.trainers.galore import GaLoreCore
-        self.core = GaLoreCore(cfg, galore=galore, loss_fn=loss_fn,
-                               attn_impl=attn_impl)
-        self.cfg = cfg
-        self.galore = self.core.galore
-        self.state = self.core.init(jax.random.PRNGKey(0), params)
-
-    def train_step(self, batch):
-        self.state, metrics = self.core.step(self.state, batch)
-        return metrics
-
-    def memory_report(self):
-        return self.core.memory_report(self.state)
-
-    def merged_params(self):
-        return self.core.merged_params(self.state)
-
-    @property
-    def params(self):
-        return self.state.arrays["params"]
-
-    @property
-    def opt_state(self) -> GaLoreState:
-        return self.state.arrays["opt"]
-
-    @property
-    def step(self) -> int:
-        return int(self.state.meta["step"])
-
-    @property
-    def loss_history(self) -> list:
-        return self.state.meta["loss_history"]
+def __getattr__(name: str):
+    if name == "GaLoreTrainer":
+        raise ImportError(
+            "GaLoreTrainer was removed: use trainers.handle('galore', "
+            "cfg, params, galore=GaLore(...)) (see repro.trainers); the "
+            "GaLore optimizer math above is unchanged.")
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")

@@ -61,46 +61,11 @@ def lora_merge(params: Pytree, factors: Pytree, *, alpha: float,
                             isinstance(x, dict) and "A" in x))
 
 
-class LoRATrainer:
-    """Deprecated: thin shim over ``trainers.lora.LoRACore``."""
-
-    def __init__(self, cfg, params, *, rank=8, alpha=None, adam=None,
-                 loss_fn=None, attn_impl="full", key=None):
-        from repro.trainers.lora import LoRACore
-        self.core = LoRACore(cfg, rank=rank, alpha=alpha, adam=adam,
-                             loss_fn=loss_fn, attn_impl=attn_impl)
-        self.cfg = cfg
-        self.rank = self.core.rank
-        self.alpha = self.core.alpha
-        self.adam = self.core.adam
-        self.state = self.core.init(key or jax.random.PRNGKey(0), params)
-
-    def train_step(self, batch):
-        self.state, metrics = self.core.step(self.state, batch)
-        return metrics
-
-    def merged_params(self):
-        return self.core.merged_params(self.state)
-
-    def memory_report(self):
-        return self.core.memory_report(self.state)
-
-    @property
-    def params(self):
-        return self.state.arrays["params"]
-
-    @property
-    def factors(self):
-        return self.state.arrays["factors"]
-
-    @property
-    def opt_state(self):
-        return self.state.arrays["opt"]
-
-    @property
-    def step(self) -> int:
-        return int(self.state.meta["step"])
-
-    @property
-    def loss_history(self) -> list:
-        return self.state.meta["loss_history"]
+def __getattr__(name: str):
+    if name == "LoRATrainer":
+        raise ImportError(
+            "LoRATrainer was removed: use trainers.handle('lora', cfg, "
+            "params, rank=..., alpha=...) (see repro.trainers); the "
+            "lora_init/lora_merge math above is unchanged.")
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")

@@ -1,12 +1,12 @@
-"""BlockLLM device math (paper Algorithm 1) + deprecated trainer shims.
+"""BlockLLM device math (paper Algorithm 1): config + the raw step fn.
 
 ``build_step_fn`` is the jitted masked-Adam step over the *active*
 parameter subset — the single source of truth compiled by BOTH the
 single-host path and the distributed launcher.  The orchestration
 (selection, probe rotation, loss-patience trigger) lives in
 ``repro.trainers.blockllm.BlockLLMCore`` on the functional
-init/step/state protocol; ``BlockLLMTrainer`` here is a deprecation shim
-over that core.
+init/step/state protocol; imperative drivers wrap it with
+``trainers.handle("blockllm", cfg, params, ...)``.
 
 Memory model (the paper's contribution): gradients, Adam moments and masks
 exist ONLY for the active subset.  The jitted step differentiates w.r.t.
@@ -24,14 +24,13 @@ points).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import units as units_lib
-from repro.core.selection import NormTracker, SelectorConfig, VisitTracker
+from repro.core.selection import SelectorConfig
 from repro.core.units import Plan, PlanStructure, UnitIndex
 from repro.optim.adam import Adam, AdamState
 
@@ -70,7 +69,7 @@ def build_step_fn(cfg, index: UnitIndex, adam: Adam, bcfg: BlockLLMConfig,
                   with_masks: bool, loss_fn: Callable):
     """The raw (un-jitted) BlockLLM train step.
 
-    Shared between the single-host ``BlockLLMTrainer`` (plain jit) and the
+    Shared between the single-host ``BlockLLMCore`` (plain jit) and the
     distributed launcher (pjit with explicit shardings — launch/steps.py).
 
     Signature of the returned fn:
@@ -180,153 +179,23 @@ def build_step_fn(cfg, index: UnitIndex, adam: Adam, bcfg: BlockLLMConfig,
 
 
 # ---------------------------------------------------------------------- #
-# DEPRECATED shims — the trainer logic now lives in ``repro.trainers``
-# (the functional TrainerCore protocol).  These classes keep the historic
-# imperative surface (attributes, train_step, _select) for existing
-# callers; new code should use ``trainers.make(name, cfg)`` +
-# ``core.init/step`` or a ``TrainerHandle``.
+# The PR-2 legacy trainer classes that used to live here were removed in
+# the trainer-registry redesign.  Imports fail loudly with the registry
+# replacement instead of an AttributeError.
 # ---------------------------------------------------------------------- #
 
-
-class BlockLLMTrainer:
-    """Deprecated: thin shim over ``repro.trainers.blockllm.BlockLLMCore``.
-
-    Holds one ``(core, state)`` pair and maps the legacy attribute
-    surface (``params``/``active``/``opt_state``/``masks``/``plan``/
-    ``norms``/…) onto the functional state.  Prefer
-    ``trainers.make("blockllm", cfg)``.
-    """
-
-    _CORE_CLS: Any = None  # resolved lazily (import cycle)
-
-    def __init__(self, cfg, params, *, bcfg: Optional[BlockLLMConfig] = None,
-                 adam: Optional[Adam] = None,
-                 loss_fn: Optional[Callable] = None,
-                 attn_impl: str = "full", _core=None):
-        if _core is None:
-            from repro.trainers.blockllm import BlockLLMCore
-            _core = BlockLLMCore(cfg, bcfg=bcfg, adam=adam,
-                                 loss_fn=loss_fn, attn_impl=attn_impl)
-        self.core = _core
-        self.cfg = cfg
-        self.bcfg = self.core.bcfg
-        self.adam = self.core.adam
-        self.state = self.core.init(jax.random.PRNGKey(0), params)
-
-    # -- imperative API ------------------------------------------------ #
-
-    def train_step(self, batch) -> Dict[str, float]:
-        self.state, metrics = self.core.step(self.state, batch)
-        return metrics
-
-    def _select(self, initial=False):
-        self.state = self.core.reselect(self.state)
-
-    def merged_params(self) -> Pytree:
-        return self.core.merged_params(self.state)
-
-    def eval_loss(self, batch) -> float:
-        return self.core.eval_loss(self.state, batch)
-
-    def memory_report(self) -> Dict[str, int]:
-        return self.core.memory_report(self.state)
-
-    # -- legacy attribute views over the functional state -------------- #
-
-    @property
-    def params(self):
-        return self.state.arrays["params"]
-
-    @property
-    def active(self):
-        return {"sel": self.state.arrays["sel"],
-                "probe": self.state.arrays["probe"]}
-
-    @property
-    def opt_state(self) -> AdamState:
-        return self.state.arrays["opt"]
-
-    @property
-    def masks(self):
-        return self.state.arrays["masks"]
-
-    @property
-    def plan(self) -> Plan:
-        return self.core.plan_of(self.state)
-
-    @property
-    def q(self) -> float:
-        return float(self.state.meta["q"])
-
-    @property
-    def norms(self) -> NormTracker:
-        # live view: legacy mutation (norm-dict seeding) reaches state
-        return self.core._trackers(self.state.meta, copy=False)[0]
-
-    @property
-    def visits(self) -> VisitTracker:
-        return self.core._trackers(self.state.meta, copy=False)[1]
-
-    @property
-    def index(self):
-        return self.core.index_for(self.state.arrays["params"])
-
-    @property
-    def step(self) -> int:
-        return int(self.state.meta["step"])
-
-    @property
-    def loss_history(self) -> list:
-        return self.state.meta["loss_history"]
-
-    @property
-    def reselections(self) -> int:
-        return int(self.state.meta["reselections"])
-
-    @property
-    def recompiles(self) -> int:
-        return self.core.recompiles
+_REMOVED_TRAINERS = {"BlockLLMTrainer": "blockllm",
+                     "FullAdamTrainer": "adam"}
 
 
-# ---------------------------------------------------------------------- #
-# full-Adam reference trainer (the paper's "Adam exceeds 80GB" baseline)
-# ---------------------------------------------------------------------- #
-
-
-class FullAdamTrainer:
-    """Deprecated: thin shim over ``trainers.full_adam.FullAdamCore``."""
-
-    def __init__(self, cfg, params, *, adam=None, loss_fn=None,
-                 attn_impl="full"):
-        from repro.trainers.full_adam import FullAdamCore
-        self.core = FullAdamCore(cfg, adam=adam, loss_fn=loss_fn,
-                                 attn_impl=attn_impl)
-        self.cfg = cfg
-        self.adam = self.core.adam
-        self.state = self.core.init(jax.random.PRNGKey(0), params)
-
-    def train_step(self, batch):
-        self.state, metrics = self.core.step(self.state, batch)
-        return metrics
-
-    def memory_report(self):
-        return self.core.memory_report(self.state)
-
-    def merged_params(self):
-        return self.core.merged_params(self.state)
-
-    @property
-    def params(self):
-        return self.state.arrays["params"]
-
-    @property
-    def opt_state(self):
-        return self.state.arrays["opt"]
-
-    @property
-    def step(self) -> int:
-        return int(self.state.meta["step"])
-
-    @property
-    def loss_history(self) -> list:
-        return self.state.meta["loss_history"]
+def __getattr__(name: str):
+    if name in _REMOVED_TRAINERS:
+        raise ImportError(
+            f"{name} was removed: the trainer logic lives in the "
+            f"repro.trainers registry.  Use trainers.handle("
+            f"{_REMOVED_TRAINERS[name]!r}, cfg, params, **hyperparams) "
+            f"for the imperative surface, or trainers.make("
+            f"{_REMOVED_TRAINERS[name]!r}, cfg, **hyperparams) + "
+            f"core.init/step for the functional protocol.")
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")

@@ -55,23 +55,25 @@ with ``--update``); the decode hot path itself is covered by
 from __future__ import annotations
 
 import argparse
+from pathlib import Path
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama-60m")
-    ap.add_argument("--reduce", type=int, default=4)
+def add_serve_config_flags(ap: argparse.ArgumentParser) -> None:
+    """Flags that map onto ``ServeConfig`` (shared with launch.fleet).
+
+    ``--config path.json`` loads a serialized ServeConfig instead of
+    building one from the flags below; ``--save-config path.json``
+    writes the effective config back out — the pair round-trips
+    bit-exactly (``ServeConfig.from_json(cfg.to_json()) == cfg``).
+    """
+    ap.add_argument("--config", default=None, metavar="PATH",
+                    help="load a ServeConfig JSON (overrides the "
+                         "serve-shape flags below)")
+    ap.add_argument("--save-config", default=None, metavar="PATH",
+                    help="write the effective ServeConfig JSON "
+                         "(reload it with --config)")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--adapters", default=None,
-                    help="BlockDelta registry dir: serve every stored "
-                         "adapter alongside the base model")
-    ap.add_argument("--tenants", default="all",
-                    help="comma-separated adapter ids to serve "
-                         "(default: all in the registry)")
     ap.add_argument("--steps-per-turn", type=int, default=8,
                     help="base decode steps per adapter group before "
                          "rotating (per-adapter budgets scale from "
@@ -80,10 +82,6 @@ def main(argv=None):
                     help="HBM byte budget for the AdapterCache "
                          "(delta rows kept device-resident; 0 = "
                          "uncached, every flip re-uploads host rows)")
-    ap.add_argument("--slo-ms", type=float, default=0,
-                    help="per-request deadline budget (0 = none); "
-                         "groups whose slack runs low preempt the "
-                         "rotation order")
     ap.add_argument("--aging-steps", type=int, default=0,
                     help="anti-starvation bound in decode steps "
                          "(0 = 3x steps-per-turn)")
@@ -130,6 +128,79 @@ def main(argv=None):
     ap.add_argument("--ms-per-step", default="1.0",
                     help="SLO conversion: decode-step time in ms, or "
                          "'auto' to calibrate from a wall-clock EMA")
+
+
+def serve_config_from_args(args):
+    """Build the effective ``ServeConfig`` from parsed flags (or load
+    ``--config``), honoring ``--save-config``."""
+    from repro.runtime.serve_config import (KVConfig, SchedConfig,
+                                            ServeConfig, SpecConfig)
+    if args.config:
+        cfg = ServeConfig.from_json(Path(args.config).read_text())
+    else:
+        cfg = ServeConfig(
+            batch_slots=args.slots,
+            max_seq=args.max_seq,
+            attn_impl=args.attn_impl,
+            prefill_chunk=args.prefill_chunk,
+            sched=SchedConfig(
+                steps_per_turn=args.steps_per_turn,
+                adapter_aware=not args.round_robin,
+                aging_steps=args.aging_steps,
+                ms_per_step=("auto" if args.ms_per_step == "auto"
+                             else float(args.ms_per_step)),
+                cache_bytes=args.cache_bytes),
+            kv=KVConfig(
+                layout="paged" if args.paged else "dense",
+                page_size=args.kv_page_size,
+                pages=args.kv_pages,
+                prefix_share=not args.no_prefix_share),
+            spec=SpecConfig(
+                draft=0 if args.no_speculate else args.speculate))
+    if args.save_config:
+        p = Path(args.save_config)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(cfg.to_json())
+        print(f"serve config -> {p}")
+    return cfg
+
+
+def make_demo_registry(params, n: int):
+    """N synthetic tenants: row-perturbed copies of the base published
+    to an in-memory registry — exercises the full swap/scheduling path
+    without a registry dir (the CI smokes assert swap spans appear)."""
+    from repro.adapters import extract_delta
+    from repro.adapters.registry import InMemoryRegistry
+    from repro.adapters.testing import perturb_rows
+    registry = InMemoryRegistry()
+    ids = []
+    for i in range(n):
+        aid = f"demo{i}"
+        tuned = perturb_rows(params, rows=(1 + i % 2, 3), seed=i)
+        registry.put(aid, extract_delta(params, tuned,
+                                        meta={"adapter_id": aid}))
+        ids.append(aid)
+    return registry, ids
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama-60m")
+    ap.add_argument("--reduce", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--adapters", default=None,
+                    help="BlockDelta registry dir: serve every stored "
+                         "adapter alongside the base model")
+    ap.add_argument("--tenants", default="all",
+                    help="comma-separated adapter ids to serve "
+                         "(default: all in the registry)")
+    ap.add_argument("--slo-ms", type=float, default=0,
+                    help="per-request deadline budget (0 = none); "
+                         "groups whose slack runs low preempt the "
+                         "rotation order")
+    add_serve_config_flags(ap)
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write a TraceKit trace of the run: .jsonl = "
                          "event log, anything else = Chrome/Perfetto "
@@ -176,20 +247,7 @@ def main(argv=None):
         tenants += ids
         print(f"multi-tenant: base + {len(ids)} adapter(s) {ids}")
     elif args.demo_adapters > 0:
-        # synthetic tenants: row-perturbed copies of the base, published
-        # to an in-memory registry — exercises the full swap/scheduling
-        # path (the CI trace-smoke asserts swap spans appear)
-        from repro.adapters import extract_delta
-        from repro.adapters.registry import InMemoryRegistry
-        from repro.adapters.testing import perturb_rows
-        registry = InMemoryRegistry()
-        ids = []
-        for i in range(args.demo_adapters):
-            aid = f"demo{i}"
-            tuned = perturb_rows(params, rows=(1 + i % 2, 3), seed=i)
-            registry.put(aid, extract_delta(params, tuned,
-                                            meta={"adapter_id": aid}))
-            ids.append(aid)
+        registry, ids = make_demo_registry(params, args.demo_adapters)
         tenants += ids
         print(f"multi-tenant: base + {len(ids)} demo adapter(s) {ids}")
 
@@ -198,22 +256,9 @@ def main(argv=None):
         from repro.obs import Tracer
         tracer = Tracer()
 
-    srv = DecodeServer(cfg, params, batch_slots=args.slots,
-                       max_seq=args.max_seq, registry=registry,
-                       steps_per_turn=args.steps_per_turn,
-                       adapter_aware=not args.round_robin,
-                       aging_steps=args.aging_steps or None,
-                       cache_bytes=args.cache_bytes,
-                       attn_impl=args.attn_impl,
-                       prefill_chunk=args.prefill_chunk,
-                       ms_per_step=("auto" if args.ms_per_step == "auto"
-                                    else float(args.ms_per_step)),
-                       tracer=tracer,
-                       kv_layout="paged" if args.paged else "dense",
-                       kv_page_size=args.kv_page_size,
-                       kv_pages=args.kv_pages,
-                       prefix_share=not args.no_prefix_share,
-                       speculate=0 if args.no_speculate else args.speculate)
+    serve_cfg = serve_config_from_args(args)
+    srv = DecodeServer(cfg, params, serve_cfg, registry=registry,
+                       tracer=tracer)
     rng = np.random.default_rng(args.seed)
     # paged demo requests share a system-prompt prefix (sized past one
     # KV page so full prefix pages AND a partial tail register —
@@ -271,11 +316,11 @@ def main(argv=None):
               f"({kvs['prefix_hit_tokens']} tokens), "
               f"{kvs['pages_in_use']} in use at drain")
     if registry is not None:
-        s = srv.stats()
+        sched = srv.stats()["sched"]
         reg_stats = getattr(registry, "stats", dict)()
-        print(f"adapter swaps: {s['swaps']} "
-              f"({s['swap_rate']:.3f}/step), "
-              f"{s['swap_bytes'] / 2 ** 20:.2f} MiB moved; "
+        print(f"adapter swaps: {sched['swaps']} "
+              f"({sched['swap_rate']:.3f}/step), "
+              f"{sched['swap_bytes'] / 2 ** 20:.2f} MiB moved; "
               f"registry: {reg_stats}")
         if srv.cache is not None:
             c = srv.cache.stats()

@@ -34,12 +34,13 @@ from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
 from repro.obs.trace import Tracer
 from repro.obs.emit import StepEmitter
 from repro.obs.export import (chrome_trace_dict, load_trace_file,
+                              merged_chrome_trace_dict,
                               write_chrome_trace, write_jsonl,
                               write_metrics_text, write_trace)
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "Tracer",
     "StepEmitter", "chrome_trace_dict", "load_trace_file",
-    "write_chrome_trace", "write_jsonl", "write_metrics_text",
-    "write_trace",
+    "merged_chrome_trace_dict", "write_chrome_trace", "write_jsonl",
+    "write_metrics_text", "write_trace",
 ]

@@ -40,26 +40,31 @@ def _jsonable_args(args: dict) -> dict:
     return out
 
 
-def _us(tracer: Tracer, t_ns: int) -> float:
-    return (t_ns - tracer.t_origin_ns) / 1e3
+def _us(tracer: Tracer, t_ns: int,
+        t_origin_ns: Optional[int] = None) -> float:
+    origin = tracer.t_origin_ns if t_origin_ns is None else t_origin_ns
+    return (t_ns - origin) / 1e3
 
 
-def chrome_trace_dict(tracer: Tracer,
-                      metrics: Optional[MetricsRegistry] = None) -> dict:
-    """Build the Chrome trace object without writing it (tests)."""
+def _process_records(tracer: Tracer, *, pid: int, process_name: str,
+                     t_origin_ns: Optional[int] = None) -> List[dict]:
+    """One process' worth of Chrome trace records: the process_name
+    metadata, one (thread_name, thread_sort_index) pair per lane, and
+    the lane-sorted events.  ``t_origin_ns`` overrides the tracer's own
+    origin so N tracers can share a common t=0 (fleet merging)."""
     lanes: Dict[str, int] = {}
     for ev in tracer.events():
         lanes.setdefault(ev.lane, len(lanes))
     records: List[dict] = [{
-        "name": "process_name", "ph": "M", "pid": PID, "tid": 0,
-        "args": {"name": PROCESS_NAME},
+        "name": "process_name", "ph": "M", "pid": pid, "tid": 0,
+        "args": {"name": process_name},
     }]
     for lane, tid in lanes.items():
-        records.append({"name": "thread_name", "ph": "M", "pid": PID,
+        records.append({"name": "thread_name", "ph": "M", "pid": pid,
                         "tid": tid, "args": {"name": lane}})
         # sort_index keeps lane order stable in the Perfetto UI
         records.append({"name": "thread_sort_index", "ph": "M",
-                        "pid": PID, "tid": tid,
+                        "pid": pid, "tid": tid,
                         "args": {"sort_index": tid}})
     by_lane: Dict[str, List[TraceEvent]] = {}
     for ev in tracer.events():
@@ -67,8 +72,8 @@ def chrome_trace_dict(tracer: Tracer,
     for lane, evs in by_lane.items():
         tid = lanes[lane]
         for ev in sorted(evs, key=lambda e: (e.t0_ns, e.span_id)):
-            rec = {"name": ev.name, "pid": PID, "tid": tid,
-                   "ts": _us(tracer, ev.t0_ns),
+            rec = {"name": ev.name, "pid": pid, "tid": tid,
+                   "ts": _us(tracer, ev.t0_ns, t_origin_ns),
                    "args": _jsonable_args(ev.args)}
             if ev.kind == "span":
                 rec["ph"] = "X"
@@ -80,6 +85,41 @@ def chrome_trace_dict(tracer: Tracer,
                 rec["ph"] = "i"
                 rec["s"] = "t"
             records.append(rec)
+    return records
+
+
+def chrome_trace_dict(tracer: Tracer,
+                      metrics: Optional[MetricsRegistry] = None, *,
+                      pid: int = PID,
+                      process_name: str = PROCESS_NAME) -> dict:
+    """Build the Chrome trace object without writing it (tests)."""
+    records = _process_records(tracer, pid=pid, process_name=process_name)
+    meta = {"traceEvents": records, "displayTimeUnit": "ms"}
+    if metrics is not None:
+        meta["metrics"] = metrics.snapshot()
+    return meta
+
+
+def merged_chrome_trace_dict(named_tracers,
+                             metrics: Optional[MetricsRegistry] = None
+                             ) -> dict:
+    """Merge N tracers into one Chrome trace — one *process* (pid) with
+    its own lane set per entry, as ``[(process_name, tracer), ...]``.
+
+    All processes share a common time origin (the earliest tracer
+    origin), so fleet traces line replicas up on one timeline in
+    Perfetto.  Per-lane ``ts`` monotonicity is preserved: each (pid,
+    tid) lane is sorted independently, exactly what
+    ``tools/check_trace.py`` validates.
+    """
+    named_tracers = list(named_tracers)
+    if not named_tracers:
+        raise ValueError("merged_chrome_trace_dict needs >= 1 tracer")
+    origin = min(tr.t_origin_ns for _, tr in named_tracers)
+    records: List[dict] = []
+    for pid, (name, tr) in enumerate(named_tracers):
+        records.extend(_process_records(tr, pid=pid, process_name=name,
+                                        t_origin_ns=origin))
     meta = {"traceEvents": records, "displayTimeUnit": "ms"}
     if metrics is not None:
         meta["metrics"] = metrics.snapshot()

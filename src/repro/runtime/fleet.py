@@ -1,0 +1,468 @@
+"""FleetServe: N in-process serving replicas behind one router.
+
+A single ``DecodeServer`` saturates one device; heavy multi-tenant
+traffic needs N replicas — and under BlockDelta (a tenant differs from
+the base by <5% of rows, PAPER.md) the thing worth optimizing is
+*adapter affinity*: a tenant's delta rows should stay HBM-resident on
+~one replica so flips stay device-to-device scatter-swaps.
+
+Pieces:
+
+- ``ConsistentHashRing`` — tenant -> replica affinity by consistent
+  hashing with virtual nodes (``hashlib``-based, deterministic across
+  processes): adding or removing a replica remaps only ~1/N tenants,
+  so HBM-resident adapters mostly stay where they are.
+- ``FleetAdapterDirectory`` — a shared directory of which replica holds
+  which adapter HBM-resident.  When routing *does* move a tenant (a
+  spill, a ring change), the destination's ``AdapterCache`` captures
+  the origin replica's already-dequantized device rows instead of
+  re-reading disk and re-dequantizing (the PR-4 ``put_back``
+  external-eviction path generalized across replicas): zero
+  host->device transfer, counted as ``peer_hits`` / ``xrep_bytes``.
+- ``Replica`` — one ``DecodeServer`` + its own ``Tracer`` and
+  ``MetricsRegistry`` (one Perfetto lane set per replica in the merged
+  trace) + a directory-wired ``AdapterCache``.
+- ``Router`` — shards tenants across replicas by ring affinity,
+  *spills* a hot tenant to its ring successors when the home replica's
+  queue runs deep (and returns it home when load subsides), *steals*
+  queued work onto replicas that drained early (request counts balance
+  at submit time, but step cost varies with tenant diversity — the
+  drain tail would otherwise serialize), and *sheds* requests whose
+  SLO cannot be met anywhere — the estimates are driven by the
+  per-replica TraceKit observables (``sched/queue_depth``,
+  ``sched/request_ms``, ``sched/queue_wait_ms``).
+
+Replication unit: a frozen ``ServeConfig`` (runtime/serve_config.py).
+The router holds ONE config and instantiates every replica from it —
+"the fleet" is fully described by (model config, params, ServeConfig,
+replica count).
+
+Determinism: a request is admitted to exactly one replica and decodes
+under the same slot-batched scheduler as single-replica serving; since
+per-request outputs are independent of co-scheduled requests (the
+masked-blend invariant, serve_loop.py), per-tenant token streams are
+bit-identical to a single ``DecodeServer`` serving the same requests.
+
+Stepping is round-based: ``Router.step()`` advances every replica with
+work by one scheduler step (one fleet *round*).  In-process replicas
+share one host device, so fleet throughput is measured in tokens per
+round — the step-denominated clock the serving benchmarks already use
+(``p50_latency_steps``, ``ttft_p50_steps``); N replicas stepping
+concurrently in a real deployment map one round to one device-step of
+wall-clock.
+"""
+from __future__ import annotations
+
+import bisect
+import hashlib
+import time
+from typing import Dict, List, Optional, Sequence
+
+from repro.obs import MetricsRegistry, Tracer, merged_chrome_trace_dict
+from repro.runtime.serve_config import ServeConfig
+from repro.runtime.serve_loop import STATS_VERSION, DecodeServer, Request
+
+
+def _hash64(s: str) -> int:
+    """Deterministic 64-bit hash (``hash()`` is salted per process —
+    useless for cross-process-stable placement)."""
+    return int.from_bytes(hashlib.md5(s.encode()).digest()[:8], "big")
+
+
+class ConsistentHashRing:
+    """Consistent hashing with virtual nodes.
+
+    Each node owns ``vnodes`` points on a 64-bit ring; a key maps to
+    the first point clockwise from its hash.  Adding/removing a node
+    moves only the keys whose owning arc changed — ~1/N of them.
+    """
+
+    def __init__(self, nodes: Sequence[str] = (), vnodes: int = 64):
+        assert vnodes >= 1
+        self.vnodes = int(vnodes)
+        self._points: List[int] = []       # sorted vnode hashes
+        self._owner: Dict[int, str] = {}   # vnode hash -> node
+        self._nodes: List[str] = []
+        for n in nodes:
+            self.add(n)
+
+    def add(self, node: str) -> None:
+        if node in self._nodes:
+            raise ValueError(f"node {node!r} already on the ring")
+        self._nodes.append(node)
+        for v in range(self.vnodes):
+            h = _hash64(f"{node}#{v}")
+            # md5 collisions across distinct vnode labels are not a
+            # practical concern; first writer keeps the point
+            if h not in self._owner:
+                bisect.insort(self._points, h)
+                self._owner[h] = node
+
+    def remove(self, node: str) -> None:
+        self._nodes.remove(node)
+        self._points = [h for h in self._points
+                        if self._owner[h] != node]
+        self._owner = {h: n for h, n in self._owner.items() if n != node}
+
+    def nodes(self) -> List[str]:
+        return list(self._nodes)
+
+    def owner(self, key: str) -> str:
+        return self.preference(key)[0]
+
+    def preference(self, key: str) -> List[str]:
+        """All nodes in ring order from ``key``'s point: the owner
+        first, then the distinct successors (spill order)."""
+        if not self._points:
+            raise ValueError("empty ring")
+        i = bisect.bisect_right(self._points, _hash64(key))
+        seen, out = set(), []
+        for j in range(len(self._points)):
+            node = self._owner[self._points[(i + j) % len(self._points)]]
+            if node not in seen:
+                seen.add(node)
+                out.append(node)
+        return out
+
+
+class FleetAdapterDirectory:
+    """Shared registry of HBM-resident adapter copies across replicas.
+
+    ``AdapterCache`` publishes on admit (promotion, ``put_back``
+    capture, peer capture) and unpublishes on evict/drop — so a lookup
+    only ever returns rows that are actually resident *right now*.
+    Entries are version-stamped; a lookup for a newer registry version
+    skips stale holders (they will be invalidated on their own next
+    ``get``).
+    """
+
+    def __init__(self):
+        # adapter_id -> {owner -> SparseDelta (device-resident)}
+        self._resident: Dict[str, Dict[str, object]] = {}
+
+    def publish(self, owner: str, adapter_id: str, delta) -> None:
+        self._resident.setdefault(adapter_id, {})[owner] = delta
+
+    def unpublish(self, owner: str, adapter_id: str) -> None:
+        holders = self._resident.get(adapter_id)
+        if holders is not None:
+            holders.pop(owner, None)
+            if not holders:
+                del self._resident[adapter_id]
+
+    def holders(self, adapter_id: str) -> List[str]:
+        return list(self._resident.get(adapter_id, ()))
+
+    def lookup(self, adapter_id: str, version: int,
+               exclude: Optional[str] = None):
+        """A peer's device-resident delta at ``version``, or None."""
+        for owner, delta in self._resident.get(adapter_id, {}).items():
+            if owner == exclude:
+                continue
+            if delta.meta.get("registry_version", 0) == version:
+                return delta
+        return None
+
+
+class Replica:
+    """One serving replica: a ``DecodeServer`` built from the shared
+    ``ServeConfig``, with its own tracer/metrics (one Perfetto lane set
+    per replica) and a directory-wired ``AdapterCache``."""
+
+    def __init__(self, name: str, cfg, params, config: ServeConfig, *,
+                 registry=None, directory=None, trace: bool = False):
+        self.name = name
+        self.metrics = MetricsRegistry()
+        self.tracer = Tracer() if trace else None
+        cache = None
+        if config.sched.cache_bytes > 0 and registry is not None:
+            from repro.adapters.device_cache import AdapterCache
+            cache = AdapterCache(registry,
+                                 cache_bytes=config.sched.cache_bytes,
+                                 tracer=self.tracer,
+                                 directory=directory, owner=name)
+        self.server = DecodeServer(cfg, params, config,
+                                   registry=registry, cache=cache,
+                                   tracer=self.tracer,
+                                   metrics=self.metrics)
+
+    # -- load observables (the router's routing/shedding inputs) ------- #
+
+    def depth(self) -> int:
+        """Queued + active requests (the ``sched/queue_depth`` gauge
+        covers only the queue; routing counts in-flight work too)."""
+        srv = self.server
+        return len(srv.queue) + sum(r is not None for r in srv.active)
+
+    def est_wait_ms(self) -> float:
+        """SLO pressure estimate: depth scaled by observed per-request
+        service time (``sched/request_ms`` mean once samples exist,
+        else the ``ms_per_step`` x ``steps_per_turn`` prior), divided
+        by slot parallelism.  Zero when idle — an idle replica can
+        always admit."""
+        srv = self.server
+        d = self.depth()
+        if d == 0:
+            return 0.0
+        h = self.metrics.histogram("sched/request_ms")
+        service = (h.mean if h.count else
+                   srv.ms_per_step * srv.steps_per_turn)
+        return d / max(1, srv.slots) * service
+
+    def has_work(self) -> bool:
+        srv = self.server
+        return bool(srv.queue) or any(r is not None for r in srv.active)
+
+
+class Router:
+    """Shard tenants across N replicas by adapter-affinity consistent
+    hashing; spill hot tenants under load; shed on SLO pressure."""
+
+    def __init__(self, cfg, params, config: Optional[ServeConfig] = None,
+                 *, replicas: int = 2, registry=None, trace: bool = False,
+                 vnodes: int = 64, spill_depth: Optional[int] = None,
+                 names: Optional[Sequence[str]] = None):
+        if config is None:
+            config = ServeConfig()
+        self.config = config
+        self.registry = registry
+        names = (list(names) if names is not None
+                 else [f"replica{i}" for i in range(replicas)])
+        if not names:
+            raise ValueError("a fleet needs >= 1 replica")
+        self.ring = ConsistentHashRing(names, vnodes=vnodes)
+        self.directory = FleetAdapterDirectory()
+        self.tracer = Tracer() if trace else None
+        self.metrics = MetricsRegistry()
+        for c in ("fleet/submitted", "fleet/routed_home", "fleet/spills",
+                  "fleet/sheds", "fleet/steals", "fleet/rounds",
+                  "fleet/tokens"):
+            self.metrics.counter(c)
+        self.replicas: Dict[str, Replica] = {
+            n: Replica(n, cfg, params, config, registry=registry,
+                       directory=self.directory, trace=trace)
+            for n in names}
+        # spill when the home replica's backlog exceeds this many
+        # requests (default: two full slot generations)
+        self.spill_depth = (2 * config.batch_slots if spill_depth is None
+                            else int(spill_depth))
+        self.rounds = 0
+        self._routed: Dict[int, str] = {}     # rid -> replica name
+
+    # ------------------------------------------------------------------ #
+    # routing
+    # ------------------------------------------------------------------ #
+
+    @staticmethod
+    def _tenant_key(adapter_id: Optional[str]) -> str:
+        return "tenant:base" if adapter_id is None \
+            else f"tenant:{adapter_id}"
+
+    def home(self, adapter_id: Optional[str]) -> str:
+        """The tenant's affinity replica (ignoring load)."""
+        return self.ring.owner(self._tenant_key(adapter_id))
+
+    def submit(self, req: Request) -> Optional[str]:
+        """Route one request: home replica by ring affinity, spilled to
+        a ring successor when home is backlogged, shed (returns None)
+        when the request carries an SLO no replica can plausibly meet.
+        Returns the chosen replica name."""
+        pref = self.ring.preference(self._tenant_key(req.adapter_id))
+        self.metrics.counter("fleet/submitted").inc()
+        if req.slo_ms is not None:
+            waits = {n: self.replicas[n].est_wait_ms() for n in pref}
+            if min(waits.values()) > req.slo_ms:
+                self.metrics.counter("fleet/sheds").inc()
+                if self.tracer is not None:
+                    self.tracer.instant(
+                        "shed", lane="router", rid=req.rid,
+                        adapter=str(req.adapter_id),
+                        best_wait_ms=round(min(waits.values()), 3),
+                        slo_ms=req.slo_ms)
+                return None
+        home = pref[0]
+        target = home
+        if self.replicas[home].depth() >= self.spill_depth:
+            best = min(pref, key=lambda n: (self.replicas[n].depth(),
+                                            pref.index(n)))
+            target = best
+        spilled = target != home
+        self.replicas[target].server.submit(req)
+        self._routed[req.rid] = target
+        self.metrics.counter("fleet/spills" if spilled
+                             else "fleet/routed_home").inc()
+        if self.tracer is not None:
+            self.tracer.instant("route", lane="router", rid=req.rid,
+                                adapter=str(req.adapter_id),
+                                replica=target, home=home,
+                                spill=spilled)
+        return target
+
+    def routed_to(self, rid: int) -> Optional[str]:
+        return self._routed.get(rid)
+
+    # ------------------------------------------------------------------ #
+    # stepping
+    # ------------------------------------------------------------------ #
+
+    def _steal(self) -> int:
+        """Drain-tail work stealing: a replica whose queue ran dry pulls
+        the tail half of the deepest peer queue.
+
+        Submit-time routing balances *request counts*, but replicas do
+        not finish together: per-step cost varies with tenant diversity
+        (a replica homing many small tenants pays far more adapter
+        rotation than one riding a hot tenant).  Stealing converts that
+        drain tail into parallel work — the thief was about to idle, so
+        moved requests only shorten the critical path.  Moving a tenant
+        mid-stream is safe (token streams are schedule-invariant) and
+        cheap (the thief's cache captures the donor's HBM rows through
+        the directory instead of re-promoting from disk)."""
+        moved = 0
+        for rep in self.replicas.values():
+            if rep.server.queue:
+                continue
+            donor = max(self.replicas.values(),
+                        key=lambda r: len(r.server.queue))
+            dq = donor.server.queue
+            if donor is rep or len(dq) < 2:
+                continue
+            take = len(dq) // 2
+            stolen = dq[-take:]
+            del dq[-take:]
+            rep.server.queue.extend(stolen)       # FIFO order preserved
+            for r in stolen:
+                self._routed[r.rid] = rep.name
+            moved += take
+            self.metrics.counter("fleet/steals").inc(take)
+            if self.tracer is not None:
+                self.tracer.instant("steal", lane="router",
+                                    src=donor.name, dst=rep.name,
+                                    n=take)
+        return moved
+
+    def step(self) -> int:
+        """One fleet round: every replica with work advances one
+        scheduler step.  Returns #requests finished this round."""
+        self._steal()
+        t0 = time.monotonic_ns() if self.tracer is not None else 0
+        finished = 0
+        stepped = 0
+        for rep in self.replicas.values():
+            if rep.has_work():
+                finished += rep.server.step()
+                stepped += 1
+        if stepped:
+            self.rounds += 1
+            self.metrics.counter("fleet/rounds").inc()
+        if self.tracer is not None and stepped:
+            self.tracer.add_span("fleet_round", t0, time.monotonic_ns(),
+                                 lane="router", round=self.rounds,
+                                 replicas=stepped, finished=finished)
+        return finished
+
+    def has_work(self) -> bool:
+        return any(r.has_work() for r in self.replicas.values())
+
+    def run_until_drained(self, max_rounds: int = 10_000,
+                          on_round=None) -> int:
+        """Round-step until every replica is idle; returns the number
+        of rounds taken.  Mirrors ``DecodeServer.run_until_drained``'s
+        wedge guard: a round that changes nothing raises."""
+        for _ in range(max_rounds):
+            if not self.has_work():
+                return self.rounds
+            before = tuple(r.server._progress_key()
+                           for r in self.replicas.values())
+            self.step()
+            if on_round is not None:
+                on_round(self)
+            after = tuple(r.server._progress_key()
+                          for r in self.replicas.values())
+            if before == after:
+                raise RuntimeError(
+                    f"fleet wedged at round {self.rounds}: "
+                    f"{sum(r.depth() for r in self.replicas.values())} "
+                    f"request(s) pending but no replica made progress")
+        if not self.has_work():
+            return self.rounds
+        raise RuntimeError(
+            f"fleet not drained after max_rounds={max_rounds}")
+
+    # ------------------------------------------------------------------ #
+    # fleet-level stats / trace merging
+    # ------------------------------------------------------------------ #
+
+    def stats(self) -> Dict[str, object]:
+        """``fleet`` roll-up + per-replica ``DecodeServer.stats()``.
+
+        ``aggregate`` sums every counter/gauge across the N replica
+        registries and merges histograms (count/sum exactly; min/max
+        exactly; p50/p99 as the worst replica's value — conservative
+        for SLO gating).
+        """
+        per = {n: r.server.stats() for n, r in self.replicas.items()}
+        tokens = sum(p["decode"].get("tokens", 0) for p in per.values())
+        self.metrics.counter("fleet/tokens").inc(
+            tokens - self.metrics.counter("fleet/tokens").value)
+        fleet = {k.split("/", 1)[1]: v for k, v in
+                 self.metrics.snapshot().items()}
+        fleet.update({
+            "replicas": len(self.replicas),
+            "spill_depth": self.spill_depth,
+            "tps_per_round": tokens / self.rounds if self.rounds else 0.0,
+            "swaps": sum(p["sched"].get("swaps", 0)
+                         for p in per.values()),
+            "swap_bytes": sum(p["sched"].get("swap_bytes", 0)
+                              for p in per.values()),
+            "peer_hits": sum(p.get("cache", {}).get("peer_hits", 0)
+                             for p in per.values()),
+            "xrep_bytes": sum(p.get("cache", {}).get("xrep_bytes", 0)
+                              for p in per.values()),
+            "h2d_bytes": sum(p.get("cache", {}).get("h2d_bytes", 0)
+                             for p in per.values()),
+        })
+        return {"stats_version": STATS_VERSION, "fleet": fleet,
+                "aggregate": self.aggregate_metrics(),
+                "replicas": per}
+
+    def aggregate_metrics(self) -> Dict[str, object]:
+        """Merge the N replica registries into one flat snapshot."""
+        agg: Dict[str, object] = {}
+        for rep in self.replicas.values():
+            for name, val in rep.metrics.snapshot().items():
+                if isinstance(val, dict):           # histogram summary
+                    cur = agg.get(name)
+                    if cur is None:
+                        agg[name] = dict(val)
+                    else:
+                        cur["count"] += val["count"]
+                        cur["sum"] += val["sum"]
+                        cur["min"] = min(cur["min"], val["min"]) \
+                            if val["count"] else cur["min"]
+                        cur["max"] = max(cur["max"], val["max"])
+                        cur["mean"] = (cur["sum"] / cur["count"]
+                                       if cur["count"] else 0.0)
+                        cur["p50"] = max(cur["p50"], val["p50"])
+                        cur["p99"] = max(cur["p99"], val["p99"])
+                else:
+                    agg[name] = agg.get(name, 0) + val
+        return agg
+
+    def trace_dict(self) -> dict:
+        """Merged Chrome/Perfetto trace: one process (pid) per replica
+        — each with its own tenant/sched/cache lane set — plus the
+        router's lane, all on a shared time origin."""
+        if self.tracer is None:
+            raise ValueError("Router(trace=True) to collect a trace")
+        named = [("router", self.tracer)]
+        named += [(n, r.tracer) for n, r in self.replicas.items()]
+        return merged_chrome_trace_dict(named)
+
+    def write_trace(self, path):
+        import json
+        from pathlib import Path
+        p = Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(self.trace_dict()))
+        return p

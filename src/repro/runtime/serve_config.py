@@ -1,0 +1,218 @@
+"""ServeConfig: the consolidated, serializable serving configuration.
+
+``DecodeServer`` accreted ~15 constructor kwargs across PRs 3-7 (slot
+batching, adapter-aware scheduling, AdapterCache, chunked prefill,
+PagedKV, SpecServe).  This module folds them into one frozen, typed,
+JSON-round-trippable dataclass tree:
+
+- ``ServeConfig``  — core knobs (slots, max_seq, attn_impl,
+  prefill_chunk) plus three sub-configs:
+- ``SchedConfig``  — scheduler policy (turn budgets, aging, SLO clock,
+  swap mode, AdapterCache byte budget),
+- ``KVConfig``     — KV-cache layout (dense vs paged, page geometry,
+  prefix sharing),
+- ``SpecConfig``   — self-speculative decoding (draft length,
+  adaptive backoff).
+
+Why a config object and not kwargs: the FleetServe router replicates a
+server N times and must *describe* what it is replicating — a frozen
+value it can hash, serialize into launch manifests, and hand to every
+``Replica`` verbatim.  ``to_json``/``from_json`` round-trip bit-exactly
+(``ServeConfig.from_json(cfg.to_json()) == cfg``), so a config written
+by ``launch/serve.py --save-config`` reproduces the same server when
+read back with ``--config``.
+
+Runtime *objects* (params, adapter registry, a shared AdapterCache,
+tracer, metrics registry) are deliberately NOT part of the config —
+they are not serializable and not part of what "the same server"
+means; they stay explicit ``DecodeServer`` keyword arguments.
+
+Legacy flat kwargs (``DecodeServer(cfg, params, batch_slots=8, ...)``)
+still construct — ``from_legacy_kwargs`` maps them onto this tree and
+the server emits a ``DeprecationWarning`` — for one release.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Union
+
+SERVE_CONFIG_VERSION = 1
+
+
+def _check(cond: bool, msg: str) -> None:
+    if not cond:
+        raise ValueError(msg)
+
+
+@dataclass(frozen=True)
+class SchedConfig:
+    """Scheduler policy knobs (see serve_loop.py for semantics).
+
+    ``aging_steps=0`` means auto (``3 * steps_per_turn``), matching the
+    legacy ``aging_steps=None`` default.  ``ms_per_step`` is the SLO
+    clock: a float pins the decode-step cost in milliseconds
+    (deterministic tests/benches), the string ``"auto"`` calibrates it
+    from a wall-clock EMA.  ``cache_bytes > 0`` turns on the HBM
+    AdapterCache tier.
+    """
+    steps_per_turn: int = 8
+    adapter_aware: bool = True
+    aging_steps: int = 0                     # 0 = auto
+    ms_per_step: Union[float, str] = 1.0     # float | "auto"
+    swap_mode: str = "auto"
+    cache_bytes: int = 0
+
+    def __post_init__(self):
+        _check(self.steps_per_turn >= 1, "steps_per_turn must be >= 1")
+        _check(self.aging_steps >= 0, "aging_steps must be >= 0 (0=auto)")
+        _check(self.cache_bytes >= 0, "cache_bytes must be >= 0")
+        if isinstance(self.ms_per_step, str):
+            _check(self.ms_per_step == "auto",
+                   f"ms_per_step must be a float or 'auto', "
+                   f"got {self.ms_per_step!r}")
+        else:
+            _check(self.ms_per_step > 0, "ms_per_step must be > 0")
+
+
+@dataclass(frozen=True)
+class KVConfig:
+    """KV-cache layout: dense ``[slots, max_seq]`` rows or PagedKV.
+
+    ``pages=0`` means auto (dense-equivalent page count); a smaller
+    value oversubscribes slots against aggregate tokens.
+    """
+    layout: str = "dense"                    # "dense" | "paged"
+    page_size: int = 16
+    pages: int = 0                           # 0 = auto
+    prefix_share: bool = True
+
+    def __post_init__(self):
+        _check(self.layout in ("dense", "paged"),
+               f"kv layout must be 'dense' or 'paged', got {self.layout!r}")
+        _check(self.page_size >= 1, "page_size must be >= 1")
+        _check(self.pages >= 0, "pages must be >= 0 (0=auto)")
+
+
+@dataclass(frozen=True)
+class SpecConfig:
+    """Self-speculative decoding: ``draft=0`` disables it; ``adaptive``
+    backs the per-tenant draft length off when acceptance drops."""
+    draft: int = 0
+    adaptive: bool = True
+
+    def __post_init__(self):
+        _check(self.draft >= 0, "spec draft length must be >= 0")
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """The full serving configuration — the unit a fleet replicates."""
+    batch_slots: int = 4
+    max_seq: int = 256
+    attn_impl: str = "full"
+    prefill_chunk: int = 64
+    sched: SchedConfig = field(default_factory=SchedConfig)
+    kv: KVConfig = field(default_factory=KVConfig)
+    spec: SpecConfig = field(default_factory=SpecConfig)
+
+    def __post_init__(self):
+        _check(self.batch_slots >= 1, "batch_slots must be >= 1")
+        _check(self.max_seq >= 2, "max_seq must be >= 2")
+        _check(self.prefill_chunk >= 0, "prefill_chunk must be >= 0")
+        # coerce plain dicts (the from_json path and lazy callers)
+        if isinstance(self.sched, dict):
+            object.__setattr__(self, "sched", SchedConfig(**self.sched))
+        if isinstance(self.kv, dict):
+            object.__setattr__(self, "kv", KVConfig(**self.kv))
+        if isinstance(self.spec, dict):
+            object.__setattr__(self, "spec", SpecConfig(**self.spec))
+
+    # ------------------------------------------------------------------ #
+    # serialization
+    # ------------------------------------------------------------------ #
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["version"] = SERVE_CONFIG_VERSION
+        return d
+
+    def to_json(self) -> str:
+        """Canonical JSON (sorted keys, 1-space indent) — stable under
+        round-trip: ``ServeConfig.from_json(cfg.to_json()) == cfg``."""
+        return json.dumps(self.to_dict(), indent=1, sort_keys=True) + "\n"
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServeConfig":
+        d = dict(d)
+        version = d.pop("version", SERVE_CONFIG_VERSION)
+        _check(version == SERVE_CONFIG_VERSION,
+               f"unsupported ServeConfig version {version} "
+               f"(this build reads v{SERVE_CONFIG_VERSION})")
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        _check(not unknown, f"unknown ServeConfig keys: {sorted(unknown)}")
+        sub = {"sched": SchedConfig, "kv": KVConfig, "spec": SpecConfig}
+        kw = {}
+        for k, v in d.items():
+            if k in sub and isinstance(v, dict):
+                sub_known = {f.name for f in dataclasses.fields(sub[k])}
+                sub_unknown = set(v) - sub_known
+                _check(not sub_unknown,
+                       f"unknown {k} keys: {sorted(sub_unknown)}")
+                kw[k] = sub[k](**v)
+            else:
+                kw[k] = v
+        return cls(**kw)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ServeConfig":
+        return cls.from_dict(json.loads(text))
+
+    def replace(self, **kw) -> "ServeConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------------ #
+    # legacy-kwarg bridge (one-release deprecation shim)
+    # ------------------------------------------------------------------ #
+
+    @classmethod
+    def from_legacy_kwargs(cls, **kw) -> "ServeConfig":
+        """Map the pre-PR-9 flat ``DecodeServer(**kwargs)`` surface onto
+        the config tree.  Unknown names raise TypeError (same contract
+        as the old constructor)."""
+        unknown = set(kw) - set(LEGACY_KWARG_MAP)
+        if unknown:
+            raise TypeError(
+                f"unknown DecodeServer kwargs: {sorted(unknown)}")
+        core, sched, kvc, spec = {}, {}, {}, {}
+        for name, val in kw.items():
+            section, new_name = LEGACY_KWARG_MAP[name]
+            if name == "aging_steps" and val is None:
+                val = 0                      # legacy None = auto
+            {"core": core, "sched": sched,
+             "kv": kvc, "spec": spec}[section][new_name] = val
+        return cls(sched=SchedConfig(**sched), kv=KVConfig(**kvc),
+                   spec=SpecConfig(**spec), **core)
+
+
+# legacy DecodeServer kwarg -> (section, field) in the config tree
+LEGACY_KWARG_MAP = {
+    "batch_slots": ("core", "batch_slots"),
+    "max_seq": ("core", "max_seq"),
+    "attn_impl": ("core", "attn_impl"),
+    "prefill_chunk": ("core", "prefill_chunk"),
+    "steps_per_turn": ("sched", "steps_per_turn"),
+    "adapter_aware": ("sched", "adapter_aware"),
+    "aging_steps": ("sched", "aging_steps"),
+    "ms_per_step": ("sched", "ms_per_step"),
+    "swap_mode": ("sched", "swap_mode"),
+    "cache_bytes": ("sched", "cache_bytes"),
+    "kv_layout": ("kv", "layout"),
+    "kv_page_size": ("kv", "page_size"),
+    "kv_pages": ("kv", "pages"),
+    "prefix_share": ("kv", "prefix_share"),
+    "speculate": ("spec", "draft"),
+    "spec_adaptive": ("spec", "adaptive"),
+}

@@ -80,8 +80,9 @@ from __future__ import annotations
 import functools
 import math
 import time
+import warnings
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -90,6 +91,9 @@ import numpy as np
 from repro.models import model as model_lib
 from repro.obs import MetricsRegistry
 from repro.runtime import paged_kv
+from repro.runtime.serve_config import ServeConfig
+
+STATS_VERSION = 2  # nested sections only; flat aliases removed in PR 9
 
 BASE = None  # adapter id of the un-adapted base model
 
@@ -260,17 +264,46 @@ def _chunk_bucket(k: int, cap: int) -> int:
 
 
 class DecodeServer:
-    def __init__(self, cfg, params, *, batch_slots: int = 4,
-                 max_seq: int = 256, attn_impl: str = "full",
-                 registry=None, steps_per_turn: int = 8,
-                 swap_mode: str = "auto", adapter_aware: bool = True,
-                 aging_steps: Optional[int] = None,
-                 ms_per_step: Union[float, str] = 1.0,
-                 cache_bytes: int = 0, cache=None,
-                 prefill_chunk: int = 64, tracer=None, metrics=None,
-                 kv_layout: str = "dense", kv_page_size: int = 16,
-                 kv_pages: int = 0, prefix_share: bool = True,
-                 speculate: int = 0, spec_adaptive: bool = True):
+    def __init__(self, cfg, params, config: Optional[ServeConfig] = None,
+                 *, registry=None, cache=None, tracer=None, metrics=None,
+                 **legacy):
+        # one-release deprecation shim: the pre-PR-9 flat kwargs
+        # (batch_slots=..., kv_layout=..., speculate=..., ...) still
+        # construct, mapped onto a ServeConfig, but warn.  New code
+        # passes `config=ServeConfig(...)`; runtime objects (registry,
+        # cache, tracer, metrics) stay explicit kwargs — they are not
+        # part of what the config describes.
+        if legacy:
+            if config is not None:
+                raise TypeError(
+                    "pass either config=ServeConfig(...) or legacy flat "
+                    f"kwargs, not both (got {sorted(legacy)})")
+            config = ServeConfig.from_legacy_kwargs(**legacy)
+            warnings.warn(
+                "DecodeServer(**flat_kwargs) is deprecated; pass "
+                "config=ServeConfig(...) — e.g. "
+                f"ServeConfig.from_legacy_kwargs({', '.join(sorted(legacy))}"
+                ") builds the equivalent config",
+                DeprecationWarning, stacklevel=2)
+        if config is None:
+            config = ServeConfig()
+        self.config = config
+        batch_slots = config.batch_slots
+        max_seq = config.max_seq
+        attn_impl = config.attn_impl
+        prefill_chunk = config.prefill_chunk
+        steps_per_turn = config.sched.steps_per_turn
+        adapter_aware = config.sched.adapter_aware
+        aging_steps = config.sched.aging_steps or None   # 0 = auto
+        ms_per_step = config.sched.ms_per_step
+        swap_mode = config.sched.swap_mode
+        cache_bytes = config.sched.cache_bytes
+        kv_layout = config.kv.layout
+        kv_page_size = config.kv.page_size
+        kv_pages = config.kv.pages
+        prefix_share = config.kv.prefix_share
+        speculate = config.spec.draft
+        spec_adaptive = config.spec.adaptive
         self.cfg = cfg
         # TraceKit: tracer=None disables tracing (hot paths guard with a
         # single `is None` check — no NullTracer dispatch).  The metrics
@@ -1194,11 +1227,11 @@ class DecodeServer:
             f"max_steps={max_steps} (rids {undone[:8]}...)")
 
     def stats(self) -> Dict[str, object]:
-        """Nested ``prefill`` / ``decode`` / ``cache`` / ``sched``
-        sections sourced from the metrics registry, plus the pre-TraceKit
-        flat keys as deprecated aliases (``tools/check_serving.py``
-        baselines and older callers read those; new consumers should use
-        the sections)."""
+        """Nested ``prefill`` / ``decode`` / ``cache`` / ``sched`` (and
+        ``kv`` / ``spec`` when enabled) sections sourced from the
+        metrics registry.  The schema is stamped with ``stats_version``
+        (v2: the pre-TraceKit flat key aliases from PR 6 are gone —
+        read ``s["sched"]["swaps"]``, not ``s["swaps"]``)."""
         swap_rate = self.swaps / self.steps if self.steps else 0.0
         self.metrics.gauge("decode/ms_per_step").set(self.ms_per_step)
         self.metrics.gauge("sched/swap_rate").set(swap_rate)
@@ -1210,6 +1243,7 @@ class DecodeServer:
         sched = dict(nested.get("sched", {}))
         sched["applied"] = self._applied
         out: Dict[str, object] = {
+            "stats_version": STATS_VERSION,
             "decode": dict(nested.get("decode", {})),
             "prefill": dict(nested.get("prefill", {})),
             "sched": sched,
@@ -1227,13 +1261,4 @@ class DecodeServer:
             kv["page_size"] = self.alloc.page_size
             kv["num_pages"] = self.alloc.num_pages
             out["kv"] = kv
-        # deprecated flat aliases (pre-TraceKit layout)
-        out.update({
-            "steps": self.steps, "swaps": self.swaps,
-            "swap_bytes": self.swap_bytes, "swap_rate": swap_rate,
-            "applied": self._applied,
-            "prefill_dispatches": self.prefill_dispatches,
-            "prefill_prompt_tokens": self.prefill_prompt_tokens,
-            "ms_per_step": self.ms_per_step,
-        })
         return out

@@ -1,10 +1,10 @@
 """Fault-tolerant training driver, generic over the TrainerCore protocol.
 
 Wires together: data pipeline (step-indexed, restart-safe), any trainer
-speaking the ``repro.trainers`` protocol (a ``TrainerHandle`` or one of
-the legacy shim classes — anything carrying a ``(core, state)`` pair),
-atomic checkpointing with auto-resume, straggler monitoring, and crash
-recovery (a simulated-failure test rides on this loop).
+speaking the ``repro.trainers`` protocol (a ``TrainerHandle``, or
+anything else carrying a ``(core, state)`` pair), atomic checkpointing
+with auto-resume, straggler monitoring, and crash recovery (a
+simulated-failure test rides on this loop).
 
 There is exactly ONE checkpoint/restore path for every trainer: the
 state's **array pytree** (``TrainState.arrays`` — params, moments, active
@@ -15,9 +15,10 @@ checkpoint manifest.  No trainer-specific serializers, no isinstance
 branches: what a trainer needs to resume is whatever its core declared
 in its ``state_spec``.
 
-Migration note (the pre-protocol API): ``run(BlockLLMTrainer(...), …)``
-still works — the legacy classes are shims holding ``core``/``state`` —
-but new code should pass ``TrainerHandle(trainers.make(name, cfg), state)``.
+Construct trainers with ``trainers.handle(name, cfg, params, …)`` —
+the PR-2 legacy classes (``BlockLLMTrainer`` & friends) were removed in
+the registry redesign and now raise ImportError naming their registry
+replacement.
 """
 from __future__ import annotations
 

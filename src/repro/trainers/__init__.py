@@ -10,14 +10,31 @@ train loop, launcher and distributed step builder are generic over it.
     state = core.init(jax.random.PRNGKey(0), params)
     state, metrics = core.step(state, batch)
 
+or, for imperative drivers (examples, benchmarks, tests):
+
+    tr = trainers.handle("blockllm", cfg, params, sparsity=0.95)
+    tr.train_step(batch); tr.memory_report(); tr.params
+
 Registered names: ``blockllm``, ``adam``, ``galore``, ``lora``,
-``badam``.  The legacy classes (``core.blockllm.BlockLLMTrainer``,
-``baselines.*``) remain as deprecation shims over these cores.
+``badam`` (each also as ``+q8``).  The PR-2 legacy classes
+(``BlockLLMTrainer`` & friends) are gone — importing them raises with
+a pointer to the registry name.
 """
 from repro.trainers.api import (Lowerable, StateSpec, TrainerCore,
                                 TrainerHandle, TrainState, check_state,
                                 jsonable, nbytes)
 from repro.trainers.registry import get, make, names, register
+
+
+def handle(name: str, cfg, params=None, *, seed: int = 0,
+           **hyperparams) -> TrainerHandle:
+    """Build the named core, init one state, and wrap both in a
+    ``TrainerHandle`` — the one-call construction imperative drivers
+    use (the replacement for the deleted legacy trainer classes)."""
+    import jax
+    core = make(name, cfg, **hyperparams)
+    return TrainerHandle(core, core.init(jax.random.PRNGKey(seed),
+                                         params))
 
 # importing the implementation modules populates the registry
 from repro.trainers import badam as _badam            # noqa: F401,E402
@@ -28,6 +45,6 @@ from repro.trainers import lora as _lora              # noqa: F401,E402
 
 __all__ = [
     "Lowerable", "StateSpec", "TrainerCore", "TrainerHandle", "TrainState",
-    "check_state", "get", "jsonable", "make", "names", "nbytes",
-    "register",
+    "check_state", "get", "handle", "jsonable", "make", "names",
+    "nbytes", "register",
 ]

@@ -234,9 +234,15 @@ def check_state(core: TrainerCore, state: TrainState):
 
 class TrainerHandle:
     """Pairs a core with one state — the object imperative drivers
-    (the train loop, examples, benchmarks) hold.  The legacy trainer
-    classes (``BlockLLMTrainer`` & friends) are deprecation shims built
-    on this."""
+    (the train loop, examples, benchmarks) hold.  Build one with
+    ``trainers.handle(name, cfg, params, **hyperparams)``.
+
+    Beyond the protocol methods it exposes read-only *views* over the
+    functional state (``params``/``opt_state``/``masks``/``plan``/…) so
+    imperative callers never reach into ``state.arrays`` by key.  Views
+    over groups a core does not declare (e.g. ``masks`` on full Adam)
+    raise ``KeyError``; unknown attributes fall through to the core
+    (``adam``, ``bcfg``, ``galore``, ``rank``, ``recompiles``, …)."""
 
     def __init__(self, core: TrainerCore, state: TrainState):
         self.core = core
@@ -255,6 +261,10 @@ class TrainerHandle:
     def eval_loss(self, batch) -> float:
         return self.core.eval_loss(self.state, batch)
 
+    def reselect(self) -> None:
+        """Force a coordinate-block re-selection (BlockLLM-family cores)."""
+        self.state = self.core.reselect(self.state)
+
     # convenience views used widely by tests/benchmarks
     @property
     def cfg(self):
@@ -267,3 +277,58 @@ class TrainerHandle:
     @property
     def loss_history(self):
         return self.state.meta.get("loss_history", [])
+
+    # -- views over the functional state ------------------------------- #
+
+    @property
+    def params(self) -> Pytree:
+        return self.state.arrays["params"]
+
+    @property
+    def opt_state(self):
+        return self.state.arrays["opt"]
+
+    @property
+    def masks(self) -> Pytree:
+        return self.state.arrays["masks"]
+
+    @property
+    def factors(self) -> Pytree:
+        return self.state.arrays["factors"]
+
+    @property
+    def active(self) -> Dict[str, Pytree]:
+        return {"sel": self.state.arrays["sel"],
+                "probe": self.state.arrays["probe"]}
+
+    @property
+    def plan(self):
+        return self.core.plan_of(self.state)
+
+    @property
+    def q(self) -> float:
+        return float(self.state.meta["q"])
+
+    @property
+    def norms(self):
+        # live view: norm-dict seeding through it reaches the state
+        return self.core._trackers(self.state.meta, copy=False)[0]
+
+    @property
+    def visits(self):
+        return self.core._trackers(self.state.meta, copy=False)[1]
+
+    @property
+    def index(self):
+        return self.core.index_for(self.state.arrays["params"])
+
+    @property
+    def reselections(self) -> int:
+        return int(self.state.meta["reselections"])
+
+    def __getattr__(self, name: str):
+        # config-ish reads (adam, bcfg, galore, rank, recompiles, ...)
+        # delegate to the core; only reached when normal lookup fails
+        if name.startswith("_"):
+            raise AttributeError(name)
+        return getattr(self.core, name)

@@ -203,15 +203,16 @@ def test_registry_put_is_atomic_and_replaces(tmp_path):
 
 
 def test_train_loop_exports_adapter(tmp_path, tiny_cfg):
-    from repro.core.blockllm import BlockLLMConfig, BlockLLMTrainer
+    from repro import trainers
+    from repro.core.blockllm import BlockLLMConfig
     from repro.core.selection import SelectorConfig
     from repro.optim.adam import Adam
     from repro.runtime.train_loop import TrainLoopConfig, run
 
     params = model.init_params(K(0), tiny_cfg)
     base = jax.tree.map(lambda a: a.copy(), params)
-    tr = BlockLLMTrainer(
-        tiny_cfg, params, adam=Adam(lr=3e-3),
+    tr = trainers.handle(
+        "blockllm", tiny_cfg, params, adam=Adam(lr=3e-3),
         bcfg=BlockLLMConfig(selector=SelectorConfig(
             sparsity=0.9, policy="static", static_k_frac=0.5,
             patience=1000)))
@@ -235,7 +236,8 @@ def test_train_loop_exports_adapter(tmp_path, tiny_cfg):
 def test_train_loop_exports_adapter_across_resume(tmp_path, tiny_cfg):
     """Resumed runs keep exporting deltas: the pre-finetune base snapshot
     is persisted under adapter_dir at step 0 and reloaded on restart."""
-    from repro.core.blockllm import BlockLLMConfig, BlockLLMTrainer
+    from repro import trainers
+    from repro.core.blockllm import BlockLLMConfig
     from repro.core.selection import SelectorConfig
     from repro.optim.adam import Adam
     from repro.runtime.train_loop import TrainLoopConfig, run
@@ -245,8 +247,9 @@ def test_train_loop_exports_adapter_across_resume(tmp_path, tiny_cfg):
     toks = jnp.arange(32)[None, :].repeat(2, 0) % tiny_cfg.vocab_size
 
     def mk():
-        return BlockLLMTrainer(
-            tiny_cfg, jax.tree.map(lambda a: a.copy(), params),
+        return trainers.handle(
+            "blockllm", tiny_cfg,
+            jax.tree.map(lambda a: a.copy(), params),
             adam=Adam(lr=3e-3),
             bcfg=BlockLLMConfig(selector=SelectorConfig(
                 sparsity=0.9, policy="static", static_k_frac=0.5,

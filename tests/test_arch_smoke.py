@@ -10,7 +10,8 @@ import numpy as np
 import pytest
 
 from repro.configs import base as config_base
-from repro.core.blockllm import BlockLLMConfig, BlockLLMTrainer
+from repro import trainers
+from repro.core.blockllm import BlockLLMConfig
 from repro.core.selection import SelectorConfig
 from repro.launch.train import reduce_config
 from repro.models import model
@@ -60,8 +61,8 @@ def test_arch_smoke(arch):
     assert np.isfinite(np.asarray(logits, np.float32)).all()
 
     # one BlockLLM train step: loss finite and state updates
-    tr = BlockLLMTrainer(
-        cfg, params, adam=Adam(lr=1e-3),
+    tr = trainers.handle(
+        "blockllm", cfg, params, adam=Adam(lr=1e-3),
         bcfg=BlockLLMConfig(selector=SelectorConfig(
             sparsity=0.9, policy="static", static_k_frac=0.5)))
     m1 = tr.train_step(batch)

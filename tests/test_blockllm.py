@@ -5,12 +5,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.baselines.badam import BAdamTrainer
-from repro.baselines.galore import GaLore, GaLoreTrainer
-from repro.baselines.lora import LoRATrainer
+from repro import trainers
+from repro.baselines.galore import GaLore
 from repro.configs.base import ModelConfig
-from repro.core.blockllm import (BlockLLMConfig, BlockLLMTrainer,
-                                 FullAdamTrainer)
+from repro.core.blockllm import BlockLLMConfig
 from repro.core.selection import SelectorConfig
 from repro.models import model
 from repro.optim.adam import Adam
@@ -36,8 +34,8 @@ def _bll(cfg, sparsity=0.9, **kw):
     defaults = dict(policy="static", static_k_frac=0.25, patience=5,
                     probe_rows_per_stack=1)
     defaults.update(kw)
-    return BlockLLMTrainer(
-        cfg, model.init_params(K(0), cfg), adam=Adam(lr=3e-3),
+    return trainers.handle(
+        "blockllm", cfg, model.init_params(K(0), cfg), adam=Adam(lr=3e-3),
         bcfg=BlockLLMConfig(selector=SelectorConfig(sparsity=sparsity,
                                                     **defaults)))
 
@@ -62,7 +60,7 @@ def test_static_policy_never_recompiles(cfg, batch):
 def test_memory_below_full_adam(cfg, batch):
     tr = _bll(cfg, sparsity=0.95)
     tr.train_step(batch)
-    full = FullAdamTrainer(cfg, model.init_params(K(0), cfg))
+    full = trainers.handle("adam", cfg, model.init_params(K(0), cfg))
     full.train_step(batch)
     r, f = tr.memory_report(), full.memory_report()
     assert r["total_train_state"] < 0.6 * f["total_train_state"]
@@ -101,7 +99,7 @@ def test_reselection_resets_optimizer(cfg, batch):
     for _ in range(4):
         tr.train_step(batch)
     count_before = int(tr.opt_state.count)
-    tr._select()
+    tr.reselect()
     assert int(tr.opt_state.count) == 0
     assert all(float(jnp.abs(l).max()) == 0.0
                for l in jax.tree.leaves(tr.opt_state.mu))
@@ -127,8 +125,8 @@ def test_norm_dict_populated(cfg, batch):
 
 
 def test_greedy_policy_trains(cfg, batch):
-    tr = BlockLLMTrainer(
-        cfg, model.init_params(K(0), cfg), adam=Adam(lr=3e-3),
+    tr = trainers.handle(
+        "blockllm", cfg, model.init_params(K(0), cfg), adam=Adam(lr=3e-3),
         bcfg=BlockLLMConfig(selector=SelectorConfig(
             sparsity=0.95, policy="greedy", patience=5)))
     losses = [tr.train_step(batch)["loss"] for _ in range(15)]
@@ -136,8 +134,8 @@ def test_greedy_policy_trains(cfg, batch):
 
 
 def test_badam_is_single_block(cfg, batch):
-    tr = BAdamTrainer(cfg, model.init_params(K(0), cfg), switch_every=3,
-                      adam=Adam(lr=3e-3))
+    tr = trainers.handle("badam", cfg, model.init_params(K(0), cfg),
+                         switch_every=3, adam=Adam(lr=3e-3))
     rows = [u for u in tr.plan.selected_labels() if "/g" in u]
     assert len(rows) == 1
     b0 = rows[0]
@@ -152,15 +150,17 @@ def test_all_methods_reduce_loss(cfg, batch):
     """The paper's Fig-5 cast all train on the same task."""
     mk = {
         "blockllm": lambda: _bll(cfg),
-        "galore": lambda: GaLoreTrainer(
-            cfg, model.init_params(K(0), cfg),
+        "galore": lambda: trainers.handle(
+            "galore", cfg, model.init_params(K(0), cfg),
             galore=GaLore(rank=4, lr=3e-3, update_proj_gap=10)),
-        "lora": lambda: LoRATrainer(cfg, model.init_params(K(0), cfg),
-                                    rank=4, adam=Adam(lr=3e-3)),
-        "badam": lambda: BAdamTrainer(cfg, model.init_params(K(0), cfg),
-                                      switch_every=5, adam=Adam(lr=3e-3)),
-        "adam": lambda: FullAdamTrainer(cfg, model.init_params(K(0), cfg),
-                                        adam=Adam(lr=3e-3)),
+        "lora": lambda: trainers.handle(
+            "lora", cfg, model.init_params(K(0), cfg), rank=4,
+            adam=Adam(lr=3e-3)),
+        "badam": lambda: trainers.handle(
+            "badam", cfg, model.init_params(K(0), cfg), switch_every=5,
+            adam=Adam(lr=3e-3)),
+        "adam": lambda: trainers.handle(
+            "adam", cfg, model.init_params(K(0), cfg), adam=Adam(lr=3e-3)),
     }
     for name, f in mk.items():
         tr = f()
@@ -175,8 +175,8 @@ def test_fused_update_matches_unfused(cfg, batch):
     """The masked_adam Pallas kernel path == the XLA Adam path."""
     import numpy as np
     tr_a = _bll(cfg)
-    tr_b = BlockLLMTrainer(
-        cfg, model.init_params(K(0), cfg), adam=Adam(lr=3e-3),
+    tr_b = trainers.handle(
+        "blockllm", cfg, model.init_params(K(0), cfg), adam=Adam(lr=3e-3),
         bcfg=BlockLLMConfig(selector=SelectorConfig(
             sparsity=0.9, policy="static", static_k_frac=0.25,
             patience=5, probe_rows_per_stack=1),

@@ -13,7 +13,8 @@ import pytest
 
 from repro.checkpoint import checkpointer as ck
 from repro.configs.base import ModelConfig
-from repro.core.blockllm import BlockLLMConfig, BlockLLMTrainer
+from repro import trainers
+from repro.core.blockllm import BlockLLMConfig
 from repro.core.selection import SelectorConfig
 from repro.models import model
 from repro.optim.adam import Adam
@@ -57,8 +58,8 @@ def test_gc_keeps_last_n(tmp_path):
 
 
 def _mk_trainer(cfg):
-    return BlockLLMTrainer(
-        cfg, model.init_params(K(0), cfg), adam=Adam(lr=3e-3),
+    return trainers.handle(
+        "blockllm", cfg, model.init_params(K(0), cfg), adam=Adam(lr=3e-3),
         bcfg=BlockLLMConfig(selector=SelectorConfig(
             sparsity=0.9, policy="static", static_k_frac=0.5,
             patience=1000)))

@@ -305,7 +305,7 @@ def test_ms_per_step_auto_calibrates_from_wall_clock(tiny_cfg,
     srv.run_until_drained()
     assert srv._ms_samples >= 3
     assert srv.ms_per_step > 0 and srv.ms_per_step != 1.0
-    assert srv.stats()["ms_per_step"] == srv.ms_per_step
+    assert srv.stats()["decode"]["ms_per_step"] == srv.ms_per_step
     # pinned float stays pinned (deterministic scheduling for tests)
     srv2 = DecodeServer(tiny_cfg, tiny_params, batch_slots=2,
                         max_seq=32, ms_per_step=2.5)

@@ -1,0 +1,317 @@
+"""FleetServe: consistent-hash affinity, spill/steal/shed routing,
+cross-replica adapter capture, fleet-vs-single stream parity — plus the
+PR-9 API surface (ServeConfig round-trip, legacy-kwarg deprecation,
+removed legacy trainer classes)."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.adapters import (DeltaEntry, InMemoryRegistry, SparseDelta,
+                            extract_delta)
+from repro.adapters.testing import perturb_rows
+from repro.runtime.fleet import (ConsistentHashRing, FleetAdapterDirectory,
+                                 Router)
+from repro.runtime.serve_config import (KVConfig, SchedConfig, ServeConfig,
+                                        SpecConfig)
+from repro.runtime.serve_loop import DecodeServer, Request
+
+
+# --------------------------------------------------------------------- #
+# fixtures / helpers
+# --------------------------------------------------------------------- #
+
+
+def _registry(params, ids, seed=100):
+    deltas = {}
+    for i, aid in enumerate(ids):
+        tuned = perturb_rows(params, rows=(i % 4, (i + 2) % 4),
+                             scale=0.5 + 0.1 * i, seed=seed + i)
+        deltas[aid] = extract_delta(params, tuned,
+                                    meta={"adapter_id": aid})
+    return InMemoryRegistry(deltas)
+
+
+def _requests(cfg, tenancy, new_tokens=4, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size,
+                                               3 + i % 3),
+                    max_new_tokens=new_tokens, adapter_id=t, **kw)
+            for i, t in enumerate(tenancy)]
+
+
+def _fleet_cfg(**sched_kw):
+    return ServeConfig(batch_slots=2, max_seq=64,
+                       sched=SchedConfig(steps_per_turn=2, **sched_kw))
+
+
+# --------------------------------------------------------------------- #
+# consistent hashing
+# --------------------------------------------------------------------- #
+
+
+def test_ring_add_moves_about_one_nth_of_keys():
+    keys = [f"tenant:t{i}" for i in range(200)]
+    ring = ConsistentHashRing([f"r{i}" for i in range(4)], vnodes=64)
+    before = {k: ring.owner(k) for k in keys}
+    ring.add("r4")
+    after = {k: ring.owner(k) for k in keys}
+    moved = [k for k in keys if before[k] != after[k]]
+    # every moved key moved TO the new node (affinity is sticky)
+    assert all(after[k] == "r4" for k in moved)
+    # ~1/5 expected; generous bound still catches rehash-everything bugs
+    assert 0 < len(moved) < 0.45 * len(keys)
+    # removal restores the exact original placement
+    ring.remove("r4")
+    assert {k: ring.owner(k) for k in keys} == before
+
+
+def test_ring_preference_is_owner_then_distinct_successors():
+    nodes = ["a", "b", "c"]
+    ring = ConsistentHashRing(nodes, vnodes=32)
+    for key in ("tenant:base", "tenant:x", "tenant:y"):
+        pref = ring.preference(key)
+        assert pref[0] == ring.owner(key)
+        assert sorted(pref) == sorted(nodes)      # each node once
+
+
+def test_ring_is_deterministic_across_instances():
+    a = ConsistentHashRing(["r0", "r1", "r2"], vnodes=64)
+    b = ConsistentHashRing(["r0", "r1", "r2"], vnodes=64)
+    assert [a.owner(f"tenant:t{i}") for i in range(64)] == \
+        [b.owner(f"tenant:t{i}") for i in range(64)]
+
+
+# --------------------------------------------------------------------- #
+# adapter directory
+# --------------------------------------------------------------------- #
+
+
+def _delta(version=1, val=1.0):
+    return SparseDelta(
+        {"w": DeltaEntry(idx=np.arange(2, dtype=np.int32),
+                         rows=np.full((2, 8), val, np.float32))},
+        meta={"adapter_id": "a", "registry_version": version})
+
+
+def test_directory_publish_lookup_unpublish():
+    d = FleetAdapterDirectory()
+    assert d.holders("a") == [] and d.lookup("a", 1) is None
+    delta = _delta(version=1)
+    d.publish("r0", "a", delta)
+    assert d.holders("a") == ["r0"]
+    assert d.lookup("a", 1) is delta
+    assert d.lookup("a", 1, exclude="r0") is None   # only holder excluded
+    assert d.lookup("a", 2) is None                 # stale version skipped
+    d.unpublish("r0", "a")
+    assert d.holders("a") == [] and d.lookup("a", 1) is None
+    d.unpublish("r0", "a")                          # idempotent
+
+
+# --------------------------------------------------------------------- #
+# routing: spill, steal, shed
+# --------------------------------------------------------------------- #
+
+
+def test_hot_tenant_spills_then_returns_home(tiny_cfg, tiny_params):
+    reg = _registry(tiny_params, ["hot"])
+    router = Router(tiny_cfg, tiny_params, _fleet_cfg(), replicas=2,
+                    registry=reg, spill_depth=2)
+    home = router.home("hot")
+    reqs = _requests(tiny_cfg, ["hot"] * 6)
+    placed = [router.submit(r) for r in reqs]
+    assert placed[:2] == [home, home]          # under the depth threshold
+    assert set(placed) == set(router.replicas)  # backlog spilled over
+    router.run_until_drained()
+    assert all(r.done for r in reqs)
+    s = router.stats()["fleet"]
+    assert s["spills"] >= 1 and s["routed_home"] >= 2
+    # load gone -> the tenant routes home again
+    late = _requests(tiny_cfg, ["hot"], seed=9)[0]
+    late.rid = 99
+    assert router.submit(late) == home
+
+
+def test_idle_replica_steals_drain_tail(tiny_cfg, tiny_params):
+    reg = _registry(tiny_params, ["hot"])
+    # spill disabled: every request lands on the home replica's queue
+    router = Router(tiny_cfg, tiny_params, _fleet_cfg(), replicas=2,
+                    registry=reg, spill_depth=10 ** 6)
+    home = router.home("hot")
+    reqs = _requests(tiny_cfg, ["hot"] * 6)
+    for r in reqs:
+        assert router.submit(r) == home
+    router.step()                # steal fires before the replicas step
+    s = router.stats()["fleet"]
+    assert s["steals"] >= 1
+    stolen_to = {router.routed_to(r.rid) for r in reqs}
+    assert stolen_to == set(router.replicas)   # both replicas now loaded
+    router.run_until_drained()
+    assert all(r.done for r in reqs)
+
+
+def test_shed_on_slo_pressure_then_admit_when_idle(tiny_cfg, tiny_params):
+    cfg = ServeConfig(batch_slots=1, max_seq=64,
+                      sched=SchedConfig(steps_per_turn=4, ms_per_step=1.0))
+    router = Router(tiny_cfg, tiny_params, cfg, replicas=2)
+    backlog = _requests(tiny_cfg, [None] * 10)
+    for r in backlog:
+        assert router.submit(r) is not None
+    urgent = Request(rid=50, prompt=np.arange(3), max_new_tokens=2,
+                     slo_ms=0.5)
+    assert router.submit(urgent) is None       # no replica can make 0.5ms
+    assert router.stats()["fleet"]["sheds"] == 1
+    assert router.routed_to(urgent.rid) is None
+    router.run_until_drained()
+    assert router.submit(urgent) is not None   # idle fleet always admits
+    router.run_until_drained()
+    assert urgent.done
+
+
+# --------------------------------------------------------------------- #
+# cross-replica adapter capture
+# --------------------------------------------------------------------- #
+
+
+def test_spilled_tenant_captures_peer_rows_not_disk(tiny_cfg, tiny_params):
+    reg = _registry(tiny_params, ["A"])
+    router = Router(tiny_cfg, tiny_params,
+                    _fleet_cfg(cache_bytes=1 << 24), replicas=2,
+                    registry=reg, spill_depth=2)
+    home = router.home("A")
+    other = next(n for n in router.replicas if n != home)
+    # warm the home replica: promotes A from the registry, publishes it
+    warm = _requests(tiny_cfg, ["A"])
+    router.submit(warm[0])
+    router.run_until_drained()
+    assert router.replicas[home].server.cache.stats()["h2d_bytes"] > 0
+    assert router.directory.holders("A") == [home]
+    # flood: the backlog spills A onto the other replica, whose cache
+    # captures the home replica's resident rows instead of re-promoting
+    flood = _requests(tiny_cfg, ["A"] * 6, seed=3)
+    for i, r in enumerate(flood):
+        r.rid = 10 + i
+        router.submit(r)
+    assert any(router.routed_to(r.rid) == other for r in flood)
+    router.run_until_drained()
+    assert all(r.done for r in flood)
+    peer = router.replicas[other].server.cache.stats()
+    assert peer["peer_hits"] >= 1
+    assert peer["xrep_bytes"] > 0
+    assert peer["h2d_bytes"] == 0              # zero host->device traffic
+    s = router.stats()["fleet"]
+    assert s["peer_hits"] >= 1 and s["xrep_bytes"] > 0
+
+
+# --------------------------------------------------------------------- #
+# fleet-vs-single stream parity + stats schema
+# --------------------------------------------------------------------- #
+
+
+def test_fleet_streams_bit_identical_to_single_replica(tiny_cfg,
+                                                       tiny_params):
+    reg = _registry(tiny_params, ["A", "B", "C"])
+    tenancy = ["A", "B", None, "C", "A", "B", "C", None, "A"]
+    cfg = _fleet_cfg(cache_bytes=1 << 24)
+
+    single_reqs = _requests(tiny_cfg, tenancy)
+    srv = DecodeServer(tiny_cfg, tiny_params, cfg, registry=reg)
+    for r in single_reqs:
+        srv.submit(r)
+    srv.run_until_drained()
+    single = {r.rid: tuple(r.out) for r in single_reqs}
+
+    for n in (2, 3):
+        reqs = _requests(tiny_cfg, tenancy)
+        router = Router(tiny_cfg, tiny_params, cfg, replicas=n,
+                        registry=reg, spill_depth=2)
+        for r in reqs:
+            assert router.submit(r) is not None
+        router.run_until_drained()
+        assert {r.rid: tuple(r.out) for r in reqs} == single, \
+            f"{n}-replica fleet diverged from single-replica serving"
+
+    s = router.stats()
+    assert s["stats_version"] == 2
+    assert s["fleet"]["replicas"] == 3
+    assert s["fleet"]["submitted"] == len(tenancy)
+    # decode tokens: every out token except the prefill prime
+    assert s["fleet"]["tokens"] == sum(len(r.out) - 1
+                                       for r in single_reqs)
+    assert set(s["replicas"]) == set(router.replicas)
+    assert s["aggregate"]["decode/steps"] == \
+        sum(p["decode"]["steps"] for p in s["replicas"].values())
+
+
+# --------------------------------------------------------------------- #
+# ServeConfig: round-trip + legacy-kwarg deprecation
+# --------------------------------------------------------------------- #
+
+
+def test_serve_config_json_roundtrip_bit_exact():
+    cfg = ServeConfig(
+        batch_slots=3, max_seq=128, prefill_chunk=16,
+        sched=SchedConfig(steps_per_turn=4, adapter_aware=True,
+                          aging_steps=12, ms_per_step="auto",
+                          cache_bytes=1 << 20),
+        kv=KVConfig(layout="paged", page_size=8, pages=24),
+        spec=SpecConfig(draft=2, adaptive=False))
+    text = cfg.to_json()
+    assert ServeConfig.from_json(text) == cfg
+    # canonical form is a fixed point
+    assert ServeConfig.from_json(text).to_json() == text
+    assert ServeConfig.from_json(ServeConfig().to_json()) == ServeConfig()
+
+
+def test_serve_config_rejects_unknown_and_invalid():
+    with pytest.raises(ValueError, match="unknown ServeConfig keys"):
+        ServeConfig.from_dict({"batch_slots": 2, "bogus": 1})
+    with pytest.raises(ValueError, match="unknown sched keys"):
+        ServeConfig.from_dict({"sched": {"bogus": 1}})
+    with pytest.raises(ValueError, match="version"):
+        ServeConfig.from_dict({"version": 999})
+    with pytest.raises(ValueError, match="layout"):
+        KVConfig(layout="triangular")
+    with pytest.raises(ValueError, match="ms_per_step"):
+        SchedConfig(ms_per_step="sometimes")
+
+
+def test_decode_server_legacy_kwargs_deprecated(tiny_cfg, tiny_params):
+    with pytest.warns(DeprecationWarning, match="from_legacy_kwargs"):
+        srv = DecodeServer(tiny_cfg, tiny_params, batch_slots=2,
+                           max_seq=64, steps_per_turn=3)
+    assert srv.config == ServeConfig.from_legacy_kwargs(
+        batch_slots=2, max_seq=64, steps_per_turn=3)
+    # the config path is the blessed one: no warning
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        srv = DecodeServer(tiny_cfg, tiny_params,
+                           ServeConfig(batch_slots=2, max_seq=64))
+    assert srv.config.batch_slots == 2
+    # unknown flat kwargs keep the old TypeError contract
+    with pytest.raises(TypeError, match="unknown DecodeServer"):
+        DecodeServer(tiny_cfg, tiny_params, batch_slots=2,
+                     max_seq=64, warp_drive=True)
+
+
+# --------------------------------------------------------------------- #
+# removed legacy trainer classes fail loudly
+# --------------------------------------------------------------------- #
+
+
+def test_removed_legacy_trainers_raise_importerror():
+    import repro.baselines.badam as badam
+    import repro.baselines.galore as galore
+    import repro.baselines.lora as lora
+    import repro.core.blockllm as core_blockllm
+    removed = ((core_blockllm, "BlockLLMTrainer"),
+               (core_blockllm, "FullAdamTrainer"),
+               (galore, "GaLoreTrainer"),
+               (lora, "LoRATrainer"),
+               (badam, "BAdamTrainer"))
+    for mod, name in removed:
+        with pytest.raises(ImportError, match="trainers.handle"):
+            getattr(mod, name)
+    # unknown attributes stay AttributeError, not ImportError
+    with pytest.raises(AttributeError):
+        core_blockllm.NoSuchThing

@@ -86,11 +86,13 @@ def test_straggler_monitor_quiet_when_normal():
 
 def test_memory_accounting_matches_live_arrays(tiny_cfg):
     """The analytic accounting used for the paper tables == live bytes."""
-    from repro.core.blockllm import BlockLLMConfig, BlockLLMTrainer
+    from repro import trainers
+    from repro.core.blockllm import BlockLLMConfig
     from repro.core.selection import SelectorConfig
     from repro.models import model as m
-    tr = BlockLLMTrainer(
-        tiny_cfg, m.init_params(jax.random.PRNGKey(0), tiny_cfg),
+    tr = trainers.handle(
+        "blockllm", tiny_cfg,
+        m.init_params(jax.random.PRNGKey(0), tiny_cfg),
         bcfg=BlockLLMConfig(selector=SelectorConfig(sparsity=0.9,
                                                     policy="static")))
     toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,

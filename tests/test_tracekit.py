@@ -296,10 +296,12 @@ def test_ema_skips_compile_steps_and_stats_sections():
     assert s["decode"]["steps"] == srv.steps
     assert s["sched"]["finished"] == len(reqs)
     assert s["prefill"]["dispatches"] == srv.prefill_dispatches
-    # deprecated flat aliases stay consistent with the sections
-    assert s["steps"] == s["decode"]["steps"]
-    assert s["prefill_dispatches"] == s["prefill"]["dispatches"]
-    assert s["ms_per_step"] == s["decode"]["ms_per_step"]
+    # stats schema v2: the flat aliases are gone, the version is stamped
+    assert s["stats_version"] == 2
+    for gone in ("steps", "swaps", "swap_bytes", "swap_rate", "applied",
+                 "prefill_dispatches", "prefill_prompt_tokens",
+                 "ms_per_step"):
+        assert gone not in s, f"removed flat alias {gone!r} reappeared"
 
 
 def test_disabled_tracer_overhead_bound():

@@ -4,7 +4,7 @@
 BlockLLM's <5%-of-params deltas are what make multi-tenant serving
 cheap; this gate keeps the serving-side wins from silently regressing
 the same way ``check_memory.py`` locks in the training-memory story.
-It runs the three serving benchmarks in quick mode:
+It runs the serving benchmarks in quick mode:
 
 - ``benchmarks/bench_adapter_swap.py``  -> swap_bytes_ratio (tenant
   flip bytes / full reload) and q8_payload_ratio (int8 / fp32 payload),
@@ -26,6 +26,12 @@ It runs the three serving benchmarks in quick mode:
   hard-asserts >= 2x over plain decoding with bit-identical streams)
   and spec_acceptance_rate (tenant-adapter acceptance of base-model
   drafts),
+- ``benchmarks/bench_fleet.py``         -> the FleetServe tier:
+  fleet_tps_per_round_2 (aggregate tokens per fleet round at 2
+  replicas), fleet_tps_speedup_2x / _4x (vs single-replica; the bench
+  hard-asserts >= 1.8x at 2 replicas with bit-identical per-tenant
+  streams), fleet_p99_latency_rounds, and fleet_xrep_bytes (device
+  bytes captured cross-replica instead of re-promoted from disk),
 
 and compares every metric against ``benchmarks/serve_baselines.json``
 with a relative tolerance band.  Each metric has an orientation: moving
@@ -75,18 +81,29 @@ ORIENTATION = {
     "paged_prefix_savings": "higher",
     "spec_tokens_per_step": "higher",
     "spec_acceptance_rate": "higher",
+    "fleet_tps_per_round_2": "higher",
+    "fleet_tps_speedup_2x": "higher",
+    "fleet_tps_speedup_4x": "higher",
+    "fleet_p99_latency_rounds": "lower",
+    "fleet_xrep_bytes": "lower",
 }
 
 
 def collect_metrics() -> dict:
     sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
     from benchmarks import (bench_adapter_swap, bench_decode_path,
-                            bench_serve_sched)
+                            bench_fleet, bench_serve_sched)
 
     swap = bench_adapter_swap.run(quick=True)
     sched = bench_serve_sched.run(quick=True)
     decode = bench_decode_path.run(quick=True)
+    fleet = bench_fleet.run(quick=True)
     return {
+        "fleet_tps_per_round_2": float(fleet["tps_per_round_2"]),
+        "fleet_tps_speedup_2x": float(fleet["tps_speedup_2x"]),
+        "fleet_tps_speedup_4x": float(fleet["tps_speedup_4x"]),
+        "fleet_p99_latency_rounds": float(fleet["p99_latency_rounds"]),
+        "fleet_xrep_bytes": float(fleet["xrep_bytes"]),
         "prefill_dispatch_ratio": float(
             decode["prefill_dispatch_ratio"]),
         "decode_bytes_ratio": float(decode["decode_bytes_ratio"]),

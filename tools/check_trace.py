@@ -46,12 +46,26 @@ REQUIRED = {
 SWAP_SPANS = ("swap_apply", "swap_revert")
 PAGING_EVENTS = ("page_alloc", "page_free", "cow_split", "prefix_share")
 SPEC_SPANS = ("spec_draft", "spec_verify")
+FLEET_EVENTS = ("route", "fleet_round")
 TRAIN_TELEMETRY = ("sel_q", "sel_churn", "sel_grad_concentration")
 
 
 def _fail(msg: str) -> None:
     print(f"check_trace: FAIL: {msg}")
     sys.exit(1)
+
+
+def _check_fleet_processes(path: Path, evs) -> None:
+    """A merged fleet trace must carry >= 2 replica processes — one
+    Perfetto lane set (pid) per replica, each with its own
+    ``process_name`` metadata."""
+    procs = {e["pid"]: e["args"].get("name") for e in evs
+             if e.get("ph") == "M" and e.get("name") == "process_name"}
+    replicas = [n for n in procs.values()
+                if n and n.startswith("replica")]
+    if len(replicas) < 2:
+        _fail(f"{path}: fleet trace needs >= 2 replica processes, "
+              f"found {sorted(procs.values())}")
 
 
 def _load_chrome(path: Path):
@@ -142,6 +156,10 @@ def main(argv=None) -> int:
     ap.add_argument("--require-spec", action="store_true",
                     help="also require the speculative-decode spans "
                          "(serve runs with --speculate)")
+    ap.add_argument("--require-fleet", action="store_true",
+                    help="also require the FleetServe router events "
+                         "and >= 2 replica processes (merged traces "
+                         "from launch.fleet --trace)")
     args = ap.parse_args(argv)
 
     required = list(REQUIRED[args.kind])
@@ -151,6 +169,8 @@ def main(argv=None) -> int:
         required += list(PAGING_EVENTS)
     if args.require_spec:
         required += list(SPEC_SPANS)
+    if args.require_fleet:
+        required += list(FLEET_EVENTS)
 
     for p in map(Path, args.paths):
         if not p.exists():
@@ -159,8 +179,14 @@ def main(argv=None) -> int:
             names, recs = _load_jsonl(p)
             if args.kind == "train":
                 _check_train_telemetry(p, recs)
+            if args.require_fleet:
+                _fail(f"{p}: --require-fleet needs the merged "
+                      f"Chrome-format trace (launch.fleet --trace "
+                      f"out.json), not JSONL")
         else:
-            names, _ = _load_chrome(p)
+            names, evs = _load_chrome(p)
+            if args.require_fleet:
+                _check_fleet_processes(p, evs)
         seen = set(names)
         missing = [n for n in required if n not in seen]
         if missing:
