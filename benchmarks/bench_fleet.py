@@ -17,7 +17,13 @@ from the SAME frozen ``ServeConfig``, and proves the fleet story:
   (``fleet_xrep_bytes``, gated);
 - **streams are bit-identical**: every tenant's per-request token
   streams at 2 and 4 replicas match single-replica serving exactly
-  (routing, spilling and peer capture are invisible to the tokens).
+  (routing, spilling and peer capture are invisible to the tokens);
+- **failover recovers losslessly** (ElasticFleet recovery leg): a
+  2-replica fleet has its busiest replica killed mid-run by a seeded
+  ``FaultPlan``; the survivor absorbs the re-routed queue and replays
+  the in-flight requests — the bench hard-asserts zero lost requests,
+  zero shed, exactly one fence, and token streams still bit-identical
+  to the fault-free single-replica run.
 
 Reported (CSV name,us_per_call,derived):
   fleet_tps_per_round_{1,2,4}  aggregate tokens per fleet round
@@ -26,6 +32,8 @@ Reported (CSV name,us_per_call,derived):
   fleet_p99_latency_rounds     p99 request latency, 2-replica fleet
   fleet_xrep_bytes             device bytes captured cross-replica
   fleet_spills                 requests routed off their home replica
+  fleet_recover_rounds         rounds from fence to last replay done
+  fleet_fault_shed             requests shed during the chaos leg (0)
 
     PYTHONPATH=src python -m benchmarks.bench_fleet [--quick]
 """
@@ -42,6 +50,7 @@ from benchmarks.bench_serve_sched import _zipf_tenancy
 from repro.adapters import InMemoryRegistry, extract_delta
 from repro.adapters.testing import perturb_rows as _perturbed
 from repro.models import model
+from repro.runtime.elastic import FaultPlan
 from repro.runtime.fleet import Router
 from repro.runtime.serve_config import SchedConfig, ServeConfig
 from repro.runtime.serve_loop import Request
@@ -73,6 +82,32 @@ def _serve_fleet(cfg, base, registry, serve_cfg, tenancy, new_tokens,
     wall = time.monotonic() - t0
     assert all(r.done for r in reqs), f"{replicas}-replica leg undrained"
     return router, reqs, rounds, wall
+
+
+def _recovery_leg(cfg, base, registry, serve_cfg, tenancy, new_tokens,
+                  reference_outs):
+    """Kill the busiest replica of a 2-replica fleet mid-run and
+    measure how long failover takes to make the fleet whole again."""
+    reqs = _requests(cfg, tenancy, new_tokens)
+    router = Router(cfg, base, serve_cfg, replicas=2, registry=registry)
+    for r in reqs:
+        assert router.submit(r) is not None
+    victim = max(router.replicas,
+                 key=lambda n: router.replicas[n].depth())
+    # a few rounds in, slots are full: the kill replays live requests
+    router.faults = FaultPlan.parse(f"kill:{victim}@round4")
+    rounds = router.run_until_drained(max_rounds=50_000)
+    f = router.stats()["fleet"]
+    assert all(r.done for r in reqs), "recovery leg lost a request"
+    assert _outs(reqs) == reference_outs, \
+        "failover replay diverged from the fault-free streams"
+    assert f["fences"] == 1 and f["fenced_replicas"] == {victim: "killed"}
+    assert f["sheds"] == 0, "failover must re-route, never shed"
+    print(f"recovery leg  : killed {victim} at round 4; "
+          f"{f['failovers']} in-flight replay(s), "
+          f"{f['recover_rounds']} round(s) to recover, "
+          f"drained in {rounds} rounds, 0 shed")
+    return f
 
 
 def run(quick: bool = False):
@@ -123,6 +158,11 @@ def run(quick: bool = False):
     peer_hits = int(legs[2]["fleet"]["peer_hits"])
     spills = int(legs[2]["fleet"]["spills"])
 
+    chaos = _recovery_leg(cfg, base, registry, serve_cfg, tenancy,
+                          new_tokens, legs[1]["outs"])
+    recover_rounds = int(chaos["recover_rounds"])
+    fault_shed = int(chaos["sheds"])
+
     common.emit("fleet_tps_per_round_1", 0.0, f"{tps[1]:.2f}")
     common.emit("fleet_tps_per_round_2", 0.0, f"{tps[2]:.2f}")
     common.emit("fleet_tps_per_round_4", 0.0, f"{tps[4]:.2f}")
@@ -131,6 +171,8 @@ def run(quick: bool = False):
     common.emit("fleet_p99_latency_rounds", 0.0, f"{p99:.1f}")
     common.emit("fleet_xrep_bytes", 0.0, f"{xrep}")
     common.emit("fleet_spills", 0.0, f"{spills}")
+    common.emit("fleet_recover_rounds", 0.0, f"{recover_rounds}")
+    common.emit("fleet_fault_shed", 0.0, f"{fault_shed}")
 
     print(f"\naggregate TPS : {tps[1]:.2f} -> {tps[2]:.2f} -> "
           f"{tps[4]:.2f} tok/round "
@@ -152,7 +194,9 @@ def run(quick: bool = False):
             "tps_speedup_4x": float(speedup4),
             "p99_latency_rounds": p99,
             "xrep_bytes": float(xrep),
-            "spills": float(spills)}
+            "spills": float(spills),
+            "recover_rounds": float(recover_rounds),
+            "fault_shed": float(fault_shed)}
 
 
 if __name__ == "__main__":

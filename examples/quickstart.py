@@ -184,3 +184,43 @@ print(f"re-selections: {state.meta['reselections']}, "
 #    tools/check_trace.py --require-fleet).  benchmarks/bench_fleet.py
 #    gates aggregate TPS >= 1.8x at 2 replicas on a Zipf mix (with
 #    bit-identical streams) through the serve gate's fleet_* metrics.
+
+# 9. Operating an elastic fleet (ElasticFleet, runtime/elastic.py).
+#    Fleet membership is runtime-mutable and failure survivable:
+#    `Router.add_replica()` grows the fleet live (the ring resize
+#    remaps ~1/N tenants; their queued requests move over and their
+#    HBM-resident delta rows are pre-captured device-to-device through
+#    the FleetAdapterDirectory, zero h2d), `remove_replica()` shrinks
+#    it losslessly (queued work re-routes to ring successors, in-flight
+#    groups drain in place, resident rows hand off to each tenant's new
+#    home).  `ReplicaHealth` generalizes runtime/straggler.py's
+#    EMA/median rule to the serve side: a replica past `slow_threshold`
+#    x the fleet-median step-time EMA is flagged a straggler (work
+#    stealing rebalances it), one that makes no progress for
+#    `wedge_rounds` rounds while holding work is **fenced** — off the
+#    ring, queued requests re-routed (never shed), in-flight requests
+#    *replayed* on peers from the retained prompt + already-streamed
+#    tokens.  Greedy decode makes the replayed continuation
+#    deterministic, and `Request.replay_clone` splices the clone's
+#    stream back with watermark dedup, so consumers see every position
+#    exactly once — bit-identical to a fault-free run.  Drill it with
+#    deterministic fault injection:
+#
+#        PYTHONPATH=src python -m repro.launch.fleet \
+#            --quick --replicas 2 --demo-adapters 3 \
+#            --fault-plan "kill:replica1@round6" \
+#            --replace-after-fence --assert-parity
+#
+#    (`wedge:replica0@round5`, `slow:replica1@round3:3x` and
+#    `adapter_read_error:n=2` — transient registry read faults absorbed
+#    by bounded retry-with-backoff — compose ';'-separated; seeded by
+#    `--fault-seed`.)  `--assert-parity` re-serves the same requests
+#    fault-free on one replica and hard-asserts stream equality; Ctrl-C
+#    drains gracefully before flushing stats/traces.  SparseDelta
+#    payloads are sealed with a SHA-256 checksum at save time and
+#    verified on load (`AdapterCorruptError` on mismatch); the ring/
+#    health/retry knobs live in `ServeConfig.fleet` (`FleetConfig`).
+#    CI runs chaos-smoke (kill-and-replace + wedge-then-fence legs,
+#    `check_trace --require-failover`), and the serve gate pins
+#    fleet_recover_rounds / fleet_fault_shed from bench_fleet's
+#    recovery leg.

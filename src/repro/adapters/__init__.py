@@ -48,17 +48,20 @@ guards against applying a delta to a mismatched base architecture.
 Non-numpy dtypes (bf16/fp8) are stored bit-punned as uintN and viewed
 back on load, so the round trip is exact.
 """
-from repro.adapters.delta import (DeltaEntry, SparseDelta, apply_delta,
-                                  copy_tree, delta_from_trainer,
-                                  extract_delta, fingerprint, flip_delta,
-                                  load_delta, quantize_delta, revert_delta,
+from repro.adapters.delta import (AdapterCorruptError, DeltaEntry,
+                                  SparseDelta, apply_delta, copy_tree,
+                                  delta_from_trainer, extract_delta,
+                                  fingerprint, flip_delta, load_delta,
+                                  quantize_delta, revert_delta,
                                   save_delta)
 from repro.adapters.device_cache import AdapterCache
-from repro.adapters.registry import AdapterRegistry, InMemoryRegistry
+from repro.adapters.registry import (AdapterReadError, AdapterRegistry,
+                                     InMemoryRegistry, read_with_retry)
 
 __all__ = [
-    "AdapterCache", "DeltaEntry", "SparseDelta", "apply_delta",
-    "copy_tree", "delta_from_trainer", "extract_delta", "fingerprint",
-    "flip_delta", "load_delta", "quantize_delta", "revert_delta",
-    "save_delta", "AdapterRegistry", "InMemoryRegistry",
+    "AdapterCache", "AdapterCorruptError", "AdapterReadError",
+    "DeltaEntry", "SparseDelta", "apply_delta", "copy_tree",
+    "delta_from_trainer", "extract_delta", "fingerprint", "flip_delta",
+    "load_delta", "quantize_delta", "revert_delta", "save_delta",
+    "AdapterRegistry", "InMemoryRegistry", "read_with_retry",
 ]

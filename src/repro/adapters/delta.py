@@ -30,6 +30,31 @@ from repro.checkpoint import checkpointer as ckpt_lib
 Pytree = Any
 
 
+class AdapterCorruptError(RuntimeError):
+    """A stored delta failed its payload checksum: the bytes on disk do
+    not match what ``save_delta`` wrote (torn write, bit rot, tamper).
+    Raised instead of silently deserializing garbage into a live model;
+    the registry's retry-with-backoff path (``adapters/registry.py``)
+    treats it as retryable — a concurrent re-``put`` presents the same
+    way mid-replace — and re-raises it when the corruption persists."""
+
+
+def _payload_checksum(named: Dict[str, Any]) -> str:
+    """SHA-256 over the delta's array payloads, order-independent:
+    each array hashed as (key, dtype, shape, bytes) in sorted-key
+    order.  Computed host-side at save, recomputed at load — the npz
+    round trip is bit-exact (bf16/fp8 store bit-punned), so any
+    mismatch means the stored bytes changed."""
+    h = hashlib.sha256()
+    for key in sorted(named):
+        arr = np.ascontiguousarray(np.asarray(jax.device_get(named[key])))
+        h.update(key.encode())
+        h.update(str(arr.dtype).encode())
+        h.update(repr(tuple(arr.shape)).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
 @dataclass
 class DeltaEntry:
     """One leaf's edit: ``rows`` [K, ...] replacing rows ``idx`` of the
@@ -290,14 +315,25 @@ def save_delta(path, delta: SparseDelta):
     meta["format"] = "blockdelta.v1"
     if qmeta:
         meta["qmeta"] = qmeta
+    # integrity seal, verified by load_delta: reading back different
+    # array bytes raises AdapterCorruptError instead of serving garbage
+    meta["payload_sha256"] = _payload_checksum(named)
     return ckpt_lib.write_payload(path, named, meta=meta)
 
 
-def load_delta(path) -> SparseDelta:
+def load_delta(path, *, verify_checksum: bool = True) -> SparseDelta:
     named, manifest = ckpt_lib.read_payload(path)
     meta = manifest.get("meta", {})
     assert meta.get("format") == "blockdelta.v1", \
         f"{path}: not a BlockDelta payload"
+    expect = meta.get("payload_sha256")
+    if verify_checksum and expect is not None:   # pre-seal payloads pass
+        got = _payload_checksum(named)
+        if got != expect:
+            raise AdapterCorruptError(
+                f"{path}: payload checksum mismatch (stored "
+                f"{expect[:16]}…, recomputed {got[:16]}…) — the delta "
+                f"bytes changed since save_delta sealed them")
     qmeta = meta.get("qmeta", {})
     entries: Dict[str, DeltaEntry] = {}
     for key, arr in named.items():

@@ -29,11 +29,48 @@ from pathlib import Path
 from typing import Dict, List, Optional
 
 from repro.adapters import delta as delta_lib
-from repro.adapters.delta import SparseDelta
+from repro.adapters.delta import AdapterCorruptError, SparseDelta
+
+
+class AdapterReadError(RuntimeError):
+    """Transient adapter read failure — an injected fault
+    (``FaultPlan`` adapter_read_error legs, runtime/elastic.py) or a
+    real I/O error that survived the bounded retry-with-backoff."""
+
+
+# error classes the read path retries: injected transients, checksum
+# corruption (a concurrent re-put presents the same way mid-replace),
+# and real filesystem errors
+_RETRYABLE = (AdapterReadError, AdapterCorruptError, OSError)
+
+
+def read_with_retry(read_fn, adapter_id: str, *, retries: int = 3,
+                    backoff_ms: float = 5.0, fault_hook=None,
+                    on_retry=None):
+    """Run ``read_fn()`` with bounded exponential-backoff retry around
+    transient failures.  ``fault_hook(adapter_id)`` (if set) runs before
+    every attempt — the FaultPlan injection point; ``on_retry(attempt,
+    exc)`` observes each failed attempt (metrics).  The last error is
+    re-raised typed when every attempt fails — persistent corruption
+    surfaces as ``AdapterCorruptError``, not a generic wrapper."""
+    last = None
+    for attempt in range(max(1, retries)):
+        if attempt and backoff_ms > 0:
+            time.sleep(backoff_ms * (2 ** (attempt - 1)) / 1000.0)
+        try:
+            if fault_hook is not None:
+                fault_hook(adapter_id)
+            return read_fn()
+        except _RETRYABLE as e:
+            last = e
+            if on_retry is not None:
+                on_retry(attempt, e)
+    raise last
 
 
 class AdapterRegistry:
-    def __init__(self, root, *, capacity: int = 4):
+    def __init__(self, root, *, capacity: int = 4,
+                 read_retries: int = 3, retry_backoff_ms: float = 5.0):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.capacity = capacity
@@ -44,6 +81,12 @@ class AdapterRegistry:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        # fault-tolerant read path: FaultPlan injection + bounded
+        # retry-with-backoff (knobs mirrored from FleetConfig by Router)
+        self.fault_hook = None            # callable(adapter_id) or None
+        self.read_retries = int(read_retries)
+        self.retry_backoff_ms = float(retry_backoff_ms)
+        self.retried_reads = 0
 
     # ------------------------------------------------------------------ #
     # disk
@@ -97,20 +140,32 @@ class AdapterRegistry:
             self._cache.move_to_end(adapter_id)
             return self._cache[adapter_id]
         self.misses += 1
+
         # a concurrent re-put replaces the directory with two renames;
-        # retry absorbs the instant where neither payload is in place
-        d = None
-        for attempt in range(3):
-            if self.exists(adapter_id):
-                try:
-                    d = delta_lib.load_delta(self.path(adapter_id))
-                    break
-                except FileNotFoundError:
-                    pass
-            time.sleep(0.01 * (attempt + 1))
-        if d is None:
-            raise KeyError(f"adapter {adapter_id!r} not in registry "
-                           f"{self.root}")
+        # raising AdapterReadError for the missing-DONE instant makes
+        # that window retryable like any other transient, and checksum
+        # corruption (AdapterCorruptError) retries the same way
+        def _read():
+            if not self.exists(adapter_id):
+                raise AdapterReadError(
+                    f"adapter {adapter_id!r} has no committed payload "
+                    f"under {self.root}")
+            return delta_lib.load_delta(self.path(adapter_id))
+
+        def _count(attempt, exc):
+            self.retried_reads += 1
+
+        try:
+            d = read_with_retry(_read, adapter_id,
+                                retries=self.read_retries,
+                                backoff_ms=self.retry_backoff_ms,
+                                fault_hook=self.fault_hook,
+                                on_retry=_count)
+        except AdapterReadError:
+            if not self.exists(adapter_id):   # genuinely absent, not torn
+                raise KeyError(f"adapter {adapter_id!r} not in registry "
+                               f"{self.root}") from None
+            raise
         self._cache[adapter_id] = d
         self._evict_locked()
         return d
@@ -159,17 +214,40 @@ class AdapterRegistry:
             return {"hits": self.hits, "misses": self.misses,
                     "evictions": self.evictions,
                     "resident": len(self._cache),
+                    "retried_reads": self.retried_reads,
                     "pinned": sum(1 for v in self._refs.values() if v)}
 
 
 class InMemoryRegistry:
     """Registry-shaped wrapper over a plain ``{id: SparseDelta}`` dict —
-    lets tests and examples drive the multi-tenant server without disk."""
+    lets tests and examples drive the multi-tenant server without disk.
+    Carries the same fault-injectable, retrying read path as
+    ``AdapterRegistry`` (no backoff sleep by default — tests stay fast)
+    so FaultPlan ``adapter_read_error`` legs work against it too."""
 
-    def __init__(self, deltas: Optional[Dict[str, SparseDelta]] = None):
+    def __init__(self, deltas: Optional[Dict[str, SparseDelta]] = None,
+                 *, read_retries: int = 3,
+                 retry_backoff_ms: float = 0.0):
         self._deltas = dict(deltas or {})
         self._refs: Dict[str, int] = {}
         self._versions: Dict[str, int] = {}
+        self.fault_hook = None
+        self.read_retries = int(read_retries)
+        self.retry_backoff_ms = float(retry_backoff_ms)
+        self.retried_reads = 0
+
+    def _read(self, adapter_id: str) -> SparseDelta:
+        if adapter_id not in self._deltas:
+            raise KeyError(adapter_id)        # real absence: no retry
+
+        def _count(attempt, exc):
+            self.retried_reads += 1
+
+        return read_with_retry(
+            lambda: self._deltas[adapter_id], adapter_id,
+            retries=self.read_retries,
+            backoff_ms=self.retry_backoff_ms,
+            fault_hook=self.fault_hook, on_retry=_count)
 
     def put(self, adapter_id: str, d: SparseDelta):
         self._deltas[adapter_id] = d
@@ -185,11 +263,12 @@ class InMemoryRegistry:
         return sorted(self._deltas)
 
     def get(self, adapter_id: str) -> SparseDelta:
-        return self._deltas[adapter_id]
+        return self._read(adapter_id)
 
     def acquire(self, adapter_id: str) -> SparseDelta:
+        d = self._read(adapter_id)
         self._refs[adapter_id] = self._refs.get(adapter_id, 0) + 1
-        return self._deltas[adapter_id]
+        return d
 
     def release(self, adapter_id: str):
         assert self._refs.get(adapter_id, 0) > 0
@@ -197,3 +276,8 @@ class InMemoryRegistry:
 
     def refcount(self, adapter_id: str) -> int:
         return self._refs.get(adapter_id, 0)
+
+    def stats(self) -> Dict[str, int]:
+        return {"resident": len(self._deltas),
+                "retried_reads": self.retried_reads,
+                "pinned": sum(1 for v in self._refs.values() if v)}

@@ -19,6 +19,18 @@ the same ``--config path.json`` / ``--save-config`` round-trip as
 Chrome/Perfetto trace — one process (pid) per replica, each with its
 own tenant/sched/cache lanes, plus the router's ``route``/``shed``
 instants; validated in CI by ``tools/check_trace.py --require-fleet``.
+
+ElasticFleet chaos drills: ``--fault-plan`` injects a deterministic
+fault schedule (``kill:replica1@round6``, ``wedge:replica0@round5``,
+``slow:replica1@round3:3x``, ``adapter_read_error:n=2``;
+``;``-separated) seeded by ``--fault-seed``.  A killed or wedged
+replica is fenced and its work fails over with zero loss;
+``--replace-after-fence`` grows a fresh replica to take its place.
+``--assert-parity`` re-serves the same requests on a fault-free
+single replica afterwards and hard-asserts every token stream is
+bit-identical — the CI chaos-smoke gate (with ``tools/check_trace.py
+--require-failover`` on the merged trace).  Ctrl-C drains in-flight
+work gracefully before flushing stats and traces.
 """
 from __future__ import annotations
 
@@ -61,6 +73,22 @@ def main(argv=None):
                          "home backlog reaches this many requests "
                          "(0 = 2x batch slots)")
     add_serve_config_flags(ap)
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="deterministic fault injection, ';'-separated "
+                         "(e.g. 'kill:replica1@round6', "
+                         "'wedge:replica0@round5', "
+                         "'slow:replica1@round3:3x', "
+                         "'adapter_read_error:n=2')")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for probabilistic fault specs (p=...)")
+    ap.add_argument("--replace-after-fence", action="store_true",
+                    help="grow a fresh replica whenever one is fenced "
+                         "(fleet.replace_after_fence)")
+    ap.add_argument("--assert-parity", action="store_true",
+                    help="after the run, re-serve the same requests on "
+                         "a fault-free single replica and hard-assert "
+                         "bit-identical token streams (chaos-smoke "
+                         "gate)")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="write ONE merged Chrome/Perfetto trace: one "
                          "pid per replica + the router lane "
@@ -79,8 +107,9 @@ def main(argv=None):
     from repro.configs import base as config_base
     from repro.launch.train import reduce_config
     from repro.models import model as model_lib
+    from repro.runtime.elastic import FaultPlan
     from repro.runtime.fleet import Router
-    from repro.runtime.serve_loop import Request
+    from repro.runtime.serve_loop import DecodeServer, Request
 
     cfg = config_base.get_config(args.arch)
     if args.reduce:
@@ -96,11 +125,21 @@ def main(argv=None):
         print(f"tenants: base + {len(ids)} demo adapter(s) {ids}")
 
     serve_cfg = serve_config_from_args(args)
+    if args.replace_after_fence:
+        from dataclasses import replace as _dc
+        serve_cfg = _dc(serve_cfg, fleet=_dc(serve_cfg.fleet,
+                                             replace_after_fence=True))
+    plan = FaultPlan.parse(args.fault_plan, seed=args.fault_seed)
     router = Router(cfg, params, serve_cfg, replicas=args.replicas,
                     registry=registry, trace=bool(args.trace),
-                    spill_depth=args.spill_depth or None)
+                    spill_depth=args.spill_depth or None,
+                    fault_plan=plan)
     homes = {str(t): router.home(t) for t in tenants}
     print(f"fleet: {args.replicas} replica(s); tenant homes {homes}")
+    if plan:
+        print(f"fault plan: {args.fault_plan!r} (seed {args.fault_seed},"
+              f" replace_after_fence="
+              f"{serve_cfg.fleet.replace_after_fence})")
 
     rng = np.random.default_rng(args.seed)
     mix = zipf_tenant_mix(tenants, args.requests, rng, alpha=args.zipf)
@@ -116,7 +155,21 @@ def main(argv=None):
 
     import time
     t0 = time.monotonic()
-    rounds = router.run_until_drained()
+    try:
+        rounds = router.run_until_drained()
+    except KeyboardInterrupt:
+        # graceful drain: finish in-flight work, then flush stats and
+        # the merged trace as usual so the partial run stays inspectable
+        pending = sum(r.depth() for r in router.replicas.values())
+        print(f"\ninterrupted at round {router.rounds}: draining "
+              f"{pending} in-flight request(s) before exit "
+              f"(^C again to abort the drain)")
+        try:
+            rounds = router.run_until_drained()
+        except KeyboardInterrupt:
+            rounds = router.rounds
+            print("drain aborted; stats and trace below reflect the "
+                  "partial run")
     dt = time.monotonic() - t0
     s = router.stats()
     f = s["fleet"]
@@ -128,6 +181,21 @@ def main(argv=None):
     print(f"routing: {f['routed_home']} home / {f['spills']} spilled / "
           f"{f['sheds']} shed; swaps {f['swaps']} "
           f"({f['swap_bytes'] / 2 ** 20:.2f} MiB)")
+    if f["fenced_replicas"]:
+        for name, reason in f["fenced_replicas"].items():
+            print(f"fenced: {name} ({reason})")
+        for rec in f["recoveries"]:
+            print(f"  recovery: {rec['replica']} at round "
+                  f"{rec['round']} — {rec['requeued']} requeued, "
+                  f"{rec['replayed']} replayed, recovered in "
+                  f"{rec['rounds']} round(s)")
+    if plan:
+        print(f"faults injected: {plan.injected}; registry retried "
+              f"reads: {getattr(registry, 'retried_reads', 0)}")
+    if f["health"]:
+        print("health: " + ", ".join(
+            f"{n}={h['state']} (ema {h['ema_ms']}ms)"
+            for n, h in sorted(f["health"].items())))
     if registry is not None and serve_cfg.sched.cache_bytes > 0:
         print(f"cross-replica capture: {f['peer_hits']} peer hit(s), "
               f"{f['xrep_bytes'] / 2 ** 20:.3f} MiB shared vs "
@@ -141,10 +209,28 @@ def main(argv=None):
         print(f"  {n}: {p['sched']['finished']} finished, "
               f"{p['decode']['steps']} steps, "
               f"{p['sched']['swaps']} swaps")
+    if args.assert_parity:
+        served = [r for r in reqs if r not in shed]
+        ref_srv = DecodeServer(cfg, params, serve_cfg, registry=registry)
+        ref_reqs = [Request(rid=r.rid, prompt=r.prompt,
+                            max_new_tokens=args.new_tokens,
+                            adapter_id=r.adapter_id) for r in served]
+        for r in ref_reqs:
+            ref_srv.submit(r)
+        ref_srv.run_until_drained()
+        ref = {r.rid: r.out for r in ref_reqs}
+        for r in served:
+            assert r.done, f"req {r.rid} was lost by the fleet"
+            assert r.out == ref[r.rid], (
+                f"req {r.rid} diverged from the fault-free reference: "
+                f"{r.out} != {ref[r.rid]}")
+        print(f"parity: {len(served)} stream(s) bit-identical to the "
+              f"fault-free single-replica reference")
     if args.trace:
         p = router.write_trace(args.trace)
-        n_ev = len(router.tracer) + sum(len(r.tracer) for r in
-                                        router.replicas.values())
+        n_ev = len(router.tracer) + sum(
+            len(r.tracer) for _, r in router._all_replicas()
+            if r.tracer is not None)
         print(f"trace: {n_ev} events -> {p}")
     return reqs
 

@@ -287,8 +287,22 @@ def main(argv=None):
             print(f"-- metrics @ decode step {s.steps} --")
             print(s.metrics.dump_text(), flush=True)
 
+    on_step = _periodic if args.metrics_every else None
     t0 = time.monotonic()
-    srv.run_until_drained(on_step=_periodic if args.metrics_every else None)
+    try:
+        srv.run_until_drained(on_step=on_step)
+    except KeyboardInterrupt:
+        # graceful drain: finish the in-flight work, then fall through
+        # to the normal stats/trace flush so nothing observed is lost
+        pending = sum(1 for r in reqs if not r.done)
+        print(f"\ninterrupted at decode step {srv.steps}: draining "
+              f"{pending} in-flight request(s) before exit "
+              f"(^C again to abort the drain)")
+        try:
+            srv.run_until_drained(on_step=on_step)
+        except KeyboardInterrupt:
+            print("drain aborted; stats and trace below reflect the "
+                  "partial run")
     dt = time.monotonic() - t0
     tok = sum(len(r.out) for r in reqs)
     print(f"served {len(reqs)} requests, {tok} tokens in {dt:.2f}s "

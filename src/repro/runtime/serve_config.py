@@ -12,7 +12,9 @@ JSON-round-trippable dataclass tree:
 - ``KVConfig``     — KV-cache layout (dense vs paged, page geometry,
   prefix sharing),
 - ``SpecConfig``   — self-speculative decoding (draft length,
-  adaptive backoff).
+  adaptive backoff),
+- ``FleetConfig``  — fleet routing/elasticity (ring vnodes, spill
+  depth, replica health thresholds, registry read retries).
 
 Why a config object and not kwargs: the FleetServe router replicates a
 server N times and must *describe* what it is replicating — a frozen
@@ -107,6 +109,45 @@ class SpecConfig:
 
 
 @dataclass(frozen=True)
+class FleetConfig:
+    """Fleet routing, elasticity and failure-tolerance knobs
+    (``runtime/fleet.py`` + ``runtime/elastic.py``).
+
+    Health: ``ReplicaHealth`` keeps a per-replica EMA of round step
+    time; a replica past ``slow_threshold`` x the fleet median EMA
+    (after ``warmup_rounds`` observed rounds) is flagged a straggler,
+    and one that makes no progress for ``wedge_rounds`` consecutive
+    rounds while holding work is **fenced** (removed from the ring,
+    its requests replayed on peers).  ``spill_depth=0`` and
+    ``vnodes`` mirror the pre-config Router kwargs.  ``read_retries``
+    / ``retry_backoff_ms`` bound the retry-with-backoff wrapper around
+    transient adapter-registry reads.  ``replace_after_fence`` spawns a
+    fresh replica for every fenced one (the kill-and-replace drill).
+    """
+    vnodes: int = 64
+    spill_depth: int = 0              # 0 = auto (2x batch_slots)
+    ema_alpha: float = 0.3
+    slow_threshold: float = 3.0       # x fleet-median step-time EMA
+    wedge_rounds: int = 3
+    warmup_rounds: int = 2
+    read_retries: int = 3
+    retry_backoff_ms: float = 5.0
+    replace_after_fence: bool = False
+
+    def __post_init__(self):
+        _check(self.vnodes >= 1, "vnodes must be >= 1")
+        _check(self.spill_depth >= 0, "spill_depth must be >= 0 (0=auto)")
+        _check(0.0 < self.ema_alpha <= 1.0,
+               "ema_alpha must be in (0, 1]")
+        _check(self.slow_threshold > 1.0, "slow_threshold must be > 1")
+        _check(self.wedge_rounds >= 1, "wedge_rounds must be >= 1")
+        _check(self.warmup_rounds >= 0, "warmup_rounds must be >= 0")
+        _check(self.read_retries >= 1, "read_retries must be >= 1")
+        _check(self.retry_backoff_ms >= 0,
+               "retry_backoff_ms must be >= 0")
+
+
+@dataclass(frozen=True)
 class ServeConfig:
     """The full serving configuration — the unit a fleet replicates."""
     batch_slots: int = 4
@@ -116,6 +157,7 @@ class ServeConfig:
     sched: SchedConfig = field(default_factory=SchedConfig)
     kv: KVConfig = field(default_factory=KVConfig)
     spec: SpecConfig = field(default_factory=SpecConfig)
+    fleet: FleetConfig = field(default_factory=FleetConfig)
 
     def __post_init__(self):
         _check(self.batch_slots >= 1, "batch_slots must be >= 1")
@@ -128,6 +170,8 @@ class ServeConfig:
             object.__setattr__(self, "kv", KVConfig(**self.kv))
         if isinstance(self.spec, dict):
             object.__setattr__(self, "spec", SpecConfig(**self.spec))
+        if isinstance(self.fleet, dict):
+            object.__setattr__(self, "fleet", FleetConfig(**self.fleet))
 
     # ------------------------------------------------------------------ #
     # serialization
@@ -153,7 +197,8 @@ class ServeConfig:
         known = {f.name for f in dataclasses.fields(cls)}
         unknown = set(d) - known
         _check(not unknown, f"unknown ServeConfig keys: {sorted(unknown)}")
-        sub = {"sched": SchedConfig, "kv": KVConfig, "spec": SpecConfig}
+        sub = {"sched": SchedConfig, "kv": KVConfig, "spec": SpecConfig,
+               "fleet": FleetConfig}
         kw = {}
         for k, v in d.items():
             if k in sub and isinstance(v, dict):

@@ -113,6 +113,46 @@ class Request:
     finish_step: int = -1       # decode-step clock at completion
     submit_ns: int = -1         # monotonic clock at submit() (tracing)
 
+    def replay_clone(self, rid: int) -> "Request":
+        """Failover replay of this (in-flight) request on a peer
+        replica: the clone's prompt is the retained prompt plus every
+        token already streamed, its budget the remaining tokens.
+        Greedy decode is a deterministic function of the prefix, so the
+        clone's continuation is bit-identical to what an uninterrupted
+        run would have emitted next.
+
+        Stream splice: the clone's ``on_token`` forwards each token
+        into THIS request's ``out``/``on_token``, **deduplicated at the
+        emitted-token watermark** — the clone's k-th token occupies
+        stream position ``watermark + k`` and is dropped if the
+        original already holds it (e.g. a fenced-but-not-dead replica
+        raced one more step in) — so downstream consumers observe every
+        stream position exactly once, in order, fault or no fault.
+        When the clone finishes, completion is propagated back by the
+        failover driver (``Router.step``), not here."""
+        watermark = len(self.out)
+        remaining = self.max_new_tokens - watermark
+        assert remaining > 0, \
+            f"request {self.rid} already emitted its full budget"
+        prompt = np.asarray(self.prompt).ravel()
+        if watermark:
+            prompt = np.concatenate(
+                [prompt, np.asarray(self.out, prompt.dtype)])
+        clone = Request(rid=rid, prompt=prompt,
+                        max_new_tokens=remaining,
+                        adapter_id=self.adapter_id, slo_ms=self.slo_ms)
+
+        def _forward(tok: int, _orig=self, _clone=clone,
+                     _base=watermark) -> None:
+            pos = _base + len(_clone.out) - 1   # out appended pre-callback
+            if len(_orig.out) == pos:           # watermark dedup
+                _orig.out.append(tok)
+                if _orig.on_token is not None:
+                    _orig.on_token(tok)
+
+        clone.on_token = _forward
+        return clone
+
 
 def _lane(adapter_id: Optional[str]) -> str:
     """One trace lane per tenant; the base model gets its own."""

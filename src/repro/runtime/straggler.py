@@ -31,6 +31,23 @@ class StragglerConfig:
     action: str = "skip_data"     # skip_data | checkpoint_and_exit | none
 
 
+def ema_update(ema: Optional[float], sample: float,
+               alpha: float) -> float:
+    """One exponential-moving-average step (first sample seeds it)."""
+    return sample if ema is None else alpha * sample + (1 - alpha) * ema
+
+
+def flagged_vs_median(ema: float, fleet_emas: List[float],
+                      threshold: float) -> bool:
+    """The fleet-median straggler rule, shared by this monitor and the
+    serve-side ``ReplicaHealth`` (runtime/elastic.py): flagged when the
+    host's EMA exceeds ``threshold`` x the fleet median.  A single host
+    (or all-equal EMAs) can never be flagged — its EMA IS the median
+    and ``threshold > 1``."""
+    med = sorted(fleet_emas)[len(fleet_emas) // 2]
+    return ema > threshold * max(med, 1e-9)
+
+
 class StragglerMonitor:
     def __init__(self, cfg: StragglerConfig = StragglerConfig(),
                  num_hosts: int = 1, host_id: int = 0):
@@ -48,14 +65,13 @@ class StragglerMonitor:
     def step_end(self, fleet_emas: Optional[List[float]] = None) -> str:
         """Returns the action to take: 'none' | 'skip_data' | 'evict'."""
         dt = time.monotonic() - self._t0
-        self.ema = dt if self.ema is None else (
-            self.cfg.ema_alpha * dt + (1 - self.cfg.ema_alpha) * self.ema)
+        self.ema = ema_update(self.ema, dt, self.cfg.ema_alpha)
         self.steps += 1
         if self.steps < self.cfg.warmup_steps:
             return "none"
         emas = fleet_emas if fleet_emas is not None else [self.ema]
-        med = sorted(emas)[len(emas) // 2]
-        self.flagged = self.ema > self.cfg.threshold * max(med, 1e-9)
+        self.flagged = flagged_vs_median(self.ema, emas,
+                                         self.cfg.threshold)
         if not self.flagged or self.cfg.action == "none":
             return "none"
         if self.cfg.action == "skip_data":

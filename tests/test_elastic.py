@@ -1,0 +1,506 @@
+"""ElasticFleet: fault-plan parsing, replica health, fencing/failover
+with bit-identical stream replay, runtime membership changes, and the
+rich drain-exhaustion diagnostics.
+
+The chaos legs all follow one shape: serve a fixed request set on a
+fault-free single replica (the reference streams), then again on a
+fleet with an injected FaultPlan — every submitted request must finish
+with an identical token stream, nothing shed, nothing lost."""
+import numpy as np
+import pytest
+
+from repro.adapters import InMemoryRegistry, extract_delta
+from repro.adapters.testing import perturb_rows
+from repro.runtime.elastic import (FaultPlan, ReplicaHealth, ReplicaKilled)
+from repro.runtime.fleet import Router
+from repro.runtime.serve_config import FleetConfig, SchedConfig, ServeConfig
+from repro.runtime.serve_loop import DecodeServer, Request
+
+
+# --------------------------------------------------------------------- #
+# fixtures / helpers
+# --------------------------------------------------------------------- #
+
+
+def _registry(params, ids, seed=100):
+    deltas = {}
+    for i, aid in enumerate(ids):
+        tuned = perturb_rows(params, rows=(i % 4, (i + 2) % 4),
+                             scale=0.5 + 0.1 * i, seed=seed + i)
+        deltas[aid] = extract_delta(params, tuned,
+                                    meta={"adapter_id": aid})
+    return InMemoryRegistry(deltas)
+
+
+def _requests(cfg, tenancy, new_tokens=4, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size,
+                                               3 + i % 3),
+                    max_new_tokens=new_tokens, adapter_id=t, **kw)
+            for i, t in enumerate(tenancy)]
+
+
+def _fleet_cfg(fleet=None, **sched_kw):
+    return ServeConfig(batch_slots=2, max_seq=64,
+                       sched=SchedConfig(steps_per_turn=2, **sched_kw),
+                       fleet=fleet if fleet is not None else FleetConfig())
+
+
+def _reference_streams(cfg, params, registry, tenancy, serve_cfg,
+                       new_tokens=4):
+    """Fault-free single-replica run: the parity oracle."""
+    reqs = _requests(cfg, tenancy, new_tokens=new_tokens)
+    srv = DecodeServer(cfg, params, serve_cfg, registry=registry)
+    for r in reqs:
+        srv.submit(r)
+    srv.run_until_drained()
+    return {r.rid: tuple(r.out) for r in reqs}
+
+
+def _busiest(router):
+    """The replica with the deepest backlog — a fault target that is
+    guaranteed to be mid-work when the fault fires."""
+    return max(router.replicas, key=lambda n: router.replicas[n].depth())
+
+
+TENANCY = ["A", "B", None, "C", "A", "B", "C", None, "A", "B", "C", "A"]
+
+
+# --------------------------------------------------------------------- #
+# FaultPlan parsing + schedule
+# --------------------------------------------------------------------- #
+
+
+def test_fault_plan_parse_specs():
+    plan = FaultPlan.parse("kill:replica1@round12; wedge:replica0@round5;"
+                           "slow:replica2@round3:3x;adapter_read_error:n=2")
+    kinds = [s.kind for s in plan.specs]
+    assert kinds == ["kill", "wedge", "slow", "adapter_read_error"]
+    assert plan.specs[0].target == "replica1" and plan.specs[0].round == 12
+    assert plan.specs[2].factor == 3.0
+    assert plan.specs[3].count == 2
+    assert bool(plan)
+    assert not FaultPlan.parse(None) and not FaultPlan.parse("  ")
+
+
+@pytest.mark.parametrize("bad", [
+    "explode:replica0@round1",          # unknown kind
+    "kill:replica0",                    # missing round
+    "slow:replica0@round1",             # slow needs a factor
+    "slow:replica0@round1:1x",          # factor must exceed 1
+    "kill:replica0@round1:2x",          # only slow takes a factor
+    "adapter_read_error:k=3",           # unknown knob
+])
+def test_fault_plan_rejects_malformed(bad):
+    with pytest.raises(ValueError):
+        FaultPlan.parse(bad)
+
+
+def test_fault_plan_kill_fires_once_at_round():
+    plan = FaultPlan.parse("kill:replica1@round3")
+    assert plan.action("replica1", 2) == "run"      # before the round
+    assert plan.action("replica0", 3) == "run"      # wrong replica
+    assert plan.action("replica1", 3) == "kill"
+    assert plan.action("replica1", 4) == "run"      # kill is one-shot
+    assert plan.injected["kill"] == 1
+
+
+def test_fault_plan_wedge_persists_and_slow_stalls():
+    plan = FaultPlan.parse("wedge:replica0@round2;slow:replica1@round0:3x")
+    assert all(plan.action("replica0", r) == "wedge" for r in (2, 3, 9))
+    # 3x slow: one real step every 3rd round
+    acts = [plan.action("replica1", r) for r in range(6)]
+    assert acts == ["run", "stall", "stall", "run", "stall", "stall"]
+    # synthetic clock: slowed replica reports factor x the 1ms base
+    assert plan.step_ms("replica1", 4, 0.0) == 3.0
+    assert plan.step_ms("replica0", 4, 0.0) == 1.0
+
+
+def test_fault_plan_read_hook_counts_down():
+    from repro.adapters.registry import AdapterReadError
+    plan = FaultPlan.parse("adapter_read_error:n=2")
+    for _ in range(2):
+        with pytest.raises(AdapterReadError):
+            plan.read_hook("A")
+    plan.read_hook("A")                             # budget exhausted
+    assert plan.injected["read_error"] == 2
+
+
+# --------------------------------------------------------------------- #
+# ReplicaHealth
+# --------------------------------------------------------------------- #
+
+
+def test_health_single_replica_never_slow():
+    h = ReplicaHealth(FleetConfig(warmup_rounds=1))
+    for _ in range(6):
+        h.observe("r0", step_ms=100.0, progressed=True)
+    assert h.assess() == {"r0": "ok"}   # its own EMA IS the median
+
+
+def test_health_flags_slow_after_warmup_only():
+    cfg = FleetConfig(warmup_rounds=3, slow_threshold=2.0, ema_alpha=1.0)
+    h = ReplicaHealth(cfg)
+    for rnd in range(4):
+        for name, ms in (("r0", 1.0), ("r1", 1.0), ("r2", 10.0)):
+            h.observe(name, step_ms=ms, progressed=True)
+        states = h.assess()
+        if rnd + 1 < cfg.warmup_rounds:
+            assert states["r2"] == "ok"        # warmup suppresses slow
+        else:
+            assert states["r2"] == "slow"
+            assert states["r0"] == states["r1"] == "ok"
+    assert h.snapshot()["r2"]["slow_flags"] >= 1
+
+
+def test_health_wedge_needs_consecutive_no_progress():
+    cfg = FleetConfig(wedge_rounds=3)
+    h = ReplicaHealth(cfg)
+    for _ in range(2):
+        h.observe("r0", progressed=False, has_work=True)
+    h.observe("r0", progressed=True, has_work=True)   # progress resets
+    for _ in range(2):
+        h.observe("r0", progressed=False, has_work=True)
+    assert h.assess()["r0"] == "ok"
+    h.observe("r0", progressed=False, has_work=True)  # 3rd consecutive
+    assert h.assess()["r0"] == "wedged"
+    # idle rounds (no work) neither accumulate nor reset
+    h2 = ReplicaHealth(cfg)
+    for _ in range(2):
+        h2.observe("r1", progressed=False, has_work=True)
+    h2.observe("r1", progressed=False, has_work=False)
+    h2.observe("r1", progressed=False, has_work=True)
+    assert h2.assess()["r1"] == "wedged"
+    h.forget("r0")
+    assert "r0" not in h.snapshot()
+
+
+# --------------------------------------------------------------------- #
+# replay_clone: stream splice + watermark dedup
+# --------------------------------------------------------------------- #
+
+
+def test_replay_clone_splices_stream_exactly_once():
+    streamed = []
+    orig = Request(rid=1, prompt=np.array([1, 2, 3], np.int32),
+                   max_new_tokens=5, on_token=streamed.append)
+    orig.out.extend([7, 8])            # two tokens already emitted
+    clone = orig.replay_clone(rid=1000)
+    assert clone.prompt.tolist() == [1, 2, 3, 7, 8]
+    assert clone.max_new_tokens == 3
+    # clone emits like DecodeServer._emit: append, then callback
+    for t in (9, 10):
+        clone.out.append(t)
+        clone.on_token(t)
+    assert orig.out == [7, 8, 9, 10]
+    assert streamed == [9, 10]         # only post-watermark tokens stream
+
+
+def test_replay_clone_dedups_raced_token():
+    orig = Request(rid=1, prompt=np.array([1, 2], np.int32),
+                   max_new_tokens=4)
+    orig.out.append(5)
+    clone = orig.replay_clone(rid=1000)
+    orig.out.append(6)                 # fenced replica raced one step in
+    clone.out.append(6)                # clone re-derives the same position
+    clone.on_token(6)
+    assert orig.out == [5, 6]          # watermark dedup: exactly once
+    clone.out.append(7)
+    clone.on_token(7)
+    assert orig.out == [5, 6, 7]
+
+
+def test_replay_clone_rejects_exhausted_request():
+    orig = Request(rid=1, prompt=np.array([1], np.int32), max_new_tokens=2)
+    orig.out.extend([3, 4])
+    with pytest.raises(AssertionError, match="full budget"):
+        orig.replay_clone(rid=2)
+
+
+# --------------------------------------------------------------------- #
+# chaos legs: every fault, zero lost, bit-identical streams
+# --------------------------------------------------------------------- #
+
+
+def test_kill_mid_flight_fails_over_bit_identical(tiny_cfg, tiny_params):
+    reg = _registry(tiny_params, ["A", "B", "C"])
+    cfg = _fleet_cfg(cache_bytes=1 << 24)
+    single = _reference_streams(tiny_cfg, tiny_params, reg, TENANCY, cfg)
+
+    reqs = _requests(tiny_cfg, TENANCY)
+    router = Router(tiny_cfg, tiny_params, cfg, replicas=2, registry=reg,
+                    spill_depth=2, trace=True)
+    for r in reqs:
+        assert router.submit(r) is not None
+    victim = _busiest(router)
+    router.faults = FaultPlan.parse(f"kill:{victim}@round2")
+    for _ in range(2):
+        router.step()
+    assert victim in router.replicas
+    router.run_until_drained()
+    assert victim in router.fenced
+    assert router.fenced[victim] == "killed"
+    assert all(r.done for r in reqs), "failover lost a request"
+    assert {r.rid: tuple(r.out) for r in reqs} == single, \
+        "failover replay diverged from the fault-free streams"
+    s = router.stats()["fleet"]
+    assert s["fences"] == 1 and s["sheds"] == 0
+    assert s["failovers"] >= 1          # the victim was mid-decode
+    assert s["recover_rounds"] >= 1
+    assert any(rec["rounds"] is not None for rec in s["recoveries"])
+    # fence + failover made it into the trace (the check_trace gate)
+    names = {e.get("name") for e in router.trace_dict()["traceEvents"]}
+    assert {"fence", "failover"} <= names
+
+
+def test_kill_with_auto_replacement(tiny_cfg, tiny_params):
+    reg = _registry(tiny_params, ["A", "B", "C"])
+    cfg = _fleet_cfg(fleet=FleetConfig(replace_after_fence=True),
+                     cache_bytes=1 << 24)
+    single = _reference_streams(tiny_cfg, tiny_params, reg, TENANCY, cfg)
+    reqs = _requests(tiny_cfg, TENANCY)
+    router = Router(tiny_cfg, tiny_params, cfg, replicas=2, registry=reg,
+                    spill_depth=2)
+    for r in reqs:
+        router.submit(r)
+    victim = _busiest(router)
+    router.faults = FaultPlan.parse(f"kill:{victim}@round2")
+    router.run_until_drained()
+    assert len(router.replicas) == 2           # replacement joined
+    assert "replica2" in router.replicas
+    assert victim in router.fenced
+    assert all(r.done for r in reqs)
+    assert {r.rid: tuple(r.out) for r in reqs} == single
+
+
+def test_wedged_replica_is_fenced_and_replayed(tiny_cfg, tiny_params):
+    reg = _registry(tiny_params, ["A", "B", "C"])
+    cfg = _fleet_cfg(cache_bytes=1 << 24)
+    single = _reference_streams(tiny_cfg, tiny_params, reg, TENANCY, cfg)
+    reqs = _requests(tiny_cfg, TENANCY)
+    router = Router(tiny_cfg, tiny_params, cfg, replicas=2, registry=reg,
+                    spill_depth=2)
+    for r in reqs:
+        router.submit(r)
+    victim = _busiest(router)
+    router.faults = FaultPlan.parse(f"wedge:{victim}@round1")
+    router.run_until_drained()
+    assert router.fenced.get(victim) == "wedged"
+    assert all(r.done for r in reqs)
+    assert {r.rid: tuple(r.out) for r in reqs} == single
+    assert router.stats()["fleet"]["sheds"] == 0
+
+
+def test_slow_replica_flagged_not_fenced(tiny_cfg, tiny_params):
+    reg = _registry(tiny_params, ["A", "B", "C"])
+    # 2x slow alternates run/stall (no_progress never reaches
+    # wedge_rounds); a threshold of 1.5x median flags it
+    cfg = _fleet_cfg(fleet=FleetConfig(slow_threshold=1.5,
+                                       warmup_rounds=2),
+                     cache_bytes=1 << 24)
+    single = _reference_streams(tiny_cfg, tiny_params, reg, TENANCY, cfg,
+                                new_tokens=8)
+    reqs = _requests(tiny_cfg, TENANCY, new_tokens=8)
+    router = Router(tiny_cfg, tiny_params, cfg, replicas=3, registry=reg,
+                    spill_depth=2)
+    for r in reqs:
+        router.submit(r)
+    victim = _busiest(router)
+    router.faults = FaultPlan.parse(f"slow:{victim}@round0:2x")
+    router.run_until_drained()
+    s = router.stats()["fleet"]
+    assert s["stragglers_flagged"] >= 1
+    assert victim not in router.fenced          # slow is flag-only
+    assert all(r.done for r in reqs)
+    assert {r.rid: tuple(r.out) for r in reqs} == single
+
+
+def test_transient_adapter_read_errors_are_absorbed(tiny_cfg, tiny_params):
+    reg = _registry(tiny_params, ["A", "B", "C"])
+    cfg = _fleet_cfg(cache_bytes=1 << 24)
+    single = _reference_streams(tiny_cfg, tiny_params, reg, TENANCY, cfg)
+    reqs = _requests(tiny_cfg, TENANCY)
+    plan = FaultPlan.parse("adapter_read_error:n=2")
+    router = Router(tiny_cfg, tiny_params, cfg, replicas=2, registry=reg,
+                    spill_depth=2, fault_plan=plan)
+    for r in reqs:
+        router.submit(r)
+    router.run_until_drained()
+    assert plan.injected["read_error"] == 2
+    assert reg.retried_reads >= 2               # retry path absorbed them
+    assert router.fenced == {}                  # transient != failure
+    assert all(r.done for r in reqs)
+    assert {r.rid: tuple(r.out) for r in reqs} == single
+
+
+# --------------------------------------------------------------------- #
+# elastic membership
+# --------------------------------------------------------------------- #
+
+
+def test_add_replica_rebalances_and_precaptures_d2d(tiny_cfg, tiny_params):
+    ids = [f"t{i}" for i in range(12)]
+    reg = _registry(tiny_params, ids)
+    cfg = _fleet_cfg(cache_bytes=1 << 26)
+    router = Router(tiny_cfg, tiny_params, cfg, replicas=2, registry=reg)
+    # warm every tenant: its delta is HBM-resident on its home replica
+    warm = _requests(tiny_cfg, ids, new_tokens=2)
+    for r in warm:
+        router.submit(r)
+    router.run_until_drained()
+    resident_before = set(router.directory.adapters())
+    new = router.add_replica()
+    assert new == "replica2" and new in router.replicas
+    moved = [a for a in ids if router.home(a) == new]
+    assert moved, "ring resize should remap ~1/3 of 12 tenants"
+    # remapped tenants' resident rows were re-captured device-to-device:
+    # the newcomer holds them with ZERO host->device traffic
+    cache = router.replicas[new].server.cache.stats()
+    expected = [a for a in moved if a in resident_before]
+    assert cache["peer_hits"] >= len(expected) >= 1
+    assert cache["h2d_bytes"] == 0
+    for aid in expected:
+        assert new in router.directory.holders(aid)
+    assert router.stats()["fleet"]["ring_resizes"] == 1
+    # the grown fleet still serves bit-identically
+    single = _reference_streams(tiny_cfg, tiny_params, reg, ids, cfg,
+                                new_tokens=2)
+    reqs = _requests(tiny_cfg, ids, new_tokens=2)
+    for r in reqs:
+        router.submit(r)
+    router.run_until_drained()
+    assert {r.rid: tuple(r.out) for r in reqs} == single
+
+
+def test_add_replica_moves_queued_requests_home(tiny_cfg, tiny_params):
+    ids = [f"t{i}" for i in range(12)]
+    reg = _registry(tiny_params, ids)
+    router = Router(tiny_cfg, tiny_params, _fleet_cfg(), replicas=2,
+                    registry=reg, spill_depth=10 ** 6)
+    reqs = _requests(tiny_cfg, ids * 2, new_tokens=2)
+    for r in reqs:
+        router.submit(r)
+    new = router.add_replica()
+    moved_tenants = {a for a in ids if router.home(a) == new}
+    assert moved_tenants
+    # queued work of remapped tenants followed the ring to the newcomer
+    newcomer_queue = router.replicas[new].server.queue
+    assert newcomer_queue
+    assert all(q.adapter_id in moved_tenants for q in newcomer_queue)
+    for q in newcomer_queue:
+        assert router.routed_to(q.rid) == new
+    router.run_until_drained()
+    assert all(r.done for r in reqs)
+
+
+def test_remove_replica_drains_and_hands_off(tiny_cfg, tiny_params):
+    reg = _registry(tiny_params, ["A", "B", "C"])
+    cfg = _fleet_cfg(cache_bytes=1 << 24)
+    single = _reference_streams(tiny_cfg, tiny_params, reg, TENANCY, cfg)
+    reqs = _requests(tiny_cfg, TENANCY)
+    router = Router(tiny_cfg, tiny_params, cfg, replicas=3, registry=reg,
+                    spill_depth=2)
+    for r in reqs:
+        router.submit(r)
+    for _ in range(2):                 # mid-flight: slots are occupied
+        router.step()
+    victim = _busiest(router)
+    resident = router.directory.resident_ids(victim)
+    router.remove_replica(victim)
+    assert victim not in router.replicas
+    assert victim not in router.ring.nodes()
+    # resident adapters were handed to their new homes before the drop
+    for aid in resident:
+        holders = router.directory.holders(aid)
+        assert victim not in holders
+    router.run_until_drained()
+    assert all(r.done for r in reqs), "remove_replica lost a request"
+    assert {r.rid: tuple(r.out) for r in reqs} == single
+    s = router.stats()["fleet"]
+    assert s["replicas"] == 2 and s["ring_resizes"] == 1
+    # token roll-up stays complete after the replica left the stats
+    assert s["tokens"] == sum(len(r.out) - 1 for r in reqs)
+
+
+def test_remove_last_replica_refused(tiny_cfg, tiny_params):
+    router = Router(tiny_cfg, tiny_params, _fleet_cfg(), replicas=1)
+    with pytest.raises(RuntimeError, match="last replica"):
+        router.remove_replica("replica0")
+    with pytest.raises(RuntimeError, match="cannot fence last replica"):
+        router.fence("replica0", "killed")
+
+
+# --------------------------------------------------------------------- #
+# drain exhaustion diagnostics
+# --------------------------------------------------------------------- #
+
+
+def test_wedged_fleet_error_reports_per_replica_state(tiny_cfg,
+                                                      tiny_params):
+    reg = _registry(tiny_params, ["A"])
+    router = Router(tiny_cfg, tiny_params, _fleet_cfg(), replicas=1,
+                    registry=reg)
+    for r in _requests(tiny_cfg, ["A", "A"]):
+        router.submit(r)
+    # the only replica wedges; nothing can fence it -> the patience
+    # guard raises with the full per-replica picture
+    router.faults = FaultPlan.parse("wedge:replica0@round0")
+    with pytest.raises(RuntimeError) as ei:
+        router.run_until_drained()
+    msg = str(ei.value)
+    assert "fleet wedged" in msg and "no replica made progress" in msg
+    assert "replica0: queue=" in msg
+    assert "groups=['A']" in msg
+    assert "last_progress_round=" in msg
+
+
+def test_max_rounds_exhaustion_error_reports_context(tiny_cfg,
+                                                     tiny_params):
+    reg = _registry(tiny_params, ["A", "B"])
+    router = Router(tiny_cfg, tiny_params, _fleet_cfg(), replicas=2,
+                    registry=reg)
+    for r in _requests(tiny_cfg, ["A", "B"] * 4, new_tokens=8):
+        router.submit(r)
+    with pytest.raises(RuntimeError, match="not drained after "
+                                           "max_rounds=1") as ei:
+        router.run_until_drained(max_rounds=1)
+    assert "queue=" in str(ei.value)
+    assert "last_progress_round=" in str(ei.value)
+
+
+# --------------------------------------------------------------------- #
+# FleetConfig wiring
+# --------------------------------------------------------------------- #
+
+
+def test_fleet_config_roundtrip_and_rejection():
+    cfg = ServeConfig(fleet=FleetConfig(vnodes=32, wedge_rounds=5,
+                                        replace_after_fence=True))
+    assert ServeConfig.from_json(cfg.to_json()) == cfg
+    got = ServeConfig.from_dict({"fleet": {"wedge_rounds": 7}})
+    assert got.fleet.wedge_rounds == 7
+    assert got.fleet.vnodes == FleetConfig().vnodes
+    with pytest.raises(ValueError, match="unknown fleet keys"):
+        ServeConfig.from_dict({"fleet": {"bogus": 1}})
+
+
+def test_router_takes_knobs_from_fleet_config(tiny_cfg, tiny_params):
+    reg = InMemoryRegistry({})
+    cfg = _fleet_cfg(fleet=FleetConfig(vnodes=16, spill_depth=7,
+                                       read_retries=5,
+                                       retry_backoff_ms=0.0))
+    router = Router(tiny_cfg, tiny_params, cfg, replicas=2, registry=reg)
+    assert router.ring.vnodes == 16
+    assert router.spill_depth == 7
+    assert reg.read_retries == 5           # mirrored onto the registry
+    # explicit kwargs still win over the config section
+    router2 = Router(tiny_cfg, tiny_params, cfg, replicas=2,
+                     vnodes=8, spill_depth=3)
+    assert router2.ring.vnodes == 8 and router2.spill_depth == 3
+
+
+def test_replica_step_raises_replica_killed(tiny_cfg, tiny_params):
+    router = Router(tiny_cfg, tiny_params, _fleet_cfg(), replicas=2)
+    rep = router.replicas["replica0"]
+    with pytest.raises(ReplicaKilled):
+        rep.step(FaultPlan.parse("kill:replica0@round0"), 0)

@@ -1,0 +1,92 @@
+"""StragglerMonitor edge cases: the checkpoint_and_exit action and the
+fleet-median boundary conditions (single host, all-equal EMAs, warmup
+cutoff) that the serve-side ``ReplicaHealth`` inherits via the shared
+``ema_update`` / ``flagged_vs_median`` helpers."""
+import pytest
+
+from repro.runtime.straggler import (StragglerConfig, StragglerMonitor,
+                                     ema_update, flagged_vs_median)
+
+
+def _timed_step(mon, dt, fleet_emas=None):
+    """One monitored step whose wall time is forced to ``dt`` seconds
+    (the tests inject timings instead of sleeping)."""
+    import time
+    mon.step_begin()
+    mon._t0 = time.monotonic() - dt
+    return mon.step_end(fleet_emas=fleet_emas)
+
+
+# --------------------------------------------------------------------- #
+# shared helpers
+# --------------------------------------------------------------------- #
+
+
+def test_ema_update_seeds_then_blends():
+    assert ema_update(None, 4.0, alpha=0.1) == 4.0   # first sample seeds
+    assert ema_update(4.0, 8.0, alpha=0.5) == pytest.approx(6.0)
+    assert ema_update(4.0, 8.0, alpha=0.0) == pytest.approx(4.0)
+
+
+def test_flagged_vs_median_upper_median_and_threshold_edge():
+    # even-sized fleet: index len//2 picks the UPPER middle value
+    assert not flagged_vs_median(4.0, [1.0, 4.0], threshold=2.0)
+    assert flagged_vs_median(4.0, [1.0, 1.0, 4.0], threshold=2.0)
+    # strictly-greater rule: exactly threshold x median is NOT flagged
+    assert not flagged_vs_median(2.0, [1.0, 1.0, 1.0], threshold=2.0)
+    assert flagged_vs_median(2.0 + 1e-9, [1.0, 1.0, 1.0], threshold=2.0)
+    # degenerate zero median is clamped, not divided by
+    assert flagged_vs_median(1.0, [0.0, 0.0, 0.0], threshold=2.0)
+
+
+def test_single_host_never_flagged():
+    mon = StragglerMonitor(StragglerConfig(warmup_steps=1))
+    for _ in range(8):
+        # no fleet_emas: own EMA is the whole fleet, hence the median
+        assert _timed_step(mon, 5.0) == "none"
+    assert not mon.flagged
+
+
+def test_all_equal_emas_never_flag():
+    mon = StragglerMonitor(StragglerConfig(warmup_steps=1, ema_alpha=1.0))
+    for _ in range(5):
+        act = _timed_step(mon, 2.0, fleet_emas=[2.0, 2.0, 2.0, 2.0])
+        assert act == "none"
+    assert not mon.flagged
+
+
+def test_warmup_boundary_is_exact():
+    cfg = StragglerConfig(warmup_steps=3, ema_alpha=1.0, threshold=2.0)
+    mon = StragglerMonitor(cfg)
+    slow_fleet = [0.01, 0.01, 0.01, 0.01]
+    # steps 1 and 2 are inside warmup: flag suppressed no matter what
+    assert _timed_step(mon, 1.0, slow_fleet) == "none"
+    assert _timed_step(mon, 1.0, slow_fleet) == "none"
+    assert not mon.flagged
+    # step 3 == warmup_steps: evaluation starts exactly here
+    assert _timed_step(mon, 1.0, slow_fleet) == "skip_data"
+    assert mon.flagged
+
+
+def test_checkpoint_and_exit_returns_evict():
+    cfg = StragglerConfig(warmup_steps=1, ema_alpha=1.0,
+                          action="checkpoint_and_exit")
+    mon = StragglerMonitor(cfg)
+    assert _timed_step(mon, 1.0, fleet_emas=[0.01] * 4) == "evict"
+    assert mon.flagged
+
+
+def test_action_none_suppresses_mitigation_but_still_flags():
+    cfg = StragglerConfig(warmup_steps=1, ema_alpha=1.0, action="none")
+    mon = StragglerMonitor(cfg)
+    assert _timed_step(mon, 1.0, fleet_emas=[0.01] * 4) == "none"
+    assert mon.flagged          # detection still runs; mitigation off
+
+
+def test_recovered_host_unflags():
+    cfg = StragglerConfig(warmup_steps=1, ema_alpha=1.0, threshold=2.0)
+    mon = StragglerMonitor(cfg)
+    assert _timed_step(mon, 1.0, fleet_emas=[0.01] * 4) == "skip_data"
+    # back to fleet speed: EMA (alpha=1) tracks instantly, flag clears
+    assert _timed_step(mon, 0.01, fleet_emas=[0.01] * 4) == "none"
+    assert not mon.flagged

@@ -30,8 +30,12 @@ It runs the serving benchmarks in quick mode:
   fleet_tps_per_round_2 (aggregate tokens per fleet round at 2
   replicas), fleet_tps_speedup_2x / _4x (vs single-replica; the bench
   hard-asserts >= 1.8x at 2 replicas with bit-identical per-tenant
-  streams), fleet_p99_latency_rounds, and fleet_xrep_bytes (device
-  bytes captured cross-replica instead of re-promoted from disk),
+  streams), fleet_p99_latency_rounds, fleet_xrep_bytes (device
+  bytes captured cross-replica instead of re-promoted from disk), and
+  the ElasticFleet recovery leg: fleet_recover_rounds (rounds from a
+  mid-run replica kill to its last replayed request completing — the
+  bench hard-asserts zero lost requests and stream parity) and
+  fleet_fault_shed (requests shed during failover; baseline 0),
 
 and compares every metric against ``benchmarks/serve_baselines.json``
 with a relative tolerance band.  Each metric has an orientation: moving
@@ -86,6 +90,8 @@ ORIENTATION = {
     "fleet_tps_speedup_4x": "higher",
     "fleet_p99_latency_rounds": "lower",
     "fleet_xrep_bytes": "lower",
+    "fleet_recover_rounds": "lower",
+    "fleet_fault_shed": "lower",
 }
 
 
@@ -104,6 +110,8 @@ def collect_metrics() -> dict:
         "fleet_tps_speedup_4x": float(fleet["tps_speedup_4x"]),
         "fleet_p99_latency_rounds": float(fleet["p99_latency_rounds"]),
         "fleet_xrep_bytes": float(fleet["xrep_bytes"]),
+        "fleet_recover_rounds": float(fleet["recover_rounds"]),
+        "fleet_fault_shed": float(fleet["fault_shed"]),
         "prefill_dispatch_ratio": float(
             decode["prefill_dispatch_ratio"]),
         "decode_bytes_ratio": float(decode["decode_bytes_ratio"]),

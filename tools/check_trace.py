@@ -47,6 +47,7 @@ SWAP_SPANS = ("swap_apply", "swap_revert")
 PAGING_EVENTS = ("page_alloc", "page_free", "cow_split", "prefix_share")
 SPEC_SPANS = ("spec_draft", "spec_verify")
 FLEET_EVENTS = ("route", "fleet_round")
+FAILOVER_EVENTS = ("fence", "failover")
 TRAIN_TELEMETRY = ("sel_q", "sel_churn", "sel_grad_concentration")
 
 
@@ -160,6 +161,10 @@ def main(argv=None) -> int:
                     help="also require the FleetServe router events "
                          "and >= 2 replica processes (merged traces "
                          "from launch.fleet --trace)")
+    ap.add_argument("--require-failover", action="store_true",
+                    help="also require the ElasticFleet fence/failover "
+                         "instants (chaos runs with a fault plan that "
+                         "kills or wedges a replica)")
     args = ap.parse_args(argv)
 
     required = list(REQUIRED[args.kind])
@@ -171,6 +176,8 @@ def main(argv=None) -> int:
         required += list(SPEC_SPANS)
     if args.require_fleet:
         required += list(FLEET_EVENTS)
+    if args.require_failover:
+        required += list(FAILOVER_EVENTS)
 
     for p in map(Path, args.paths):
         if not p.exists():
